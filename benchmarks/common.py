@@ -1,0 +1,45 @@
+"""Shared benchmark helpers. Every table prints ``name,us_per_call,derived``
+CSV rows via ``emit`` so ``benchmarks.run`` output is machine-readable."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core.denoise import DenoiseConfig
+
+__all__ = ["emit", "timeit", "bench_config", "PAPER_G", "PAPER_N"]
+
+PAPER_G, PAPER_N = 8, 1000  # paper §6 defaults
+PAPER_H, PAPER_W = 80, 256  # one camera bank
+
+
+def bench_config(quick: bool, **kw) -> DenoiseConfig:
+    base = dict(
+        num_groups=PAPER_G,
+        frames_per_group=200 if quick else PAPER_N,
+        height=PAPER_H,
+        width=PAPER_W,
+        algorithm="alg3",
+        backend="xla",
+    )
+    base.update(kw)
+    return DenoiseConfig(**base)
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def timeit(fn, *args, warmup: int = 1, iters: int = 3, **kw) -> float:
+    """Median wall time (seconds) with block_until_ready."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args, **kw))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args, **kw))
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times))

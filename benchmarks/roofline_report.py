@@ -1,0 +1,40 @@
+"""Roofline report: per (arch × shape × mesh) terms from the dry-run
+artifacts (§Roofline), plus the denoise kernel's own TPU roofline."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+from repro.core import latency_model as lm
+
+
+def run(quick: bool = True) -> None:
+    for alg in ("alg1", "alg3"):
+        r = lm.tpu_denoise_roofline_s(alg)
+        emit(
+            f"roofline/denoise_{alg}",
+            r["memory_s"] * 1e6,
+            f"bound={r['bound']};bytes={r['bytes']:.3e};flops={r['flops']:.3e}",
+        )
+    art = sorted(glob.glob("artifacts/dryrun/*.json"))
+    if not art:
+        emit("roofline/dryrun", -1, "no artifacts yet — run repro.launch.dryrun")
+        return
+    for path in art:
+        with open(path) as f:
+            rec = json.load(f)
+        tag = f"{rec['arch']}/{rec['shape']}/{rec['mesh']}"
+        if rec.get("status") != "ok":
+            emit(f"roofline/{tag}", -1, rec.get("status", "?"))
+            continue
+        t = rec["roofline"]
+        step = max(t["compute_s"], t["memory_s"], t["collective_s"])
+        emit(
+            f"roofline/{tag}",
+            step * 1e6,
+            f"dom={t['dominant']};C={t['compute_s']:.3e};M={t['memory_s']:.3e};"
+            f"X={t['collective_s']:.3e};useful={rec['useful_flops_ratio']:.3f}",
+        )

@@ -1,0 +1,61 @@
+"""Benchmark harness: one module per paper table. Prints
+``name,us_per_call,derived`` CSV. ``--full`` uses paper-scale N=1000."""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+from benchmarks import (
+    fig8_denoise_snr,
+    roofline_report,
+    table1_kernel_latency,
+    table2_loop_breakdown,
+    table3_throughput,
+    table4_led_trigger,
+    table5_multibank,
+    table6_group_sweep,
+    table7_cpu_baseline,
+    table8_buffered_vs_inline,
+)
+
+MODULES = [
+    ("table1", table1_kernel_latency),
+    ("table2", table2_loop_breakdown),
+    ("table3", table3_throughput),
+    ("table4", table4_led_trigger),
+    ("table5", table5_multibank),
+    ("table6", table6_group_sweep),
+    ("table7", table7_cpu_baseline),
+    ("table8-10", table8_buffered_vs_inline),
+    ("fig8", fig8_denoise_snr),
+    ("roofline", roofline_report),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true", help="paper-scale N=1000")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, mod in MODULES:
+        if args.only and args.only not in name:
+            continue
+        t0 = time.time()
+        try:
+            mod.run(quick=not args.full)
+        except Exception:
+            failures += 1
+            traceback.print_exc()
+            print(f"{name},-1,EXCEPTION")
+        print(f"# {name} done in {time.time() - t0:.1f}s", file=sys.stderr)
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""Paper Table 1: kernel latency per algorithm.
+
+Two views: (a) measured wall time of the dataflow-faithful XLA kernels on
+this host, (b) the paper's exact analytic per-frame latencies (µs) from
+``core.latency_model`` — the HLS-report reproduction.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import bench_config, emit, timeit
+from repro.core import latency_model as lm
+from repro.kernels import ops
+
+
+def run(quick: bool = True) -> None:
+    cfg = bench_config(quick)
+    rng = np.random.default_rng(0)
+    frames = rng.integers(
+        0, 4096, (cfg.num_groups, cfg.frames_per_group, cfg.height, cfg.width)
+    ).astype(np.float32)
+    total_frames = cfg.num_groups * cfg.frames_per_group
+    import jax.numpy as jnp
+
+    x = jnp.asarray(frames)
+    for alg in ("alg1", "alg2", "alg3", "alg3_v2"):
+        t = timeit(
+            lambda a=alg: ops.subtract_average(
+                x, offset=cfg.offset, algorithm=a, backend="xla"
+            )
+        )
+        emit(
+            f"table1/{alg}/host_wall",
+            t * 1e6 / total_frames,
+            f"per-frame;total_s={t:.4f}",
+        )
+    # paper analytic model (exact reproduction of §6 numbers)
+    for alg in ("alg1", "alg2", "alg3"):
+        lat = lm.frame_latencies_us(alg)
+        worst = max(lat.values())
+        emit(
+            f"table1/{alg}/paper_model_worst_frame",
+            worst,
+            f"phases={';'.join(f'{k}={v:.3f}' for k, v in lat.items())}",
+        )
+    emit(
+        "table1/realtime_threshold",
+        lm.PaperConstants().inter_frame_us,
+        "camera inter-frame interval",
+    )

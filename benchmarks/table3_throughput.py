@@ -1,0 +1,71 @@
+"""Paper Table 3: throughput under software trigger (max camera rate).
+
+Streams the synthetic PRISM acquisition group-by-group through each
+algorithm's streaming dataflow: Alg 3 folds into the running sum; Alg 1/2
+stage difference frames into a tmpFrame buffer and reduce at the end.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import bench_config, emit
+from repro.core.streaming import StreamReport
+from repro.data.prism import PrismSource
+from repro.kernels import ops
+
+
+def _stream_alg3(cfg, groups):
+    t0 = time.perf_counter()
+    state = ops.stream_init(cfg.frames_per_group, cfg.height, cfg.width)
+    for gf in groups:
+        state = ops.stream_step(
+            state, jnp.asarray(gf.astype(np.float32)),
+            num_groups=cfg.num_groups, offset=cfg.offset, backend="xla",
+        )
+    out = ops.stream_finalize(state, cfg.num_groups)
+    jax.block_until_ready(out)
+    return time.perf_counter() - t0
+
+
+def _stream_materialized(cfg, groups):
+    """Alg 1/2 dataflow: store per-group diffs, reduce after the last."""
+    t0 = time.perf_counter()
+    p = cfg.pairs_per_group
+
+    @jax.jit
+    def diff(gf):
+        pr = gf.reshape(p, 2, cfg.height, cfg.width)
+        return pr[:, 1] - pr[:, 0] + cfg.offset
+
+    tmp = jnp.zeros((cfg.num_groups, p, cfg.height, cfg.width), jnp.float32)
+    for gi, gf in enumerate(groups):
+        tmp = tmp.at[gi].set(diff(jnp.asarray(gf.astype(np.float32))))
+    out = tmp.sum(0) / cfg.num_groups
+    jax.block_until_ready(out)
+    return time.perf_counter() - t0
+
+
+def run(quick: bool = True) -> None:
+    cfg = bench_config(quick)
+    src = PrismSource(cfg)
+    groups = list(src.groups())
+    frames = cfg.num_groups * cfg.frames_per_group
+    mb = frames * cfg.frame_pixels * 2 / 1e6
+    for name, fn in (
+        ("no_burst(alg1-dataflow)", _stream_materialized),
+        ("burst_rw(alg3-dataflow)", _stream_alg3),
+    ):
+        t = min(fn(cfg, groups) for _ in range(2))
+        emit(
+            f"table3/{name}",
+            t * 1e6 / frames,
+            f"fps={frames / t:.0f};MBps={mb / t:.1f}",
+        )
+    # paper hardware reference points
+    emit("table3/paper_fpga_alg1", 2.244e6 / 8000, "paper: 2.244s/8000 frames")
+    emit("table3/paper_fpga_alg3", 0.457e6 / 8000, "paper: 0.457s=17544fps,719MBps")

@@ -1,0 +1,26 @@
+"""Paper Table 6: per-frame latency stays flat as group count grows."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import bench_config, emit
+from repro.core.streaming import run_inline
+from repro.data.prism import PrismSource
+
+
+def run(quick: bool = True) -> None:
+    per_frame = {}
+    for g in (5, 8, 10):
+        cfg = bench_config(quick, num_groups=g)
+        groups = list(PrismSource(cfg).groups())  # pre-generate frames
+        run_inline(cfg, iter(groups))             # warm the jit cache
+        out, rep = run_inline(cfg, iter(groups))
+        per_frame[g] = rep.elapsed_s * 1e6 / rep.frames
+        emit(
+            f"table6/groups_{g}",
+            per_frame[g],
+            f"frames={rep.frames};elapsed_s={rep.elapsed_s:.3f}",
+        )
+    spread = max(per_frame.values()) / max(min(per_frame.values()), 1e-9)
+    emit("table6/latency_spread", spread, "max/min per-frame (paper: ~1.005)")

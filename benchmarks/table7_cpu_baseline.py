@@ -1,0 +1,43 @@
+"""Paper Table 7: CPU buffered-processing baseline.
+
+Paper compares 1..64 host threads on buffered data; this container has one
+core, so we report single-thread numpy (the paper's `1 (sequential)` row)
+vs the XLA-compiled path, and quote the paper's endpoints.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import bench_config, emit
+from repro.kernels import ops
+from repro.kernels.ref import ref_numpy
+
+
+def run(quick: bool = True) -> None:
+    cfg = bench_config(quick)
+    rng = np.random.default_rng(0)
+    frames = rng.integers(
+        0, 4096, (cfg.num_groups, cfg.frames_per_group, cfg.height, cfg.width)
+    ).astype(np.uint16)
+    n_frames = cfg.num_groups * cfg.frames_per_group
+
+    t0 = time.perf_counter()
+    ref_numpy(frames, offset=cfg.offset)
+    t_np = time.perf_counter() - t0
+    emit("table7/numpy_1thread", t_np * 1e6 / n_frames, f"total_s={t_np:.3f}")
+
+    x = jnp.asarray(frames.astype(np.float32))
+    f = lambda: ops.subtract_average(x, offset=cfg.offset, algorithm="alg3",
+                                     backend="xla")
+    jax.block_until_ready(f())
+    t0 = time.perf_counter()
+    jax.block_until_ready(f())
+    t_xla = time.perf_counter() - t0
+    emit("table7/xla_cpu", t_xla * 1e6 / n_frames, f"total_s={t_xla:.3f}")
+    emit("table7/paper_cpu_1thread", 34.103e6 / 8000, "paper: 34.1s (1 bank)")
+    emit("table7/paper_cpu_64thread", 1.049e6 / 8000, "paper: 1.049s (1 bank)")

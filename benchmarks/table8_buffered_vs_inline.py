@@ -1,0 +1,45 @@
+"""Paper Tables 8-10: buffer-then-process vs inline preprocessing.
+
+The paper's headline systems claim: the buffering phase of CPU/GPU
+workflows alone costs about as much as the entire inline pipeline. We
+measure both workflows over the same synthetic acquisition and report the
+buffering fraction.
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import bench_config, emit
+from repro.core.streaming import run_buffered, run_inline
+from repro.data.prism import PrismSource
+
+
+def run(quick: bool = True) -> None:
+    cfg = bench_config(quick, frames_per_group=100 if quick else 200)
+    interval = 100.0  # µs/frame acquisition rate for both workflows
+
+    groups = list(PrismSource(cfg).groups())
+    run_inline(cfg, iter(groups))      # warm the jit caches
+    run_buffered(cfg, iter(groups))
+    src = PrismSource(cfg)
+    _, inline = run_inline(cfg, iter(src.groups()), interval_us=interval)
+    emit(
+        "table10/inline_total",
+        inline.elapsed_s * 1e6 / inline.frames,
+        f"buffering_s=0.0;total_s={inline.elapsed_s:.3f}",
+    )
+
+    src = PrismSource(cfg)
+    _, buf = run_buffered(cfg, iter(src.groups()), interval_us=interval)
+    emit(
+        "table10/buffered_total",
+        buf.elapsed_s * 1e6 / buf.frames,
+        f"buffering_s={buf.buffering_s:.3f};compute_s={buf.compute_s:.3f}",
+    )
+    frac = buf.buffering_s / max(buf.elapsed_s, 1e-9)
+    emit(
+        "table10/buffering_fraction",
+        frac * 100,
+        "percent of buffered workflow spent staging (paper: ~100% of FPGA total)",
+    )
+    emit("table10/paper_v100_total", 0.478e6 / 8000, "paper 2-bank V100 incl. I/O")
+    emit("table10/paper_fpga_total", 0.4565e6 / 8000, "paper 2-bank FPGA inline")

@@ -1,0 +1,67 @@
+"""End-to-end PRISM pipeline: acquisition -> inline denoise -> frontend.
+
+Demonstrates the paper's full systems argument on the framework:
+  1. a rate-limited camera source (LED-trigger emulation),
+  2. INLINE streaming denoise (paper Alg 3: one running sum, no staging),
+  3. the same acquisition with a buffer-then-process workflow,
+  4. the denoised frames feeding a modality frontend stub (patch
+     embeddings for the VLM backbone) — the framework-integration path.
+
+  PYTHONPATH=src python examples/prism_streaming.py
+"""
+
+import numpy as np
+
+from repro.core import DenoiseConfig
+from repro.core.streaming import run_buffered, run_inline
+from repro.data import PrismSource, snr_db
+
+cfg = DenoiseConfig(num_groups=8, frames_per_group=100, height=80, width=256)
+interval_us = 150.0
+
+# warm the jit caches so we measure steady-state, not compilation
+groups = list(PrismSource(cfg, seed=3).groups())
+run_inline(cfg, iter(groups))
+run_buffered(cfg, iter(groups))
+
+out_inline, rep_inline = run_inline(
+    cfg, iter(PrismSource(cfg, seed=3).groups()), interval_us=interval_us
+)
+out_buffered, rep_buffered = run_buffered(
+    cfg, iter(PrismSource(cfg, seed=3).groups()), interval_us=interval_us
+)
+
+print("workflow      total_s  buffering_s  compute_s   fps")
+for name, r in (("inline", rep_inline), ("buffered", rep_buffered)):
+    print(f"{name:<12}{r.elapsed_s:9.3f}{r.buffering_s:13.3f}"
+          f"{r.compute_s:11.3f}{r.fps:9.0f}")
+np.testing.assert_allclose(
+    np.asarray(out_inline), np.asarray(out_buffered), rtol=1e-5
+)
+print("inline == buffered output: verified")
+
+src = PrismSource(cfg, seed=3)
+print(f"SNR vs ground truth: {snr_db(np.asarray(out_inline), src.true_signal()):.2f} dB")
+
+# ---- feed the denoised frames into a VLM frontend stub -------------------
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models import build_model
+
+vcfg = get_config("llama-3.2-vision-11b", smoke=True)
+model = build_model(vcfg)
+params = model.init(jax.random.PRNGKey(0))
+
+# patchify denoised frames -> (B, T_img, D) embeddings (frontend stub)
+frames = np.asarray(out_inline)[:2]                      # 2 denoised frames
+patches = frames.reshape(2, -1)[:, : vcfg.num_image_tokens * vcfg.d_model]
+img = jnp.asarray(
+    patches.reshape(2, vcfg.num_image_tokens, vcfg.d_model), jnp.float32
+)
+img = (img - img.mean()) / (img.std() + 1e-6)
+tokens = jnp.ones((2, 8), jnp.int32)
+logits = model.forward(params, {"tokens": tokens, "image_embeds": img})
+print(f"VLM backbone consumed denoised frames: logits {logits.shape}, "
+      f"finite={bool(jnp.isfinite(logits).all())}")

@@ -1,0 +1,26 @@
+"""Quickstart: denoise a synthetic PRISM acquisition in 20 lines.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import numpy as np
+
+from repro.core import DenoiseConfig, StreamingDenoiser
+from repro.data import PrismSource, snr_db
+
+# One camera bank, paper geometry: 8 groups x 200 alternating frames.
+cfg = DenoiseConfig(num_groups=8, frames_per_group=200, height=80, width=256)
+source = PrismSource(cfg, seed=0)
+
+den = StreamingDenoiser(cfg)
+state = den.init()
+for group in source.groups():          # groups stream in, camera-style
+    state = den.ingest(state, group.astype(np.float32))
+result = den.finalize(state)           # (N/2, H, W) averaged differences
+
+truth = source.true_signal()
+print(f"denoised {cfg.num_groups * cfg.frames_per_group} frames "
+      f"-> {result.shape[0]} outputs")
+print(f"output SNR: {snr_db(np.asarray(result), truth):.2f} dB")
+print(f"peak signal (offset removed): "
+      f"{float(np.asarray(den.remove_offset(result)).max()):.1f} ADU")

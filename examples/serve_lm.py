@@ -1,0 +1,26 @@
+"""Serve a small model with batched requests: prefill + decode loop.
+
+  PYTHONPATH=src python examples/serve_lm.py [--arch mamba2-780m]
+"""
+
+import argparse
+
+from repro.launch import serve as S
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="h2o-danube-1.8b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--gen", type=int, default=12)
+    args = ap.parse_args()
+    S.main([
+        "--arch", args.arch, "--smoke",
+        "--batch", str(args.batch),
+        "--prompt-len", "16",
+        "--gen", str(args.gen),
+    ])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,87 @@
+"""Generate the §Dry-run and §Roofline sections of EXPERIMENTS.md from the
+dry-run artifacts. Run after a sweep:
+
+  PYTHONPATH=src python scripts/make_experiments.py > artifacts/roofline.md
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import sys
+
+
+def load(pattern="artifacts/dryrun/*.json"):
+    recs = []
+    for p in sorted(glob.glob(pattern)):
+        with open(p) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def fmt(x, nd=3):
+    return f"{x:.{nd}f}" if isinstance(x, (int, float)) else str(x)
+
+
+def roofline_table(recs, mesh="16x16"):
+    out = []
+    out.append(
+        "| arch | shape | dominant | compute (s) | memory (s) | collective (s) "
+        "| MODEL_FLOPS/HLO | HBM GiB/chip | fits |"
+    )
+    out.append("|---|---|---|---|---|---|---|---|---|")
+    for r in recs:
+        if r["mesh"] != mesh:
+            continue
+        if r.get("status") != "ok":
+            out.append(
+                f"| {r['arch']} | {r['shape']} | `{r['status']}` | — | — | — | — | — | — |"
+            )
+            continue
+        t = r["roofline"]
+        out.append(
+            f"| {r['arch']} | {r['shape']} | **{t['dominant']}** "
+            f"| {t['compute_s']:.3f} | {t['memory_s']:.3f} "
+            f"| {t['collective_s']:.3f} | {r['useful_flops_ratio']:.3f} "
+            f"| {r['hbm_needed_gib']} | {'Y' if r['fits_hbm'] else 'N'} |"
+        )
+    return "\n".join(out)
+
+
+def dryrun_table(recs):
+    out = []
+    out.append(
+        "| arch | shape | mesh | status | compile (s) | HBM GiB/chip "
+        "| collective ops | all-reduce GB | all-gather GB |"
+    )
+    out.append("|---|---|---|---|---|---|---|---|---|")
+    for r in recs:
+        if r.get("status") != "ok":
+            out.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['status']} "
+                f"| — | — | — | — | — |"
+            )
+            continue
+        ck = r["collective_kinds"]
+        n_ops = sum(1 for k, v in ck.items() if v)
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | ok "
+            f"| {r['compile_s']} | {r['hbm_needed_gib']} | {n_ops} kinds "
+            f"| {ck.get('all-reduce', 0) / 1e9:.1f} "
+            f"| {ck.get('all-gather', 0) / 1e9:.1f} |"
+        )
+    return "\n".join(out)
+
+
+def main():
+    recs = load()
+    print("## §Dry-run (all cells, both meshes)\n")
+    print(dryrun_table(recs))
+    print("\n## §Roofline (single-pod 16x16 baseline)\n")
+    print(roofline_table(recs, "16x16"))
+    print("\n## §Roofline (multi-pod 2x16x16)\n")
+    print(roofline_table(recs, "2x16x16"))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,223 @@
+"""Fault-tolerant checkpointing: atomic, async, mesh-agnostic.
+
+Design (1000+-node posture):
+  * ATOMIC: write to ``<dir>/tmp.<step>``, fsync, then rename to
+    ``step_<n>`` — a crash mid-write never corrupts the latest checkpoint.
+  * ASYNC: ``save`` snapshots device arrays to host (cheap, blocking) and
+    writes in a background thread so the train loop keeps stepping — the
+    same overlap-compute-with-IO idea as the paper's inline preprocessing.
+  * MESH-AGNOSTIC: leaves are stored as full (unsharded) numpy arrays +
+    a treedef manifest, so restore can re-shard onto ANY mesh — this is
+    what makes elastic shrink/grow (runtime/elastic.py) possible.
+
+Format: one ``.npz`` with flattened leaves + ``manifest.json`` holding the
+treedef and step. No framework lock-in, greppable, rsync-able.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+
+import jax
+import numpy as np
+
+__all__ = ["save_tree", "restore_tree", "CheckpointManager"]
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return leaves, str(treedef)
+
+
+def _paths(tree) -> tuple[list[list], list]:
+    """Flatten with JSON-able key paths. Supports dict / list / tuple
+    containers (tuples round-trip as tuples via a key tag)."""
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    paths, leaves = [], []
+    for kp, leaf in flat:
+        path = []
+        for k in kp:
+            if isinstance(k, jax.tree_util.DictKey):
+                path.append(["d", str(k.key)])
+            elif isinstance(k, jax.tree_util.SequenceKey):
+                path.append(["s", k.idx])
+            else:
+                path.append(["d", str(k)])
+        paths.append(path)
+        leaves.append(leaf)
+    return paths, leaves
+
+
+def _container_kinds(tree):
+    """Record list-vs-tuple kinds along every path so restore is exact."""
+    kinds = {}
+
+    def walk(node, prefix):
+        if isinstance(node, dict):
+            kinds[prefix] = "dict"
+            for k, v in node.items():
+                walk(v, prefix + f"/d:{k}")
+        elif isinstance(node, tuple):
+            kinds[prefix] = "tuple"
+            for i, v in enumerate(node):
+                walk(v, prefix + f"/s:{i}")
+        elif isinstance(node, list):
+            kinds[prefix] = "list"
+            for i, v in enumerate(node):
+                walk(v, prefix + f"/s:{i}")
+
+    walk(tree, "")
+    return kinds
+
+
+def _rebuild(paths, leaves, kinds):
+    root: dict = {}
+
+    def insert(container, path, value):
+        key = path[0]
+        k = key[1]
+        if len(path) == 1:
+            container[k] = value
+        else:
+            container.setdefault(k, {})
+            insert(container[k], path[1:], value)
+
+    for p, leaf in zip(paths, leaves):
+        insert(root, p, leaf)
+
+    def finalize(node, prefix):
+        if not isinstance(node, dict):
+            return node
+        kind = kinds.get(prefix, "dict")
+        if kind in ("list", "tuple"):
+            items = [
+                finalize(node[i], prefix + f"/s:{i}")
+                for i in sorted(node, key=int)
+            ]
+            return tuple(items) if kind == "tuple" else items
+        return {k: finalize(v, prefix + f"/d:{k}") for k, v in node.items()}
+
+    return finalize(root, "")
+
+
+def save_tree(path: str, tree, *, step: int | None = None) -> None:
+    """Atomic synchronous save of a pytree to ``path`` (a directory)."""
+    paths, leaves = _paths(tree)
+    host = [np.asarray(x) for x in leaves]
+    parent = os.path.dirname(os.path.abspath(path)) or "."
+    os.makedirs(parent, exist_ok=True)
+    tmp = os.path.join(parent, f".tmp.{os.path.basename(path)}.{os.getpid()}")
+    os.makedirs(tmp, exist_ok=True)
+    np.savez(os.path.join(tmp, "leaves.npz"), **{
+        f"leaf_{i}": a for i, a in enumerate(host)
+    })
+    manifest = {
+        "paths": paths,
+        "kinds": _container_kinds(tree),
+        "num_leaves": len(host),
+        "step": step,
+        "time": time.time(),
+    }
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+        f.flush()
+        os.fsync(f.fileno())
+    if os.path.exists(path):
+        shutil.rmtree(path)
+    os.rename(tmp, path)
+
+
+def restore_tree(path: str, *, shardings=None):
+    """Restore a pytree; optionally re-shard leaves onto a (new) mesh.
+
+    ``shardings``: pytree of NamedSharding matching the saved structure —
+    pass shardings derived from a DIFFERENT mesh to elastically re-shard.
+    Returns (tree, step).
+    """
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(path, "leaves.npz"))
+    leaves = [data[f"leaf_{i}"] for i in range(manifest["num_leaves"])]
+    tree = _rebuild(manifest["paths"], leaves, manifest["kinds"])
+    if shardings is not None:
+        tree = jax.tree_util.tree_map(
+            lambda x, s: jax.device_put(x, s), tree, shardings
+        )
+    return tree, manifest.get("step")
+
+
+class CheckpointManager:
+    """Keep-N rotating checkpoints with an async writer thread."""
+
+    def __init__(self, directory: str, *, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._thread: threading.Thread | None = None
+        self._error: BaseException | None = None
+
+    # ---- paths ----
+    def _step_dir(self, step: int) -> str:
+        return os.path.join(self.directory, f"step_{step:010d}")
+
+    def steps(self) -> list[int]:
+        out = []
+        for name in os.listdir(self.directory):
+            if name.startswith("step_"):
+                try:
+                    out.append(int(name.split("_")[1]))
+                except ValueError:
+                    pass
+        return sorted(out)
+
+    # ---- save ----
+    def save(self, step: int, tree, *, blocking: bool = False) -> None:
+        self.wait()  # one in-flight write at a time
+        # snapshot to host NOW (so the caller may donate/overwrite buffers)
+        host = jax.tree_util.tree_map(lambda x: np.asarray(x), tree)
+
+        def write():
+            try:
+                save_tree(self._step_dir(step), host, step=step)
+                self._gc()
+            except BaseException as e:  # surfaced on next wait()
+                self._error = e
+
+        if blocking:
+            write()
+            self._raise_if_failed()
+        else:
+            self._thread = threading.Thread(target=write, daemon=True)
+            self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        self._raise_if_failed()
+
+    def _raise_if_failed(self):
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise RuntimeError(f"async checkpoint write failed: {err}") from err
+
+    def _gc(self):
+        steps = self.steps()
+        for s in steps[: -self.keep] if self.keep else []:
+            shutil.rmtree(self._step_dir(s), ignore_errors=True)
+
+    # ---- restore ----
+    def latest_step(self) -> int | None:
+        steps = self.steps()
+        return steps[-1] if steps else None
+
+    def restore(self, step: int | None = None, *, shardings=None):
+        self.wait()
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            return None, None
+        return restore_tree(self._step_dir(step), shardings=shardings)

@@ -1,0 +1,2 @@
+from repro.configs.base import SHAPES, ArchConfig, ShapeConfig  # noqa: F401
+from repro.configs.registry import ARCH_IDS, get_config, long_context_ok  # noqa: F401

@@ -1,0 +1,55 @@
+"""whisper-large-v3 [audio] — encoder-decoder transformer backbone; the
+conv/mel frontend is a STUB per the assignment (input_specs provides
+precomputed frame embeddings). [arXiv:2212.04356; unverified]
+
+32L d_model=1280 20H (kv=20, full MHA) d_ff=5120 vocab=51866.
+LayerNorm, non-gated GELU MLPs, learned positions, 1500 encoder frames.
+
+decode_32k lowered mechanically (the published decoder context is 448;
+noted as a deviation in DESIGN.md). long_500k skipped: enc-dec with full
+attention.
+"""
+
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="whisper-large-v3",
+    family="audio",
+    num_layers=32,
+    d_model=1280,
+    num_heads=20,
+    num_kv_heads=20,
+    head_dim=64,
+    d_ff=5120,
+    vocab_size=51866,
+    encoder_layers=32,
+    encoder_positions=1500,
+    decoder_positions=32768,  # deviation: published is 448 (see module doc)
+    norm_type="layernorm",
+    act="gelu",
+    gated_mlp=False,
+    microbatches=8,
+    # §Perf HC3: 20 heads don't divide 16-way TP -> sequence-parallel
+    rules_override={"act_attn_q_seq": "model"},
+)
+
+SMOKE = ArchConfig(
+    name="whisper-smoke",
+    family="audio",
+    num_layers=2,
+    d_model=64,
+    num_heads=4,
+    num_kv_heads=4,
+    head_dim=16,
+    d_ff=128,
+    vocab_size=256,
+    encoder_layers=2,
+    encoder_positions=16,
+    norm_type="layernorm",
+    act="gelu",
+    gated_mlp=False,
+    dtype="float32",
+    remat=False,
+)
+
+LONG_CONTEXT_OK = False

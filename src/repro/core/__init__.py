@@ -1,0 +1,16 @@
+"""The paper's primary contribution: DRAM/HBM-optimized streaming denoise.
+
+Public surface:
+  DenoiseConfig / StreamingDenoiser — the subtract-and-average stage
+  run_inline / run_buffered          — inline vs buffer-then-process drivers
+  latency_model                      — paper §6 analytic model (exact)
+  banks                              — multi-bank (multi-device) scaling
+"""
+
+from repro.core.denoise import (  # noqa: F401
+    DEFAULT_OFFSET,
+    MONO12_MAX,
+    DenoiseConfig,
+    StreamingDenoiser,
+)
+from repro.core.streaming import StreamReport, run_buffered, run_inline  # noqa: F401

@@ -1,0 +1,112 @@
+"""Multi-bank scaling (paper Table 5): shard the pixel stream across devices.
+
+The paper partitions the camera stream into banks of 256×80 pixels and runs
+one FPGA per bank, observing flat latency from 1 -> 2 banks. The TPU
+analogue shards the bank axis across devices of a 1-D ``bank`` mesh with
+``shard_map``: each device owns its bank's running sum; no cross-device
+communication is needed until (optionally) a final gather — the same
+communication-free scaling the paper exploits.
+
+On this CPU container the mesh has a single device unless the caller brings
+a multi-device mesh (tests spawn subprocesses with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.denoise import DenoiseConfig
+from repro.kernels.ref import ref_stream_finalize, ref_stream_step
+
+__all__ = ["make_bank_mesh", "banked_subtract_average", "banked_stream_step"]
+
+
+def make_bank_mesh(num_banks: int | None = None) -> Mesh:
+    devs = jax.devices()
+    n = num_banks or len(devs)
+    if len(devs) < n:
+        raise ValueError(f"need {n} devices for {n} banks, have {len(devs)}")
+    return jax.make_mesh((n,), ("bank",), devices=devs[:n])
+
+
+def banked_subtract_average(
+    frames: jnp.ndarray,
+    mesh: Mesh,
+    *,
+    config: DenoiseConfig,
+) -> jnp.ndarray:
+    """frames (B, G, N, H, W), bank axis sharded -> (B, N/2, H, W) sharded.
+
+    Pure data parallelism over banks — zero collectives, matching the
+    paper's observation that 2-bank latency == 1-bank latency.
+    """
+    spec = P("bank", None, None, None, None)
+
+    @functools.partial(
+        jax.shard_map, mesh=mesh, in_specs=spec, out_specs=P("bank", None, None, None)
+    )
+    def _per_bank(local):  # local: (B/banks, G, N, H, W)
+        def one(f):
+            g = f.shape[0]
+
+            def body(s, grp):
+                return (
+                    ref_stream_step(
+                        s,
+                        grp,
+                        offset=config.offset,
+                        variant=config.variant,
+                        num_groups=g,
+                    ),
+                    None,
+                )
+
+            init = jax.lax.pcast(
+                jnp.zeros((f.shape[1] // 2, f.shape[2], f.shape[3]), jnp.float32),
+                ("bank",),
+                to="varying",
+            )
+            total, _ = jax.lax.scan(body, init, f)
+            return ref_stream_finalize(total, g, variant=config.variant)
+
+        return jax.vmap(one)(local)
+
+    sharded = jax.device_put(frames, NamedSharding(mesh, spec))
+    return _per_bank(sharded)
+
+
+def banked_stream_step(
+    sum_frames: jnp.ndarray,
+    group_frames: jnp.ndarray,
+    mesh: Mesh,
+    *,
+    config: DenoiseConfig,
+) -> jnp.ndarray:
+    """Streaming variant: one group per step, banks in parallel.
+
+    sum_frames (B, N/2, H, W), group_frames (B, N, H, W), both bank-sharded.
+    """
+
+    @functools.partial(
+        jax.shard_map,
+        mesh=mesh,
+        in_specs=(P("bank", None, None, None), P("bank", None, None, None)),
+        out_specs=P("bank", None, None, None),
+    )
+    def _step(s, f):
+        return jax.vmap(
+            lambda si, fi: ref_stream_step(
+                si,
+                fi,
+                offset=config.offset,
+                variant=config.variant,
+                num_groups=config.num_groups,
+            )
+        )(s, f)
+
+    return _step(sum_frames, group_frames)

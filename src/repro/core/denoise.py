@@ -1,0 +1,147 @@
+"""StreamingDenoiser — the paper's preprocessing stage as a composable module.
+
+Wraps the subtract-and-average kernels (``repro.kernels``) with:
+
+* PRISM acquisition semantics: G groups × N alternating frames, mono12
+  pixels in u16 containers, fixed pre-subtraction ``offset`` (removed by
+  ``remove_offset`` host-side), divide-last (Alg 3) or divide-first
+  (Alg 3 v2 — overflow-safe) accumulation;
+* a streaming interface (``init / ingest / finalize``) whose state is a
+  single running sumFrame, donated between steps — the Alg 3 dataflow;
+* a one-shot interface (``__call__``) for offline/batch use;
+* integer-container emulation (``accum_dtype=jnp.uint16``) that reproduces
+  the paper's overflow at G > 8 bit-exactly, for validation.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable
+
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from repro.kernels.ref import ref_subtract_average
+
+__all__ = ["DenoiseConfig", "StreamingDenoiser", "MONO12_MAX", "DEFAULT_OFFSET"]
+
+MONO12_MAX = 4095  # 12-bit pixels wrapped in u16 containers (paper §6)
+DEFAULT_OFFSET = MONO12_MAX + 1  # keeps (exc - ctl + offset) non-negative
+
+
+@dataclasses.dataclass(frozen=True)
+class DenoiseConfig:
+    """Static description of one PRISM acquisition."""
+
+    num_groups: int = 8          # G  (paper default)
+    frames_per_group: int = 1000  # N  (paper default; must be even)
+    height: int = 80             # paper bank: 256 x 80 pixels
+    width: int = 256             # lane/minor dimension on TPU
+    offset: float = float(DEFAULT_OFFSET)
+    algorithm: str = "alg3"      # alg1 | alg2 | alg3 | alg3_v2
+    accum_dtype: str = "float32"
+    backend: str = "auto"        # auto | pallas | xla
+
+    def __post_init__(self):
+        if self.frames_per_group % 2:
+            raise ValueError("frames_per_group (N) must be even")
+        if self.algorithm not in ops.ALGORITHMS:
+            raise ValueError(f"unknown algorithm {self.algorithm}")
+
+    @property
+    def pairs_per_group(self) -> int:
+        return self.frames_per_group // 2
+
+    @property
+    def frame_pixels(self) -> int:
+        return self.height * self.width
+
+    @property
+    def variant(self) -> str:
+        return "divide_first" if self.algorithm == "alg3_v2" else "divide_last"
+
+    @property
+    def input_bytes(self) -> int:
+        return (
+            2
+            * self.num_groups
+            * self.frames_per_group
+            * self.frame_pixels
+        )  # u16 containers
+
+    @property
+    def output_frames(self) -> int:
+        return self.pairs_per_group
+
+
+class StreamingDenoiser:
+    """The paper's preprocessing stage, streaming one group at a time."""
+
+    def __init__(self, config: DenoiseConfig):
+        self.config = config
+        self._accum = jnp.dtype(config.accum_dtype)
+
+    # -- streaming interface (Alg 3 dataflow) ------------------------------
+    def init(self) -> jnp.ndarray:
+        c = self.config
+        return ops.stream_init(c.frames_per_group, c.height, c.width, self._accum)
+
+    def ingest(self, sum_frame: jnp.ndarray, group_frames: jnp.ndarray) -> jnp.ndarray:
+        """Fold one group (N, H, W) into the running sum. Donates sum_frame."""
+        c = self.config
+        return ops.stream_step(
+            sum_frame,
+            group_frames,
+            num_groups=c.num_groups,
+            offset=c.offset,
+            variant=c.variant,
+            backend=c.backend,
+        )
+
+    def finalize(self, sum_frame: jnp.ndarray) -> jnp.ndarray:
+        return ops.stream_finalize(
+            sum_frame, self.config.num_groups, variant=self.config.variant
+        )
+
+    def run(self, groups: Iterable[jnp.ndarray]) -> jnp.ndarray:
+        """Drive the full stream: groups yields G arrays of (N, H, W)."""
+        state = self.init()
+        count = 0
+        for group in groups:
+            state = self.ingest(state, group)
+            count += 1
+        if count != self.config.num_groups:
+            raise ValueError(
+                f"expected {self.config.num_groups} groups, got {count}"
+            )
+        return self.finalize(state)
+
+    # -- one-shot interface -------------------------------------------------
+    def __call__(self, frames: jnp.ndarray) -> jnp.ndarray:
+        """frames (G, N, H, W) -> (N/2, H, W)."""
+        c = self.config
+        return ops.subtract_average(
+            frames,
+            offset=c.offset,
+            algorithm=c.algorithm,
+            backend=c.backend,
+            accum_dtype=self._accum,
+        )
+
+    # -- container-faithful reference (overflow reproduction) ---------------
+    def reference_u16(self, frames: jnp.ndarray, variant: str | None = None):
+        """Bit-faithful u16-container accumulation (paper §4.2 overflow note).
+
+        With 12-bit pixels and the standard offset, divide-last accumulation
+        overflows the u16 container once G > 8; divide-first (v2) never does.
+        """
+        return ref_subtract_average(
+            frames.astype(jnp.uint16),
+            offset=int(self.config.offset),
+            variant=variant or self.config.variant,
+            accum_dtype=jnp.uint16,
+        )
+
+    def remove_offset(self, out: jnp.ndarray) -> jnp.ndarray:
+        """Host-side offset removal (paper §4.2 implementation note 2)."""
+        return out - jnp.asarray(self.config.offset, out.dtype)

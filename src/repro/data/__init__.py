@@ -1,0 +1,1 @@
+from repro.data.prism import PrismSource, snr_db  # noqa: F401

@@ -1,0 +1,10 @@
+from repro.distributed.sharding import (  # noqa: F401
+    DEFAULT_RULES,
+    ParamSpec,
+    abstract_params,
+    init_params,
+    logical_sharding,
+    named_shardings,
+    partition_spec,
+    stack_spec,
+)

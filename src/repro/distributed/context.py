@@ -1,0 +1,53 @@
+"""Trace-time activation-sharding context.
+
+GSPMD propagation alone loses the batch sharding through embedding
+gathers, layer scans and the grad-accumulation loop (observed: fully
+replicated activations on a 256-chip mesh). Production frameworks pin
+activations with explicit ``with_sharding_constraint`` at block
+boundaries; this module provides that without threading mesh/rules
+through every model signature.
+
+``steps.jit_*`` wraps each step function so the context is active while
+jax traces it; model code calls ``constrain(x, logical_axes)`` which
+no-ops when no context is set (smoke tests, single-device runs).
+
+Activation logical axes use an ``act_*`` vocabulary separate from the
+parameter axes: parameter ``embed`` is FSDP-sharded over ``data`` while
+activation ``act_embed`` must stay replicated (batch owns ``data``).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+from jax.sharding import NamedSharding
+
+from repro.distributed.sharding import partition_spec
+
+__all__ = ["activation_sharding", "constrain"]
+
+_TLS = threading.local()
+
+
+@contextlib.contextmanager
+def activation_sharding(mesh, rules):
+    prev = getattr(_TLS, "ctx", None)
+    _TLS.ctx = (mesh, rules)
+    try:
+        yield
+    finally:
+        _TLS.ctx = prev
+
+
+def constrain(x, axes: tuple[str | None, ...]):
+    """Pin activation sharding by logical axes (no-op without context)."""
+    ctx = getattr(_TLS, "ctx", None)
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    if len(axes) != x.ndim:
+        raise ValueError(f"axes {axes} vs shape {x.shape}")
+    spec = partition_spec(x.shape, axes, mesh, rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

@@ -1,0 +1,230 @@
+"""Logical-axis sharding system (MaxText-style, self-contained).
+
+Every parameter is declared once as a ``ParamSpec`` (shape + logical axis
+names + initializer). Physical placement is derived per-mesh from a rules
+table mapping logical axes -> mesh axes, with a **divisibility fallback**:
+a mesh axis is dropped (the dim replicated) whenever the dimension does not
+divide evenly — XLA rejects uneven input shardings, and best-effort
+replication is what production frameworks do for e.g. 40 heads on 16-way TP.
+
+Rules vocabulary (defaults below, overridable per architecture config —
+this is also the §Perf hillclimbing lever):
+
+  batch       -> (pod, data)   pure DP across pods, DP within a pod
+  embed       -> data          FSDP/ZeRO-3: params+optimizer sharded over DP
+  mlp/heads/
+  vocab/...   -> model         tensor parallelism
+  experts     -> model         expert parallelism (MoE)
+  cache_seq   -> data          sequence/context parallelism for long decode
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import logging
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+logger = logging.getLogger(__name__)
+
+__all__ = [
+    "ParamSpec",
+    "DEFAULT_RULES",
+    "is_spec",
+    "abstract_params",
+    "init_params",
+    "partition_spec",
+    "named_shardings",
+    "logical_sharding",
+    "stack_spec",
+    "count_params",
+    "spec_bytes",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    """One parameter: shape, logical axes, initializer."""
+
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]
+    init: str = "normal"          # normal | zeros | ones | fan_in
+    scale: float = 0.02
+    dtype: Any = jnp.float32
+
+    def __post_init__(self):
+        if len(self.shape) != len(self.axes):
+            raise ValueError(f"shape {self.shape} vs axes {self.axes}")
+
+
+DEFAULT_RULES: dict[str, tuple[str, ...] | str | None] = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    "cache_seq": None,            # flipped to "data" for long-context cells
+    "embed": "data",              # FSDP
+    "mlp": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "qk_dim": None,
+    "v_dim": None,
+    "vocab": "model",
+    "experts": "model",
+    "expert_mlp": None,
+    "kv_lora": "model",
+    "state": None,
+    "conv": None,
+    "layers": None,
+    "norm": None,
+    "frames": None,
+    "img": None,
+    "stage": "stage",             # pipeline parallelism (optional axis)
+    # --- activation axes (separate vocabulary from parameter axes) ---
+    "act_batch": ("pod", "data"),
+    "act_seq": None,              # flip to "model" for sequence parallelism
+    "act_embed": None,
+    "act_heads": "model",
+    "act_kv_heads": "model",
+    "act_mlp": "model",
+    "act_vocab": "model",
+    "act_experts": "model",
+    "act_expert_mlp": None,
+    "act_kv_lora": "model",
+    "act_cache_seq": None,
+    "act_moe_group": ("pod", "data"),  # MoE token groups follow the batch
+    # sequence-parallel attention: when head counts don't divide the model
+    # axis (qwen 40H, whisper 20H, gemma3 4H on 16-way TP), shard the QUERY
+    # sequence chunks over `model` instead — set to "model" per arch/cell.
+    # (§Perf hillclimb lever; default off = baseline.)
+    "act_attn_q_seq": None,
+}
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def _tree_map(f: Callable, tree):
+    return jax.tree_util.tree_map(f, tree, is_leaf=is_spec)
+
+
+def abstract_params(spec_tree, dtype=None):
+    """ShapeDtypeStruct tree (for eval_shape / dry-run lowering)."""
+    return _tree_map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, dtype or s.dtype), spec_tree
+    )
+
+
+def init_params(key, spec_tree, dtype=None):
+    """Materialize real parameters (smoke tests / the example trainers)."""
+    leaves, treedef = jax.tree_util.tree_flatten(spec_tree, is_leaf=is_spec)
+    keys = jax.random.split(key, len(leaves))
+
+    def one(k, s: ParamSpec):
+        dt = dtype or s.dtype
+        if s.init == "zeros":
+            return jnp.zeros(s.shape, dt)
+        if s.init == "ones":
+            return jnp.ones(s.shape, dt)
+        if s.init == "const":
+            return jnp.full(s.shape, s.scale, dt)
+        if s.init == "fan_in":
+            fan = s.shape[0] if len(s.shape) else 1
+            return (jax.random.normal(k, s.shape) / jnp.sqrt(jnp.maximum(fan, 1))).astype(dt)
+        return (jax.random.normal(k, s.shape) * s.scale).astype(dt)
+
+    return jax.tree_util.tree_unflatten(
+        treedef, [one(k, s) for k, s in zip(keys, leaves)]
+    )
+
+
+def _resolve_axis(
+    logical: str | None,
+    dim: int,
+    mesh: Mesh,
+    rules: dict,
+    taken: set[str],
+) -> tuple[str, ...] | str | None:
+    """Map one logical axis to mesh axes, honoring divisibility + no-reuse."""
+    if logical is None:
+        return None
+    target = rules.get(logical, None)
+    if target is None:
+        return None
+    axes = (target,) if isinstance(target, str) else tuple(target)
+    chosen: list[str] = []
+    remaining = dim
+    for ax in axes:
+        if ax not in mesh.shape or ax in taken:
+            continue
+        size = mesh.shape[ax]
+        if remaining % size != 0:
+            logger.debug(
+                "sharding fallback: %s dim %d !%% mesh[%s]=%d -> replicate",
+                logical, dim, ax, size,
+            )
+            continue
+        chosen.append(ax)
+        taken.add(ax)
+        remaining //= size
+    if not chosen:
+        return None
+    return chosen[0] if len(chosen) == 1 else tuple(chosen)
+
+
+def partition_spec(
+    shape: tuple[int, ...],
+    axes: tuple[str | None, ...],
+    mesh: Mesh,
+    rules: dict | None = None,
+) -> PartitionSpec:
+    rules = rules or DEFAULT_RULES
+    taken: set[str] = set()
+    entries = [
+        _resolve_axis(a, d, mesh, rules, taken) for d, a in zip(shape, axes)
+    ]
+    return PartitionSpec(*entries)
+
+
+def named_shardings(spec_tree, mesh: Mesh, rules: dict | None = None):
+    """NamedSharding tree for a ParamSpec tree."""
+    return _tree_map(
+        lambda s: NamedSharding(mesh, partition_spec(s.shape, s.axes, mesh, rules)),
+        spec_tree,
+    )
+
+
+def logical_sharding(
+    shape: tuple[int, ...],
+    axes: tuple[str | None, ...],
+    mesh: Mesh,
+    rules: dict | None = None,
+) -> NamedSharding:
+    """Sharding for an activation / input array by logical axes."""
+    return NamedSharding(mesh, partition_spec(shape, axes, mesh, rules))
+
+
+def stack_spec(spec_tree, n: int, axis_name: str = "layers"):
+    """Prefix every spec with a stacked (scan) layer dimension."""
+    return _tree_map(
+        lambda s: ParamSpec(
+            (n,) + s.shape, (axis_name,) + s.axes, s.init, s.scale, s.dtype
+        ),
+        spec_tree,
+    )
+
+
+def count_params(spec_tree) -> int:
+    import math
+
+    total = 0
+    for s in jax.tree_util.tree_leaves(spec_tree, is_leaf=is_spec):
+        total += math.prod(s.shape)
+    return total
+
+
+def spec_bytes(spec_tree, bytes_per_param: int = 4) -> int:
+    return count_params(spec_tree) * bytes_per_param

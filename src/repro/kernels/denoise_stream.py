@@ -1,0 +1,188 @@
+"""Pallas TPU kernel for paper Algorithm 3 (+ v2): fused subtract-accumulate.
+
+This is the paper's contribution re-expressed for the TPU memory hierarchy:
+
+* FPGA BRAM running ``sumFrame``  -> the output block pinned in **VMEM**
+  across the (sequential, innermost) group axis of the grid.
+* AXI4 **burst-mode** DRAM access -> contiguous ``BlockSpec`` tiles; the
+  Mosaic pipeline engine double-buffers the HBM->VMEM DMA of tile *k+1*
+  against compute on tile *k* (the paper's `II=1` pipelined loops).
+* Pipelined accumulation (Alg 3's key idea: never materialize individual
+  difference frames) -> each input frame tile is read from HBM **exactly
+  once**; the only HBM writes are the final averaged frames.
+
+Traffic (elements):  reads = G*N*H*W inputs (each once), writes = (N/2)*H*W.
+Compare ``denoise_tmpframe`` (Algorithms 1/2) which also move the
+(G, N/2, H, W) intermediate array through HBM twice.
+
+Layout note: W is the lane (minor) dimension; blocks are (rows_tile, W)
+with W padded to the 128-lane boundary by Mosaic when needed. The grid is
+(pairs, row_tiles, groups) — groups innermost so the accumulator tile stays
+resident in VMEM for the whole reduction (the matmul-K-loop pattern).
+
+Validated in interpret mode on CPU against ``ref.ref_subtract_average``;
+on TPU the same ``pl.pallas_call`` lowers natively via Mosaic.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["alg3_subtract_average", "alg3_stream_step"]
+
+
+def _pick_row_tile(h: int, w: int, *, dtype_bytes: int = 4, vmem_budget: int = 2**21) -> int:
+    """Rows per tile so that ~3 tiles (2 input frames + accum) fit the budget."""
+    rows = max(1, vmem_budget // max(1, 3 * w * dtype_bytes))
+    if rows >= h:
+        return h
+    # keep the sublane dimension aligned where possible
+    for align in (256, 128, 64, 32, 16, 8):
+        if rows >= align:
+            rows = (rows // align) * align
+            break
+    while h % rows:
+        rows -= 1  # fall back to an exact divisor (interpret-mode friendliness)
+    return max(rows, 1)
+
+
+def _alg3_kernel(f_ref, o_ref, *, num_groups: int, offset: float, divide_first: bool):
+    g = pl.program_id(2)
+    acc = o_ref.dtype
+    diff = f_ref[1].astype(acc) - f_ref[0].astype(acc) + jnp.asarray(offset, acc)
+    if divide_first:
+        diff = diff / jnp.asarray(num_groups, acc)
+
+    @pl.when(g == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += diff
+
+    if not divide_first:
+
+        @pl.when(g == num_groups - 1)
+        def _finalize():
+            o_ref[...] = o_ref[...] / jnp.asarray(num_groups, acc)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("offset", "divide_first", "accum_dtype", "row_tile", "interpret"),
+)
+def alg3_subtract_average(
+    frames: jnp.ndarray,
+    *,
+    offset: float = 0.0,
+    divide_first: bool = False,
+    accum_dtype=jnp.float32,
+    row_tile: int | None = None,
+    interpret: bool = True,
+):
+    """frames (G, N, H, W) -> averaged difference frames (N/2, H, W).
+
+    One ``pallas_call``; each input element crosses HBM->VMEM exactly once.
+    ``divide_first=True`` is the paper's Alg 3 v2 (overflow-safe spread
+    division).
+    """
+    g, n, h, w = frames.shape
+    assert n % 2 == 0, "N must be even"
+    p = n // 2
+    pairs = frames.reshape(g, p, 2, h, w)
+    th = row_tile or _pick_row_tile(h, w)
+    n_hb = h // th
+    assert h % th == 0, (h, th)
+
+    kernel = functools.partial(
+        _alg3_kernel,
+        num_groups=g,
+        offset=float(offset),
+        divide_first=divide_first,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(p, n_hb, g),
+        in_specs=[
+            pl.BlockSpec(
+                (None, None, 2, th, w), lambda k, hb, gi: (gi, k, 0, hb, 0)
+            )
+        ],
+        out_specs=pl.BlockSpec((None, th, w), lambda k, hb, gi: (k, hb, 0)),
+        out_shape=jax.ShapeDtypeStruct((p, h, w), jnp.dtype(accum_dtype)),
+        interpret=interpret,
+    )(pairs)
+
+
+# ---------------------------------------------------------------------------
+# Streaming single-group step (the camera-facing entry point).
+# One group of N frames arrives; the running sum lives in HBM between calls
+# and is donated (input/output aliased), so per step the HBM traffic is:
+#   read N*H*W input + read (N/2)*H*W sum + write (N/2)*H*W sum
+# exactly the paper's per-frame burst R + burst W schedule (Fig. 4).
+# ---------------------------------------------------------------------------
+
+
+def _alg3_step_kernel(f_ref, s_ref, o_ref, *, num_groups, offset, divide_first, final):
+    acc = o_ref.dtype
+    diff = f_ref[1].astype(acc) - f_ref[0].astype(acc) + jnp.asarray(offset, acc)
+    if divide_first:
+        diff = diff / jnp.asarray(num_groups, acc)
+    total = s_ref[...] + diff
+    if final and not divide_first:
+        total = total / jnp.asarray(num_groups, acc)
+    o_ref[...] = total
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "num_groups",
+        "offset",
+        "divide_first",
+        "final",
+        "row_tile",
+        "interpret",
+    ),
+    donate_argnums=(1,),
+)
+def alg3_stream_step(
+    group_frames: jnp.ndarray,
+    sum_frame: jnp.ndarray,
+    *,
+    num_groups: int,
+    offset: float = 0.0,
+    divide_first: bool = False,
+    final: bool = False,
+    row_tile: int | None = None,
+    interpret: bool = True,
+):
+    """Fold one group (N, H, W) into the running sum (N/2, H, W) (donated)."""
+    n, h, w = group_frames.shape
+    p = n // 2
+    pairs = group_frames.reshape(p, 2, h, w)
+    th = row_tile or _pick_row_tile(h, w)
+    n_hb = h // th
+    assert h % th == 0, (h, th)
+    kernel = functools.partial(
+        _alg3_step_kernel,
+        num_groups=num_groups,
+        offset=float(offset),
+        divide_first=divide_first,
+        final=final,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(p, n_hb),
+        in_specs=[
+            pl.BlockSpec((None, 2, th, w), lambda k, hb: (k, 0, hb, 0)),
+            pl.BlockSpec((None, th, w), lambda k, hb: (k, hb, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, th, w), lambda k, hb: (k, hb, 0)),
+        out_shape=jax.ShapeDtypeStruct(sum_frame.shape, sum_frame.dtype),
+        input_output_aliases={1: 0},
+        interpret=interpret,
+    )(pairs, sum_frame)

@@ -1,0 +1,169 @@
+"""Public jit'd entry points for the denoise kernels.
+
+Dispatch layers:
+
+* ``backend='pallas'`` — the Pallas kernels (native Mosaic on TPU,
+  ``interpret=True`` on CPU so the identical kernel body is validated here).
+* ``backend='xla'``   — dataflow-faithful pure-XLA implementations. These
+  preserve each algorithm's *memory behaviour* (Alg 1/2 materialize the
+  (G, N/2, H, W) tmpFrame array — enforced with an optimization barrier so
+  XLA cannot fuse the two passes; Alg 3 is a running-sum scan with O(N/2·H·W)
+  state), which is what the paper's comparison measures.
+* ``backend='auto'``  — pallas on TPU, xla elsewhere.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import denoise_stream, denoise_tmpframe
+from repro.kernels.ref import ref_stream_finalize, ref_stream_init, ref_stream_step
+
+__all__ = ["subtract_average", "stream_init", "stream_step", "stream_finalize"]
+
+ALGORITHMS = ("alg1", "alg2", "alg3", "alg3_v2")
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _resolve(backend: str) -> str:
+    if backend == "auto":
+        return "pallas" if _on_tpu() else "xla"
+    return backend
+
+
+# ---------------------------------------------------------------------------
+# Dataflow-faithful XLA implementations.
+# ---------------------------------------------------------------------------
+
+
+def _xla_materialized(frames, *, offset, accum_dtype):
+    """Alg 1/2 dataflow: build tmpFrame fully, then reduce it (two passes)."""
+    g, n, h, w = frames.shape
+    pairs = frames.reshape(g, n // 2, 2, h, w)
+    acc = jnp.dtype(accum_dtype)
+    tmp = (
+        pairs[:, :, 1].astype(acc)
+        - pairs[:, :, 0].astype(acc)
+        + jnp.asarray(offset, acc)
+    )
+    # Force materialization: without this XLA fuses subtract+reduce into the
+    # Alg-3 dataflow and the baseline measures nothing.
+    tmp = jax.lax.optimization_barrier(tmp)
+    return tmp.sum(axis=0) / jnp.asarray(g, acc)
+
+
+def _xla_streaming(frames, *, offset, accum_dtype, divide_first):
+    """Alg 3 dataflow: scan groups, running sum, single pass over inputs."""
+    g = frames.shape[0]
+    acc = jnp.dtype(accum_dtype)
+    variant = "divide_first" if divide_first else "divide_last"
+
+    def body(s, group):
+        return (
+            ref_stream_step(
+                s, group, offset=offset, variant=variant, num_groups=g
+            ),
+            None,
+        )
+
+    init = jnp.zeros((frames.shape[1] // 2,) + frames.shape[2:], acc)
+    total, _ = jax.lax.scan(body, init, frames)
+    return ref_stream_finalize(total, g, variant=variant)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("offset", "algorithm", "backend", "accum_dtype", "interpret"),
+)
+def subtract_average(
+    frames: jnp.ndarray,
+    *,
+    offset: float = 0.0,
+    algorithm: str = "alg3",
+    backend: str = "auto",
+    accum_dtype=jnp.float32,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """PRISM denoise: (G, N, H, W) frames -> (N/2, H, W) averaged diffs."""
+    if algorithm not in ALGORITHMS:
+        raise ValueError(f"algorithm must be one of {ALGORITHMS}, got {algorithm}")
+    backend = _resolve(backend)
+    interp = (not _on_tpu()) if interpret is None else interpret
+    if backend == "pallas":
+        if algorithm == "alg1":
+            return denoise_tmpframe.alg1_subtract_average(
+                frames, offset=offset, accum_dtype=accum_dtype, interpret=interp
+            )
+        if algorithm == "alg2":
+            return denoise_tmpframe.alg2_subtract_average(
+                frames, offset=offset, accum_dtype=accum_dtype, interpret=interp
+            )
+        return denoise_stream.alg3_subtract_average(
+            frames,
+            offset=offset,
+            divide_first=(algorithm == "alg3_v2"),
+            accum_dtype=accum_dtype,
+            interpret=interp,
+        )
+    if algorithm in ("alg1", "alg2"):
+        return _xla_materialized(frames, offset=offset, accum_dtype=accum_dtype)
+    return _xla_streaming(
+        frames,
+        offset=offset,
+        accum_dtype=accum_dtype,
+        divide_first=(algorithm == "alg3_v2"),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Streaming API (one group per call — the production/camera entry point).
+# ---------------------------------------------------------------------------
+
+
+def stream_init(n: int, h: int, w: int, accum_dtype=jnp.float32) -> jnp.ndarray:
+    return ref_stream_init(n, h, w, accum_dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("num_groups", "offset", "variant", "backend", "interpret"),
+    donate_argnums=(0,),
+)
+def stream_step(
+    sum_frame: jnp.ndarray,
+    group_frames: jnp.ndarray,
+    *,
+    num_groups: int,
+    offset: float = 0.0,
+    variant: str = "divide_last",
+    backend: str = "auto",
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    backend = _resolve(backend)
+    interp = (not _on_tpu()) if interpret is None else interpret
+    if backend == "pallas":
+        return denoise_stream.alg3_stream_step(
+            group_frames,
+            sum_frame,
+            num_groups=num_groups,
+            offset=offset,
+            divide_first=(variant == "divide_first"),
+            interpret=interp,
+        )
+    return ref_stream_step(
+        sum_frame,
+        group_frames,
+        offset=offset,
+        variant=variant,
+        num_groups=num_groups,
+    )
+
+
+def stream_finalize(sum_frame, num_groups, *, variant="divide_last"):
+    return ref_stream_finalize(sum_frame, num_groups, variant=variant)

@@ -1,0 +1,139 @@
+"""Pure-jnp oracles for the PRISM subtract-and-average denoise kernels.
+
+Paper semantics (§4.1, Fig. 2): ``G`` experiments ("groups") each produce
+``N`` frames (``N`` even) of ``H×W`` pixels. Frames alternate control
+(odd 1-based index) and excitation (even 1-based index):
+
+    diff[g, k] = frame[g, 2k+1] - frame[g, 2k] + offset      (0-based)
+    out[k]     = (1/G) * sum_g diff[g, k]                    k in [0, N/2)
+
+``offset`` is the paper's fixed pre-subtraction offset that keeps the
+difference representable in an unsigned container (§4.2, implementation
+note 2); it is removed host-side.
+
+Variants (paper Algorithms 1-3 share this numerical spec; they differ only
+in dataflow / memory traffic, which the oracle does not model):
+
+* ``divide_last`` (Alg 1/2/3): accumulate raw diffs, divide by G once.
+* ``divide_first`` (Alg 3 v2): divide each diff by G before accumulating,
+  bounding the running sum — this is the overflow-safe variant.
+
+For integer dtypes the two are NOT bit-identical (integer division does not
+commute with summation); tests assert the documented error bound instead.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "ref_subtract_average",
+    "ref_stream_init",
+    "ref_stream_step",
+    "ref_stream_finalize",
+]
+
+
+def _split_pairs(frames: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """(..., N, H, W) -> control (..., N/2, H, W), excitation (..., N/2, H, W)."""
+    if frames.shape[-3] % 2 != 0:
+        raise ValueError(f"N must be even, got {frames.shape[-3]}")
+    ctl = frames[..., 0::2, :, :]
+    exc = frames[..., 1::2, :, :]
+    return ctl, exc
+
+
+def ref_subtract_average(
+    frames: jnp.ndarray,
+    *,
+    offset: int | float = 0,
+    variant: str = "divide_last",
+    accum_dtype=None,
+) -> jnp.ndarray:
+    """One-shot oracle. frames: (G, N, H, W) -> (N/2, H, W).
+
+    ``accum_dtype`` is the running-sum dtype (paper: u16 container —
+    overflows for G > 8 with 12-bit pixels + offset, reproduced faithfully
+    when you pass ``jnp.uint16``). Defaults to f32 for float inputs and
+    i32 for integer inputs.
+    """
+    if frames.ndim != 4:
+        raise ValueError(f"expected (G, N, H, W), got shape {frames.shape}")
+    g = frames.shape[0]
+    if accum_dtype is None:
+        accum_dtype = (
+            jnp.float32 if jnp.issubdtype(frames.dtype, jnp.floating) else jnp.int32
+        )
+    accum_dtype = jnp.dtype(accum_dtype)
+    ctl, exc = _split_pairs(frames)
+    ctl = ctl.astype(accum_dtype)
+    exc = exc.astype(accum_dtype)
+    off = jnp.asarray(offset, dtype=accum_dtype)
+    diff = exc - ctl + off  # (G, N/2, H, W)
+    if variant == "divide_last":
+        total = diff.sum(axis=0, dtype=accum_dtype)
+        if jnp.issubdtype(accum_dtype, jnp.integer):
+            out = total // g
+        else:
+            out = total / g
+    elif variant == "divide_first":
+        if jnp.issubdtype(accum_dtype, jnp.integer):
+            out = (diff // g).sum(axis=0, dtype=accum_dtype)
+        else:
+            out = (diff / g).sum(axis=0, dtype=accum_dtype)
+    else:
+        raise ValueError(f"unknown variant {variant!r}")
+    return out.astype(frames.dtype if accum_dtype == frames.dtype else accum_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Streaming oracle: one group of frames arrives per step (the camera feed).
+# This is the dataflow of paper Algorithm 3: a single running sumFrame,
+# updated in place as each group streams through, no per-group tmpFrame.
+# ---------------------------------------------------------------------------
+
+
+def ref_stream_init(n: int, h: int, w: int, accum_dtype=jnp.float32) -> jnp.ndarray:
+    """Running-sum state: (N/2, H, W) zeros."""
+    return jnp.zeros((n // 2, h, w), dtype=accum_dtype)
+
+
+def ref_stream_step(
+    sum_frame: jnp.ndarray,
+    group_frames: jnp.ndarray,
+    *,
+    offset: int | float = 0,
+    variant: str = "divide_last",
+    num_groups: int | None = None,
+) -> jnp.ndarray:
+    """Fold one group (N, H, W) into the running sum (N/2, H, W)."""
+    ctl, exc = _split_pairs(group_frames)
+    acc = sum_frame.dtype
+    diff = exc.astype(acc) - ctl.astype(acc) + jnp.asarray(offset, acc)
+    if variant == "divide_first":
+        if num_groups is None:
+            raise ValueError("divide_first needs num_groups")
+        if jnp.issubdtype(acc, jnp.integer):
+            diff = diff // num_groups
+        else:
+            diff = diff / num_groups
+    return sum_frame + diff
+
+
+def ref_stream_finalize(
+    sum_frame: jnp.ndarray, num_groups: int, *, variant: str = "divide_last"
+) -> jnp.ndarray:
+    if variant == "divide_first":
+        return sum_frame
+    if jnp.issubdtype(sum_frame.dtype, jnp.integer):
+        return sum_frame // num_groups
+    return sum_frame / num_groups
+
+
+def ref_numpy(frames: np.ndarray, offset: float = 0.0) -> np.ndarray:
+    """Plain-numpy oracle (used by the CPU-baseline benchmark, Table 7)."""
+    g, n, h, w = frames.shape
+    ctl = frames[:, 0::2].astype(np.float64)
+    exc = frames[:, 1::2].astype(np.float64)
+    return ((exc - ctl + offset).sum(axis=0) / g).astype(np.float64)

@@ -1,0 +1,222 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+The two lines above MUST stay first: jax locks the device count at first
+init, and the dry-run needs 512 placeholder host devices to build the
+production meshes ((16,16) single-pod / (2,16,16) multi-pod). Smoke tests
+and benchmarks do NOT import this module and keep seeing 1 device.
+
+Per cell this script:
+  1. builds the mesh and per-cell sharding rules,
+  2. constructs the abstract inputs (ShapeDtypeStruct — no allocation),
+  3. ``jax.jit(step, in_shardings, out_shardings).lower(...).compile()``,
+  4. records ``memory_analysis()`` (fits-in-HBM proof),
+     ``cost_analysis()`` (FLOPs/bytes) and the collective schedule parsed
+     from the optimized HLO (for §Roofline),
+  5. writes one JSON artifact per cell under ``artifacts/dryrun/``.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2.5-32b \
+      --shape train_4k [--multi-pod] [--all] [--out artifacts/dryrun]
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs import ARCH_IDS, SHAPES, get_config, long_context_ok
+from repro.launch import steps
+from repro.launch.mesh import HW, make_production_mesh
+from repro.models import build_model
+from repro.optim import AdamW
+from repro.roofline import analysis as ra
+from repro.roofline import hlo_costs
+
+
+def cell_overrides(shape_name: str) -> dict:
+    if shape_name == "decode_32k":
+        # kv head counts are rarely divisible by the 16-way model axis;
+        # shard the cache sequence axis over `model` instead.
+        return {"cache_seq": "model", "act_cache_seq": "model"}
+    if shape_name == "long_500k":
+        # batch=1: context parallelism over BOTH axes.
+        return {"cache_seq": ("data", "model"),
+                "act_cache_seq": ("data", "model")}
+    if shape_name == "prefill_32k":
+        return {"cache_seq": "model", "act_cache_seq": "model"}
+    return {}
+
+
+def should_skip(arch: str, shape_name: str) -> str | None:
+    if shape_name == "long_500k" and not long_context_ok(arch):
+        return "skip(full-attn)"
+    return None
+
+
+def run_cell(
+    arch: str,
+    shape_name: str,
+    *,
+    multi_pod: bool = False,
+    rules_extra: dict | None = None,
+    microbatches: int | None = None,
+    verbose: bool = True,
+) -> dict:
+    shape = SHAPES[shape_name]
+    skip = should_skip(arch, shape_name)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    record = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": mesh_name,
+        "kind": shape.kind,
+    }
+    if skip:
+        record["status"] = skip
+        return record
+
+    t0 = time.time()
+    cfg = get_config(arch)
+    model = build_model(cfg)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    overrides = cell_overrides(shape_name)
+    if rules_extra:
+        overrides.update(rules_extra)
+    rules = steps.resolve_rules(
+        cfg, mesh, long_context=(shape_name == "long_500k"), overrides=overrides
+    )
+
+    with mesh:
+        if shape.kind == "train":
+            opt = AdamW(learning_rate=3e-4)
+            if microbatches is None:
+                # per-microbatch batch must stay divisible by the DP size
+                dp = mesh.shape.get("data", 1) * mesh.shape.get("pod", 1)
+                microbatches = max(
+                    1, min(cfg.microbatches, shape.global_batch // dp)
+                )
+            jitted, abstract = steps.jit_train_step(
+                model, opt, mesh, rules,
+                microbatches=microbatches,
+                batch=shape.global_batch, seq=shape.seq_len,
+            )
+        elif shape.kind == "prefill":
+            jitted, abstract = steps.jit_prefill_step(
+                model, mesh, rules, batch=shape.global_batch, seq=shape.seq_len
+            )
+        else:  # decode
+            jitted, abstract = steps.jit_decode_step(
+                model, mesh, rules, batch=shape.global_batch, seq=shape.seq_len
+            )
+        lowered = jitted.lower(*abstract)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()  # raw (loop bodies counted once)
+    hlo = compiled.as_text()
+    corrected = hlo_costs.analyze(hlo)  # trip-count-aware
+    coll_kinds = corrected["collectives"]
+    coll_wire = sum(coll_kinds.values())
+    terms = ra.roofline_terms_corrected(corrected)
+
+    n_params = model.param_count()
+    n_active = model.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.tokens
+        mf = ra.model_flops(n_active, tokens, train=True)
+    elif shape.kind == "prefill":
+        tokens = shape.tokens
+        mf = ra.model_flops(n_active, tokens, train=False)
+    else:
+        tokens = shape.global_batch  # one new token per sequence
+        mf = ra.model_flops(n_active, tokens, train=False)
+
+    chips = 512 if multi_pod else 256
+    total_hlo_flops = terms.flops * chips
+    record.update(
+        status="ok",
+        lower_s=round(t_lower, 1),
+        compile_s=round(t_compile, 1),
+        params=n_params,
+        active_params=n_active,
+        tokens_per_step=tokens,
+        model_flops=mf,
+        hlo_flops_per_device=terms.flops,
+        raw_cost_analysis_flops=float(cost.get("flops", 0.0)),
+        useful_flops_ratio=(mf / total_hlo_flops) if total_hlo_flops else 0.0,
+        memory_analysis={
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "alias_bytes": getattr(mem, "alias_size_in_bytes", None),
+        },
+        fits_hbm=None,
+        roofline=terms.asdict(),
+        collective_kinds=coll_kinds,
+        collective_wire_bytes=coll_wire,
+    )
+    arg_b = record["memory_analysis"]["argument_bytes"] or 0
+    tmp_b = record["memory_analysis"]["temp_bytes"] or 0
+    # arguments are per-device (sharded) sizes; temp is scratch
+    record["fits_hbm"] = bool(arg_b + tmp_b < HW.HBM_BYTES)
+    record["hbm_needed_gib"] = round((arg_b + tmp_b) / 2**30, 2)
+    if verbose:
+        print(
+            f"[dryrun] {arch} {shape_name} {mesh_name}: "
+            f"lower {t_lower:.0f}s compile {t_compile:.0f}s "
+            f"hbm {record['hbm_needed_gib']} GiB fits={record['fits_hbm']} "
+            f"dom={terms.dominant}"
+        )
+    return record
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, choices=ARCH_IDS + ("all",))
+    ap.add_argument("--shape", default=None, choices=tuple(SHAPES) + ("all",))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true", help="every cell")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    archs = ARCH_IDS if (args.all or args.arch in (None, "all")) else (args.arch,)
+    shapes = tuple(SHAPES) if (args.all or args.shape in (None, "all")) else (args.shape,)
+    meshes = (False, True) if (args.both_meshes or args.all) else (args.multi_pod,)
+
+    os.makedirs(args.out, exist_ok=True)
+    failures = 0
+    for arch in archs:
+        for shape_name in shapes:
+            for mp in meshes:
+                tag = f"{arch}__{shape_name}__{'2x16x16' if mp else '16x16'}"
+                path = os.path.join(args.out, tag + ".json")
+                if args.skip_existing and os.path.exists(path):
+                    print(f"[dryrun] {tag}: exists, skipping")
+                    continue
+                try:
+                    rec = run_cell(arch, shape_name, multi_pod=mp)
+                except Exception as e:  # a failure here is a sharding bug
+                    failures += 1
+                    rec = {
+                        "arch": arch, "shape": shape_name,
+                        "mesh": "2x16x16" if mp else "16x16",
+                        "status": f"FAIL: {type(e).__name__}: {e}",
+                    }
+                    traceback.print_exc()
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=2, default=str)
+    print(f"[dryrun] done, failures={failures}")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,119 @@
+"""Model input construction: abstract (ShapeDtypeStruct) stand-ins for the
+dry-run, and concrete random batches for smoke tests / examples.
+
+Modality frontends are STUBS per the assignment: audio gets precomputed
+frame embeddings (B, T_enc, D), vlm gets precomputed patch embeddings
+(B, T_img, D). The PRISM pipeline (repro.core) is the producer of those
+embeddings in the end-to-end examples.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "train_batch_spec",
+    "decode_batch_spec",
+    "batch_logical_axes",
+    "make_train_batch",
+    "make_decode_batch",
+]
+
+
+def _extras_spec(cfg, batch: int, dtype, lead: tuple[int, ...] = ()):
+    if cfg.family == "audio":
+        return {
+            "frames": jax.ShapeDtypeStruct(
+                lead + (batch, cfg.encoder_positions, cfg.d_model), dtype
+            )
+        }
+    if cfg.family == "vlm":
+        return {
+            "image_embeds": jax.ShapeDtypeStruct(
+                lead + (batch, cfg.num_image_tokens, cfg.d_model), dtype
+            )
+        }
+    return {}
+
+
+def train_batch_spec(cfg, batch: int, seq: int, microbatches: int = 1):
+    """Training batch. With microbatches M > 1 the arrays carry a LEADING
+    unsharded microbatch dim (M, B/M, S): the grad-accumulation scan then
+    slices dim 0 with no resharding (a reshape inside the step would break
+    GSPMD batch-sharding propagation)."""
+    dt = jnp.dtype(cfg.dtype)
+    m = max(microbatches, 1)
+    if batch % m:
+        raise ValueError(f"global batch {batch} not divisible by {m} microbatches")
+    lead = (m,) if m > 1 else ()
+    b = batch // m
+    spec = {
+        "tokens": jax.ShapeDtypeStruct(lead + (b, seq), jnp.int32),
+        "labels": jax.ShapeDtypeStruct(lead + (b, seq), jnp.int32),
+    }
+    spec.update(_extras_spec(cfg, b, dt, lead))
+    return spec
+
+
+def decode_batch_spec(cfg, batch: int):
+    dt = jnp.dtype(cfg.dtype)
+    spec = {"token": jax.ShapeDtypeStruct((batch, 1), jnp.int32)}
+    spec.update(_extras_spec(cfg, batch, dt))
+    return spec
+
+
+def batch_logical_axes(spec_or_batch):
+    """Logical axes for each batch entry (leading dims batch, seq)."""
+
+    def axes(path_leaf):
+        name, leaf = path_leaf
+        nd = len(leaf.shape)
+        if name in ("frames", "image_embeds"):
+            return ("batch", "seq", None)
+        return ("batch", "seq")[:nd] if nd <= 2 else ("batch",) + (None,) * (nd - 1)
+
+    return {k: axes((k, v)) for k, v in spec_or_batch.items()}
+
+
+def make_train_batch(cfg, batch: int, seq: int, seed: int = 0, microbatches: int = 1):
+    rng = np.random.default_rng(seed)
+    m = max(microbatches, 1)
+    lead = (m,) if m > 1 else ()
+    b = batch // m
+    out = {
+        "tokens": jnp.asarray(
+            rng.integers(0, cfg.vocab_size, lead + (b, seq)), jnp.int32
+        ),
+        "labels": jnp.asarray(
+            rng.integers(0, cfg.vocab_size, lead + (b, seq)), jnp.int32
+        ),
+    }
+    dt = jnp.dtype(cfg.dtype)
+    if cfg.family == "audio":
+        out["frames"] = jnp.asarray(
+            rng.normal(0, 1, lead + (b, cfg.encoder_positions, cfg.d_model)), dt
+        )
+    if cfg.family == "vlm":
+        out["image_embeds"] = jnp.asarray(
+            rng.normal(0, 1, lead + (b, cfg.num_image_tokens, cfg.d_model)), dt
+        )
+    return out
+
+
+def make_decode_batch(cfg, batch: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    out = {
+        "token": jnp.asarray(rng.integers(0, cfg.vocab_size, (batch, 1)), jnp.int32)
+    }
+    dt = jnp.dtype(cfg.dtype)
+    if cfg.family == "audio":
+        out["frames"] = jnp.asarray(
+            rng.normal(0, 1, (batch, cfg.encoder_positions, cfg.d_model)), dt
+        )
+    if cfg.family == "vlm":
+        out["image_embeds"] = jnp.asarray(
+            rng.normal(0, 1, (batch, cfg.num_image_tokens, cfg.d_model)), dt
+        )
+    return out

@@ -1,0 +1,90 @@
+"""Batched serving driver: prefill + decode loop with KV caches.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch h2o-danube-1.8b \
+      --smoke --batch 4 --prompt-len 16 --gen 16
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCH_IDS, get_config
+from repro.launch.inputs import make_train_batch
+from repro.models import build_model
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="h2o-danube-1.8b", choices=ARCH_IDS)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    max_len = args.prompt_len + args.gen
+
+    batch = make_train_batch(cfg, args.batch, args.prompt_len, seed=1)
+    batch.pop("labels")
+
+    t0 = time.perf_counter()
+    if cfg.family == "audio":
+        from repro.distributed import sharding as sh
+        from repro.models import encdec as ED
+
+        enc = ED.encode(params, batch["frames"], cfg)
+        caches = sh.init_params(
+            jax.random.PRNGKey(2), model.cache_spec(args.batch, max_len)
+        )
+        caches["cross"] = ED.precompute_cross_kv(params, enc, cfg)
+        logits = None
+        tok = jnp.zeros((args.batch, 1), jnp.int32)
+        start = 0
+    else:
+        logits, caches = model.prefill(params, batch, max_len=max_len)
+        tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+        start = args.prompt_len
+    t_prefill = time.perf_counter() - t0
+
+    decode = jax.jit(model.decode_step)
+    out_tokens = []
+    t0 = time.perf_counter()
+    for i in range(args.gen):
+        db = {"token": tok}
+        for k in ("image_embeds", "frames"):
+            if k in batch:
+                db[k] = batch[k]
+        logits, caches = decode(params, caches, db, jnp.asarray(start + i, jnp.int32))
+        if args.temperature > 0:
+            key = jax.random.PRNGKey(100 + i)
+            tok = jax.random.categorical(
+                key, logits / args.temperature, axis=-1
+            )[:, None].astype(jnp.int32)
+        else:
+            tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+        out_tokens.append(np.asarray(tok[:, 0]))
+    jax.block_until_ready(logits)
+    t_decode = time.perf_counter() - t0
+
+    toks = np.stack(out_tokens, 1)
+    print(f"[serve] arch={cfg.name} batch={args.batch}")
+    print(f"[serve] prefill {args.prompt_len} tokens: {t_prefill * 1e3:.1f} ms")
+    print(
+        f"[serve] decoded {args.gen} tokens/seq: {t_decode * 1e3:.1f} ms "
+        f"({args.batch * args.gen / t_decode:.1f} tok/s aggregate)"
+    )
+    print(f"[serve] sample output tokens (seq 0): {toks[0][:12].tolist()}")
+    return toks
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,215 @@
+"""Step builders: train / prefill / decode, with sharding derivation.
+
+``build_train_step`` applies the paper's Algorithm-3 idea at the training
+level: gradients over M microbatches are folded into ONE running sum
+(lax.scan with a donated accumulator) instead of materializing per-
+microbatch gradients — the same bounded-working-set transformation that
+lets the denoise kernel keep `sumFrame` in fast memory. This is what makes
+the 32B-class train_4k cells fit a 16 GB/chip pod.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.distributed import sharding as sh
+from repro.distributed.context import activation_sharding
+from repro.launch.inputs import decode_batch_spec, train_batch_spec
+from repro.optim import AdamW
+
+
+def _with_act_context(fn, mesh, rules):
+    """Wrap a step so activation constraints are live while jax traces it."""
+
+    @functools.wraps(fn)
+    def wrapped(*args):
+        with activation_sharding(mesh, rules):
+            return fn(*args)
+
+    return wrapped
+
+__all__ = [
+    "resolve_rules",
+    "build_train_step",
+    "build_prefill_step",
+    "build_decode_step",
+    "batch_shardings",
+    "train_state_shardings",
+]
+
+
+def resolve_rules(cfg, mesh, *, long_context: bool = False, overrides=None):
+    rules = dict(sh.DEFAULT_RULES)
+    if cfg.rules_override:
+        rules.update(cfg.rules_override)
+    if long_context:
+        # batch=1: batch sharding is useless; shard the KV/cache sequence
+        # axis over `data` instead (context parallelism).
+        rules["cache_seq"] = "data"
+        rules["act_cache_seq"] = "data"
+    if overrides:
+        rules.update(overrides)
+    return rules
+
+
+def batch_shardings(batch_spec, mesh, rules, *, microbatched: bool = False):
+    def one(name, leaf):
+        nd = len(leaf.shape)
+        if name in ("frames", "image_embeds"):
+            axes = ("batch", None, None)
+        else:
+            axes = ("batch", "seq")[:nd]
+        if microbatched:
+            axes = (None,) + axes  # leading microbatch dim is unsharded
+        return sh.logical_sharding(leaf.shape, axes, mesh, rules)
+
+    return {k: one(k, v) for k, v in batch_spec.items()}
+
+
+def train_state_shardings(model, optimizer, mesh, rules):
+    pspec = model.spec()
+    params_sh = sh.named_shardings(pspec, mesh, rules)
+    opt_sh = sh.named_shardings(optimizer.state_spec(pspec), mesh, rules)
+    return params_sh, opt_sh
+
+
+# ---------------------------------------------------------------------------
+# Train
+# ---------------------------------------------------------------------------
+
+
+def build_train_step(model, optimizer: AdamW, *, microbatches: int | None = None):
+    cfg = model.cfg
+    m = microbatches if microbatches is not None else max(cfg.microbatches, 1)
+
+    def train_step(params, opt_state, batch):
+        def loss_fn(p, mb):
+            return model.loss(p, mb)
+
+        if m == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        else:
+            # running-sum gradient accumulation (paper Alg 3 at train level).
+            # The batch arrives with a LEADING unsharded microbatch dim
+            # (M, B/M, ...) — the scan slices it with zero resharding.
+            def body(acc, mb):
+                l, g = jax.value_and_grad(loss_fn)(params, mb)
+                acc = jax.tree_util.tree_map(
+                    lambda a, gi: a + gi.astype(jnp.float32), acc, g
+                )
+                return acc, l
+
+            zeros = jax.tree_util.tree_map(
+                lambda x: jnp.zeros(x.shape, jnp.float32), params
+            )
+            gsum, losses = jax.lax.scan(body, zeros, batch)
+            grads = jax.tree_util.tree_map(lambda g: g / m, gsum)
+            loss = losses.mean()
+
+        new_params, new_opt = optimizer.update(grads, opt_state, params)
+        metrics = {"loss": loss, "grad_norm": jnp.sqrt(sum(
+            jnp.sum(jnp.square(g.astype(jnp.float32)))
+            for g in jax.tree_util.tree_leaves(grads)
+        ))}
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def jit_train_step(model, optimizer, mesh, rules, *, microbatches=None,
+                   batch: int = 8, seq: int = 128):
+    """jit with explicit in/out shardings + abstract input specs."""
+    cfg = model.cfg
+    m = microbatches if microbatches is not None else max(cfg.microbatches, 1)
+    step = build_train_step(model, optimizer, microbatches=m)
+    params_sh, opt_sh = train_state_shardings(model, optimizer, mesh, rules)
+    bspec = train_batch_spec(cfg, batch, seq, microbatches=m)
+    bsh = batch_shardings(bspec, mesh, rules, microbatched=(m > 1))
+    rep = NamedSharding(mesh, P())
+    jitted = jax.jit(
+        _with_act_context(step, mesh, rules),
+        in_shardings=(params_sh, opt_sh, bsh),
+        out_shardings=(params_sh, opt_sh, {"loss": rep, "grad_norm": rep}),
+        donate_argnums=(0, 1),
+    )
+    abstract = (
+        sh.abstract_params(model.spec()),
+        sh.abstract_params(optimizer.state_spec(model.spec())),
+        bspec,
+    )
+    return jitted, abstract
+
+
+# ---------------------------------------------------------------------------
+# Serve: prefill + decode
+# ---------------------------------------------------------------------------
+
+
+def build_prefill_step(model):
+    def prefill_step(params, batch):
+        return model.prefill(params, batch)
+
+    return prefill_step
+
+
+def build_decode_step(model):
+    def decode_step(params, caches, batch, index):
+        return model.decode_step(params, caches, batch, index)
+
+    return decode_step
+
+
+def jit_prefill_step(model, mesh, rules, *, batch: int, seq: int):
+    cfg = model.cfg
+    params_sh = sh.named_shardings(model.spec(), mesh, rules)
+    bspec = train_batch_spec(cfg, batch, seq)
+    bspec.pop("labels")
+    bsh = batch_shardings(bspec, mesh, rules)
+    cache_sh = _cache_shardings(model, mesh, rules, batch, seq)
+    if cfg.family == "audio":
+        # audio prefill returns only the (static) cross K/V cache
+        cache_sh = {"cross": cache_sh["cross"]}
+    rep = NamedSharding(mesh, P())
+    logits_sh = sh.logical_sharding((batch, cfg.vocab_size), ("batch", "vocab"),
+                                    mesh, rules)
+    jitted = jax.jit(
+        _with_act_context(build_prefill_step(model), mesh, rules),
+        in_shardings=(params_sh, bsh),
+        out_shardings=(logits_sh, cache_sh),
+    )
+    abstract = (sh.abstract_params(model.spec()), bspec)
+    return jitted, abstract
+
+
+def _cache_shardings(model, mesh, rules, batch, seq):
+    cspec = model.cache_spec(batch, seq)
+    return sh.named_shardings(cspec, mesh, rules)
+
+
+def jit_decode_step(model, mesh, rules, *, batch: int, seq: int):
+    cfg = model.cfg
+    params_sh = sh.named_shardings(model.spec(), mesh, rules)
+    cache_sh = _cache_shardings(model, mesh, rules, batch, seq)
+    bspec = decode_batch_spec(cfg, batch)
+    bsh = batch_shardings(bspec, mesh, rules)
+    rep = NamedSharding(mesh, P())
+    logits_sh = sh.logical_sharding((batch, cfg.vocab_size), ("batch", "vocab"),
+                                    mesh, rules)
+    jitted = jax.jit(
+        _with_act_context(build_decode_step(model), mesh, rules),
+        in_shardings=(params_sh, cache_sh, bsh, rep),
+        out_shardings=(logits_sh, cache_sh),
+        donate_argnums=(1,),
+    )
+    abstract = (
+        sh.abstract_params(model.spec()),
+        sh.abstract_params(model.cache_spec(batch, seq)),
+        bspec,
+        jax.ShapeDtypeStruct((), jnp.int32),
+    )
+    return jitted, abstract

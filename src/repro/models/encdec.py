@@ -1,0 +1,195 @@
+"""Whisper-style encoder-decoder backbone (arXiv:2212.04356).
+
+Per the assignment, the conv/mel frontend is a STUB: ``input_specs()``
+feeds precomputed frame embeddings (B, T_enc, D). We implement the
+transformer backbone faithfully: pre-LN layernorm blocks, non-gated GELU
+MLPs, learned positional embeddings, bidirectional encoder self-attention,
+causal decoder self-attention + cross-attention to the encoder output.
+
+Serving: ``encode`` runs once; cross-attention K/V are precomputed per
+decoder layer (they never change during decode) and the decoder self-attn
+uses the standard cache machinery.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.context import constrain
+from repro.distributed.sharding import ParamSpec, stack_spec
+from repro.models import attention as A
+from repro.models import layers as L
+
+__all__ = [
+    "encdec_spec",
+    "encode",
+    "decoder_forward",
+    "encdec_forward",
+    "decoder_cache_spec",
+    "precompute_cross_kv",
+    "encdec_decode_step",
+]
+
+
+def _enc_layer_spec(cfg):
+    return {
+        "ln1": L.norm_spec(cfg),
+        "attn": A.attn_spec(cfg),
+        "ln2": L.norm_spec(cfg),
+        "mlp": L.mlp_spec(cfg),
+    }
+
+
+def _dec_layer_spec(cfg):
+    return {
+        "ln1": L.norm_spec(cfg),
+        "self_attn": A.attn_spec(cfg),
+        "ln_cross": L.norm_spec(cfg),
+        "cross_attn": A.attn_spec(cfg, cross=True),
+        "ln2": L.norm_spec(cfg),
+        "mlp": L.mlp_spec(cfg),
+    }
+
+
+def encdec_spec(cfg):
+    n_enc = cfg.encoder_layers or cfg.num_layers
+    return {
+        "embed": L.embed_spec(cfg),
+        "enc_pos": ParamSpec(
+            (cfg.encoder_positions, cfg.d_model), ("seq", "embed"), scale=0.02
+        ),
+        "dec_pos": ParamSpec(
+            (cfg.decoder_positions, cfg.d_model), ("seq", "embed"), scale=0.02
+        ),
+        "encoder": stack_spec(_enc_layer_spec(cfg), n_enc),
+        "enc_norm": L.norm_spec(cfg),
+        "decoder": stack_spec(_dec_layer_spec(cfg), cfg.num_layers),
+        "final_norm": L.norm_spec(cfg),
+    }
+
+
+def encode(params, frames, cfg):
+    """frames (B, T_enc, D) precomputed embeddings -> encoder states."""
+    dt = jnp.dtype(cfg.dtype)
+    x = frames.astype(dt) + params["enc_pos"][: frames.shape[1]].astype(dt)
+
+    def body(x, p):
+        h = L.apply_norm(p["ln1"], x, cfg)
+        x = x + A.attention(p["attn"], h, cfg, causal=False, use_rope=False)
+        h = L.apply_norm(p["ln2"], x, cfg)
+        x = x + L.apply_mlp(p["mlp"], h, cfg)
+        return constrain(x, ("act_batch", "act_seq", "act_embed")), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["encoder"])
+    return L.apply_norm(params["enc_norm"], x, cfg)
+
+
+def decoder_forward(params, tokens, enc_out, cfg):
+    """Teacher-forced decoder. tokens (B,S) -> logits (B,S,V)."""
+    dt = jnp.dtype(cfg.dtype)
+    x = L.embed_tokens(params["embed"], tokens, cfg)
+    x = x + params["dec_pos"][: tokens.shape[1]].astype(dt)
+
+    def body(x, p):
+        h = L.apply_norm(p["ln1"], x, cfg)
+        x = x + A.attention(p["self_attn"], h, cfg, causal=True, use_rope=False)
+        h = L.apply_norm(p["ln_cross"], x, cfg)
+        x = x + A.attention(
+            p["cross_attn"], h, cfg, kv_x=enc_out, causal=False, use_rope=False
+        )
+        h = L.apply_norm(p["ln2"], x, cfg)
+        x = x + L.apply_mlp(p["mlp"], h, cfg)
+        return constrain(x, ("act_batch", "act_seq", "act_embed")), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["decoder"])
+    x = L.apply_norm(params["final_norm"], x, cfg)
+    return L.unembed(params["embed"], x, cfg)
+
+
+def encdec_forward(params, frames, tokens, cfg):
+    enc = encode(params, frames, cfg)
+    return decoder_forward(params, tokens, enc, cfg)
+
+
+# ---------------------------------------------------------------------------
+# Serving
+# ---------------------------------------------------------------------------
+
+
+def decoder_cache_spec(cfg, batch: int, seq_len: int):
+    """Self-attn caches (stacked) + cross K/V (stacked, static)."""
+    self_spec = stack_spec(
+        A.cache_spec(cfg, batch, seq_len, dtype=jnp.dtype(cfg.dtype)),
+        cfg.num_layers,
+    )
+    k, d = cfg.num_kv_heads, cfg.head_dim
+    cross = {
+        "k": ParamSpec(
+            (cfg.num_layers, batch, cfg.encoder_positions, k, d),
+            ("layers", "batch", "cache_seq", "kv_heads", "head_dim"),
+            init="zeros",
+            dtype=jnp.dtype(cfg.dtype),
+        ),
+        "v": ParamSpec(
+            (cfg.num_layers, batch, cfg.encoder_positions, k, d),
+            ("layers", "batch", "cache_seq", "kv_heads", "head_dim"),
+            init="zeros",
+            dtype=jnp.dtype(cfg.dtype),
+        ),
+    }
+    return {"self": self_spec, "cross": cross}
+
+
+def precompute_cross_kv(params, enc_out, cfg):
+    dt = enc_out.dtype
+
+    def one(p):
+        k = jnp.einsum("btd,dhk->bthk", enc_out, p["cross_attn"]["wk"].astype(dt))
+        v = jnp.einsum("btd,dhk->bthk", enc_out, p["cross_attn"]["wv"].astype(dt))
+        return {"k": k, "v": v}
+
+    # vmap over the stacked layer axis of decoder params
+    kv = jax.vmap(one)(params["decoder"])
+    return kv
+
+
+def encdec_decode_step(params, caches, token, index, cfg):
+    """token (B,1) -> (logits (B,V), new caches). Cross K/V are static."""
+    dt = jnp.dtype(cfg.dtype)
+    x = L.embed_tokens(params["embed"], token, cfg)
+    x = x + jax.lax.dynamic_slice_in_dim(params["dec_pos"], index, 1, 0).astype(dt)
+
+    def body(carry, xs):
+        xc = carry
+        p, self_c, cross_k, cross_v = xs
+        h = L.apply_norm(p["ln1"], xc, cfg)
+        att, new_self = A.decode_attention(
+            p["self_attn"], h, self_c, index, cfg, use_rope=False
+        )
+        xc = xc + att
+        h = L.apply_norm(p["ln_cross"], xc, cfg)
+        # cross attention over precomputed encoder K/V (no mask, no update)
+        q = jnp.einsum("bsd,dhk->bshk", h, p["cross_attn"]["wq"].astype(dt))
+        b, s = q.shape[0], q.shape[1]
+        mask = jnp.ones((b, 1, s, cross_k.shape[1]), bool)
+        out = A._sdpa(q, cross_k.astype(dt), cross_v.astype(dt), mask, cfg)
+        xc = xc + jnp.einsum(
+            "bshk,hkd->bsd", out, p["cross_attn"]["wo"].astype(dt)
+        )
+        h = L.apply_norm(p["ln2"], xc, cfg)
+        xc = xc + L.apply_mlp(p["mlp"], h, cfg)
+        return xc, new_self
+
+    x, new_self = jax.lax.scan(
+        body,
+        x,
+        (params["decoder"], caches["self"], caches["cross"]["k"], caches["cross"]["v"]),
+    )
+    x = L.apply_norm(params["final_norm"], x, cfg)
+    logits = L.unembed(params["embed"], x, cfg)
+    return logits[:, 0, :], {"self": new_self, "cross": caches["cross"]}

@@ -1,0 +1,146 @@
+"""Shared model building blocks: norms, MLPs, embeddings, RoPE.
+
+Pure-functional style: each block exposes ``*_spec(cfg) -> ParamSpec tree``
+and an apply function taking the materialized (or abstract) params. Compute
+runs in ``cfg.dtype`` (bf16 by default); params are fp32 masters cast at
+use; norms/softmax accumulate in fp32.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.context import constrain
+from repro.distributed.sharding import ParamSpec
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def norm_spec(cfg):
+    if cfg.norm_type == "layernorm":
+        return {
+            "scale": ParamSpec((cfg.d_model,), ("norm",), init="ones"),
+            "bias": ParamSpec((cfg.d_model,), ("norm",), init="zeros"),
+        }
+    return {"scale": ParamSpec((cfg.d_model,), ("norm",), init="ones")}
+
+
+def apply_norm(params, x, cfg):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    if cfg.norm_type == "layernorm":
+        mu = x32.mean(-1, keepdims=True)
+        var = ((x32 - mu) ** 2).mean(-1, keepdims=True)
+        y = (x32 - mu) * jax.lax.rsqrt(var + cfg.norm_eps)
+        y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(
+            jnp.float32
+        )
+    else:
+        var = (x32**2).mean(-1, keepdims=True)
+        y = x32 * jax.lax.rsqrt(var + cfg.norm_eps)
+        y = y * params["scale"].astype(jnp.float32)
+    return y.astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Dense MLP (gated SiLU/GELU, or plain 2-layer for whisper)
+# ---------------------------------------------------------------------------
+
+
+def mlp_spec(cfg, d_ff: int | None = None):
+    d_ff = d_ff or cfg.d_ff
+    spec = {
+        "wi": ParamSpec((cfg.d_model, d_ff), ("embed", "mlp"), init="fan_in"),
+        "wo": ParamSpec((d_ff, cfg.d_model), ("mlp", "embed"), init="fan_in"),
+    }
+    if cfg.gated_mlp:
+        spec["wg"] = ParamSpec((cfg.d_model, d_ff), ("embed", "mlp"), init="fan_in")
+    return spec
+
+
+def _act(x, kind: str):
+    if kind == "gelu":
+        return jax.nn.gelu(x)
+    return jax.nn.silu(x)
+
+
+def apply_mlp(params, x, cfg):
+    dt = x.dtype
+    h = jnp.einsum("...d,df->...f", x, params["wi"].astype(dt))
+    if cfg.gated_mlp:
+        g = jnp.einsum("...d,df->...f", x, params["wg"].astype(dt))
+        h = _act(h, cfg.act) * g
+    else:
+        h = _act(h, cfg.act)
+    if h.ndim == 3:
+        h = constrain(h, ("act_batch", "act_seq", "act_mlp"))
+    return jnp.einsum("...f,fd->...d", h, params["wo"].astype(dt))
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+
+def embed_spec(cfg):
+    spec = {
+        "embedding": ParamSpec(
+            (cfg.vocab_size, cfg.d_model), ("vocab", "embed"), scale=1.0, init="fan_in"
+        )
+    }
+    if not cfg.tie_embeddings:
+        spec["unembed"] = ParamSpec(
+            (cfg.d_model, cfg.vocab_size), ("embed", "vocab"), init="fan_in"
+        )
+    return spec
+
+
+def embed_tokens(params, tokens, cfg):
+    emb = params["embedding"].astype(jnp.dtype(cfg.dtype))
+    return emb[tokens] * jnp.asarray(1.0, emb.dtype)
+
+
+def unembed(params, x, cfg):
+    dt = x.dtype
+    if cfg.tie_embeddings:
+        w = params["embedding"].astype(dt)
+        return jnp.einsum("...d,vd->...v", x, w)
+    return jnp.einsum("...d,dv->...v", x, params["unembed"].astype(dt))
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_angles(positions, dim: int, theta: float):
+    """positions (...,) -> cos/sin (..., dim/2)."""
+    half = dim // 2
+    freqs = 1.0 / (
+        theta ** (jnp.arange(0, half, dtype=jnp.float32) / half)
+    )
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x (..., S, H, D) with cos/sin (..., S, D/2) broadcast over heads."""
+    d = x.shape[-1]
+    x1, x2 = x[..., : d // 2], x[..., d // 2 :]
+    c = cos[..., None, :].astype(x.dtype)
+    s = sin[..., None, :].astype(x.dtype)
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Positional embedding (whisper: learned)
+# ---------------------------------------------------------------------------
+
+
+def learned_pos_spec(n_positions: int, d_model: int):
+    return {
+        "pos": ParamSpec((n_positions, d_model), ("seq", "embed"), scale=0.02)
+    }

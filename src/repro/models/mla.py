@@ -1,0 +1,194 @@
+"""Multi-head Latent Attention (DeepSeek-V2, arXiv:2405.04434).
+
+The KV cache stores only the compressed latent ``c_kv`` (kv_lora_rank) plus
+the shared RoPE key ``k_pe`` (qk_rope_dim) per token — 512+64 floats for
+V2-Lite vs 16·(128+128) for an equivalent GQA cache. We implement the
+*absorbed* formulation for both prefill and decode so the cache never needs
+decompression:
+
+  score(i,j) = (q_nope_i · W_uk) · c_kv_j + q_pe_i · k_pe_j
+  out_i      = (Σ_j p_ij c_kv_j) · W_uv
+
+(W_uk absorbed into the query, W_uv applied after attention over latents.)
+V2-Lite has no query LoRA, so q is a direct projection.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.context import constrain
+from repro.distributed.sharding import ParamSpec
+from repro.models.layers import apply_norm, apply_rope, rope_angles
+
+__all__ = ["mla_spec", "mla_cache_spec", "mla_attention", "mla_decode"]
+
+
+def mla_spec(cfg):
+    h = cfg.num_heads
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    r = cfg.kv_lora_rank
+    return {
+        "wq": ParamSpec(
+            (cfg.d_model, h, dn + dr), ("embed", "heads", "qk_dim"), init="fan_in"
+        ),
+        "w_dkv": ParamSpec((cfg.d_model, r + dr), ("embed", "kv_lora"), init="fan_in"),
+        "kv_norm": ParamSpec((r,), ("norm",), init="ones"),
+        "w_uk": ParamSpec((r, h, dn), ("kv_lora", "heads", "qk_dim"), init="fan_in"),
+        "w_uv": ParamSpec((r, h, dv), ("kv_lora", "heads", "v_dim"), init="fan_in"),
+        "wo": ParamSpec((h, dv, cfg.d_model), ("heads", "v_dim", "embed"), init="fan_in"),
+    }
+
+
+def mla_cache_spec(cfg, batch: int, cache_len: int, *, dtype=jnp.bfloat16):
+    return {
+        "c_kv": ParamSpec(
+            (batch, cache_len, cfg.kv_lora_rank),
+            ("batch", "cache_seq", "kv_lora"),
+            init="zeros",
+            dtype=dtype,
+        ),
+        "k_pe": ParamSpec(
+            (batch, cache_len, cfg.qk_rope_dim),
+            ("batch", "cache_seq", "qk_dim"),
+            init="zeros",
+            dtype=dtype,
+        ),
+        "pos": ParamSpec(
+            (cache_len,), ("cache_seq",), init="const", scale=-1, dtype=jnp.int32
+        ),
+    }
+
+
+def _latents(params, x, cfg):
+    """x (B,T,Dm) -> c_kv (B,T,R) normed, k_pe (B,T,Dr) roped at arange(T)."""
+    dt = x.dtype
+    r = cfg.kv_lora_rank
+    dkv = jnp.einsum("btd,dr->btr", x, params["w_dkv"].astype(dt))
+    c_kv, k_pe = dkv[..., :r], dkv[..., r:]
+    c_kv = apply_norm({"scale": params["kv_norm"]}, c_kv, cfg)
+    return c_kv, k_pe
+
+
+def _queries(params, x, cfg, positions):
+    dt = x.dtype
+    dn = cfg.qk_nope_dim
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(dt))
+    q_nope, q_pe = q[..., :dn], q[..., dn:]
+    c, s = rope_angles(positions, cfg.qk_rope_dim, cfg.rope_theta)
+    q_pe = apply_rope(q_pe, c, s)
+    # absorb W_uk: q_lat (B,S,H,R)
+    q_lat = jnp.einsum("bshn,rhn->bshr", q_nope, params["w_uk"].astype(dt))
+    q_lat = constrain(q_lat, ("act_batch", "act_seq", "act_heads", None))
+    return q_lat, q_pe
+
+
+def _rope_1d(x, positions, theta):
+    """x (B,T,D) -> roped (no head axis)."""
+    c, s = rope_angles(positions, x.shape[-1], theta)
+    d = x.shape[-1]
+    x1, x2 = x[..., : d // 2], x[..., d // 2 :]
+    c = c.astype(x.dtype)
+    s = s.astype(x.dtype)
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+
+
+def _attend(params, q_lat, q_pe, c_kv, k_pe, mask, cfg):
+    dt = q_lat.dtype
+    scale = 1.0 / jnp.sqrt(jnp.asarray(cfg.qk_nope_dim + cfg.qk_rope_dim, jnp.float32))
+    logits = (
+        jnp.einsum("bshr,btr->bhst", q_lat, c_kv)
+        + jnp.einsum("bshk,btk->bhst", q_pe, k_pe)
+    ).astype(jnp.float32) * scale
+    logits = jnp.where(mask[:, None], logits, jnp.asarray(-1e30, jnp.float32))
+    probs = jax.nn.softmax(logits, -1).astype(dt)
+    lat = jnp.einsum("bhst,btr->bshr", probs, c_kv)
+    out = jnp.einsum("bshr,rhv->bshv", lat, params["w_uv"].astype(dt))
+    return jnp.einsum("bshv,hvd->bsd", out, params["wo"].astype(dt))
+
+
+def _attend_qchunked(params, q_lat, q_pe, c_kv, k_pe, cfg, q_chunk=512):
+    """Causal MLA scanning over query chunks: O(C·S) live logits — the
+    same bounded-working-set transformation as attention._qchunk_sdpa."""
+    dt = q_lat.dtype
+    b, s, h, r = q_lat.shape
+    c = min(q_chunk, s)
+    pad = (-s) % c
+    if pad:
+        q_lat = jnp.pad(q_lat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        q_pe = jnp.pad(q_pe, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    n = q_lat.shape[1] // c
+    ql = jnp.moveaxis(q_lat.reshape(b, n, c, h, r), 1, 0)
+    qp = jnp.moveaxis(q_pe.reshape(b, n, c, h, -1), 1, 0)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(cfg.qk_nope_dim + cfg.qk_rope_dim, jnp.float32))
+    k_pos = jnp.arange(s)
+
+    def body(_, inp):
+        qli, qpi, i = inp
+        qli = constrain(qli, ("act_batch", "act_attn_q_seq", "act_heads", None))
+        qpi = constrain(qpi, ("act_batch", "act_attn_q_seq", "act_heads", None))
+        logits = (
+            jnp.einsum("bshr,btr->bhst", qli, c_kv)
+            + jnp.einsum("bshk,btk->bhst", qpi, k_pe)
+        ).astype(jnp.float32) * scale
+        q_pos = i * c + jnp.arange(c)
+        mask = q_pos[:, None] >= k_pos[None, :]
+        logits = jnp.where(mask[None, None], logits, -1e30)
+        probs = jax.nn.softmax(logits, -1).astype(dt)
+        return None, jnp.einsum("bhst,btr->bshr", probs, c_kv)
+
+    _, lats = jax.lax.scan(body, None, (ql, qp, jnp.arange(n)))
+    lat = jnp.moveaxis(lats, 0, 1).reshape(b, n * c, h, r)[:, :s]
+    out = jnp.einsum("bshr,rhv->bshv", lat, params["w_uv"].astype(dt))
+    return jnp.einsum("bshv,hvd->bsd", out, params["wo"].astype(dt))
+
+
+def mla_attention(params, x, cfg, *, return_cache=False, cache_len=None):
+    """Full-sequence MLA (train / prefill). x (B,S,Dm)."""
+    b, s, _ = x.shape
+    pos = jnp.arange(s)
+    c_kv, k_pe = _latents(params, x, cfg)
+    k_pe = _rope_1d(k_pe, pos, cfg.rope_theta)
+    q_lat, q_pe = _queries(params, x, cfg, pos)
+    if s >= 2048 and getattr(cfg, "attention_impl", "blocked") == "blocked":
+        y = _attend_qchunked(
+            params, q_lat, q_pe, c_kv, k_pe, cfg,
+            q_chunk=getattr(cfg, "q_chunk", 512),
+        )
+    else:
+        mask = (pos[None, :, None] >= pos[None, None, :])
+        y = _attend(params, q_lat, q_pe, c_kv, k_pe, mask, cfg)
+    if not return_cache:
+        return y
+    cache_len = cache_len or s
+    pad = cache_len - s
+    cache = {
+        "c_kv": jnp.pad(c_kv, ((0, 0), (0, pad), (0, 0))),
+        "k_pe": jnp.pad(k_pe, ((0, 0), (0, pad), (0, 0))),
+        "pos": jnp.pad(pos, (0, pad), constant_values=-1).astype(jnp.int32),
+    }
+    return y, cache
+
+
+def mla_decode(params, x, cache, index, cfg):
+    """x (B,1,Dm); compressed-latent cache update + absorbed attention."""
+    b = x.shape[0]
+    t = cache["c_kv"].shape[1]
+    pos = jnp.full((1,), index, jnp.int32)
+    slot = jnp.mod(index, t)
+    c_new, kpe_new = _latents(params, x, cfg)
+    kpe_new = _rope_1d(kpe_new, pos, cfg.rope_theta)
+    c_kv = jax.lax.dynamic_update_slice(
+        cache["c_kv"], c_new.astype(cache["c_kv"].dtype), (0, slot, 0)
+    )
+    k_pe = jax.lax.dynamic_update_slice(
+        cache["k_pe"], kpe_new.astype(cache["k_pe"].dtype), (0, slot, 0)
+    )
+    pos_cache = jax.lax.dynamic_update_slice(cache["pos"], pos, (slot,))
+    q_lat, q_pe = _queries(params, x, cfg, pos)
+    valid = (pos_cache[None, None, :] <= index) & (pos_cache >= 0)[None, None, :]
+    mask = jnp.broadcast_to(valid, (b, 1, t))
+    dt = x.dtype
+    y = _attend(params, q_lat, q_pe, c_kv.astype(dt), k_pe.astype(dt), mask, cfg)
+    return y, {"c_kv": c_kv, "k_pe": k_pe, "pos": pos_cache}

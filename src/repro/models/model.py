@@ -1,0 +1,128 @@
+"""Uniform model API over all architecture families.
+
+``build_model(cfg)`` returns a ``Model`` exposing:
+  spec()                      — ParamSpec tree (single source of truth)
+  init(key)                   — materialized fp32 params
+  loss(params, batch)         — scalar LM loss (+ MoE aux) for training
+  forward(params, batch)      — logits
+  cache_spec(batch, seq)      — decode cache ParamSpec tree
+  prefill(params, batch)      — (last logits, caches)
+  decode_step(params, caches, batch, index) — (logits, new caches)
+
+Batch dicts:
+  LM families:  {tokens (B,S), labels (B,S)}
+  audio:        {frames (B,T_enc,D), tokens, labels}   (frontend stub)
+  vlm:          {tokens, labels, image_embeds (B,T_img,D)}  (stub)
+Decode batches carry {token (B,1)} plus the modality stubs.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import sharding as sh
+from repro.models import encdec as ED
+from repro.models import transformer as T
+from repro.models import vision as V
+
+__all__ = ["build_model", "Model", "cross_entropy"]
+
+
+def cross_entropy(logits, labels):
+    """Mean token cross-entropy in fp32. labels < 0 are masked."""
+    logits = logits.astype(jnp.float32)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    mask = (labels >= 0).astype(jnp.float32)
+    safe = jnp.maximum(labels, 0)
+    nll = -jnp.take_along_axis(logp, safe[..., None], axis=-1)[..., 0]
+    return (nll * mask).sum() / jnp.clip(mask.sum(), 1.0)
+
+
+class Model:
+    def __init__(self, cfg):
+        self.cfg = cfg
+
+    # ---- params ----
+    def spec(self):
+        c = self.cfg
+        if c.family == "audio":
+            return ED.encdec_spec(c)
+        if c.family == "vlm":
+            return V.vlm_spec(c)
+        return T.model_spec(c)
+
+    def init(self, key):
+        return sh.init_params(key, self.spec())
+
+    def param_count(self) -> int:
+        return sh.count_params(self.spec())
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE: routed top-k + shared only)."""
+        c = self.cfg
+        total = self.param_count()
+        if not c.num_experts:
+            return total
+        dff = c.moe_d_ff or c.d_ff
+        per_expert = 3 * c.d_model * dff
+        moe_layers = c.num_layers - c.first_dense_layers
+        inactive = moe_layers * (c.num_experts - c.num_experts_per_tok) * per_expert
+        return total - inactive
+
+    # ---- training ----
+    def forward(self, params, batch):
+        c = self.cfg
+        if c.family == "audio":
+            return ED.encdec_forward(params, batch["frames"], batch["tokens"], c)
+        if c.family == "vlm":
+            return V.vlm_forward(params, batch["tokens"], batch["image_embeds"], c)
+        logits, _ = T.forward(params, batch["tokens"], c)
+        return logits
+
+    def loss(self, params, batch):
+        c = self.cfg
+        if c.family == "audio":
+            logits = ED.encdec_forward(params, batch["frames"], batch["tokens"], c)
+            return cross_entropy(logits, batch["labels"])
+        if c.family == "vlm":
+            logits = V.vlm_forward(params, batch["tokens"], batch["image_embeds"], c)
+            return cross_entropy(logits, batch["labels"])
+        logits, aux = T.forward(params, batch["tokens"], c)
+        return cross_entropy(logits, batch["labels"]) + aux
+
+    # ---- serving ----
+    def cache_spec(self, batch: int, seq_len: int):
+        c = self.cfg
+        if c.family == "audio":
+            return ED.decoder_cache_spec(c, batch, seq_len)
+        if c.family == "vlm":
+            return V.vlm_cache_spec(c, batch, seq_len)
+        return T.cache_spec_tree(c, batch, seq_len)
+
+    def prefill(self, params, batch, *, max_len=None):
+        c = self.cfg
+        if c.family == "audio":
+            enc = ED.encode(params, batch["frames"], c)
+            logits = ED.decoder_forward(params, batch["tokens"], enc, c)
+            cross = ED.precompute_cross_kv(params, enc, c)
+            return logits[:, -1, :], {"cross": cross}
+        if c.family == "vlm":
+            return V.vlm_prefill(
+                params, batch["tokens"], batch["image_embeds"], c, max_len=max_len
+            )
+        return T.prefill(params, batch["tokens"], c, max_len=max_len)
+
+    def decode_step(self, params, caches, batch, index):
+        c = self.cfg
+        if c.family == "audio":
+            return ED.encdec_decode_step(params, caches, batch["token"], index, c)
+        if c.family == "vlm":
+            return V.vlm_decode_step(
+                params, caches, batch["token"], batch["image_embeds"], index, c
+            )
+        return T.decode_step(params, caches, batch["token"], index, c)
+
+
+def build_model(cfg) -> Model:
+    return Model(cfg)

@@ -1,0 +1,123 @@
+"""Mixture-of-Experts with capacity-based GSPMD dispatch (GShard-style).
+
+Routing is expressed as dense einsums over an (experts, capacity) buffer so
+that expert parallelism falls out of sharding the ``experts`` axis — GSPMD
+inserts the all-to-alls. Supports top-k routing with capacity dropping,
+shared (always-on) experts (DeepSeek-V2), and a load-balancing aux loss.
+
+Sharding choices (per-arch rules override):
+* many small experts (deepseek, 64e)  -> experts axis sharded over ``model``
+* few large experts (mixtral, 8e<16)  -> experts replicated, ``expert_mlp``
+  (d_ff) sharded over ``model`` (plain TP inside each expert)
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.context import constrain
+from repro.distributed.sharding import ParamSpec
+from repro.models.layers import mlp_spec, apply_mlp, _act
+
+__all__ = ["moe_spec", "apply_moe"]
+
+
+def moe_spec(cfg):
+    e, dff, dm = cfg.num_experts, cfg.moe_d_ff or cfg.d_ff, cfg.d_model
+    spec = {
+        "router": ParamSpec((dm, e), ("embed", "experts"), init="fan_in"),
+        "wi": ParamSpec((e, dm, dff), ("experts", "embed", "expert_mlp"), init="fan_in"),
+        "wg": ParamSpec((e, dm, dff), ("experts", "embed", "expert_mlp"), init="fan_in"),
+        "wo": ParamSpec((e, dff, dm), ("experts", "expert_mlp", "embed"), init="fan_in"),
+    }
+    if cfg.num_shared_experts:
+        spec["shared"] = mlp_spec(cfg, d_ff=cfg.num_shared_experts * (cfg.moe_d_ff or cfg.d_ff))
+    return spec
+
+
+def _group_size(tokens: int, cfg) -> int:
+    g = min(getattr(cfg, "moe_group_size", 2048), tokens)
+    while tokens % g:
+        g -= 1
+    return g
+
+
+def _capacity(group_tokens: int, cfg) -> int:
+    cap = int(
+        cfg.num_experts_per_tok * group_tokens * cfg.capacity_factor
+        / cfg.num_experts
+    )
+    return max(cap, min(4, group_tokens))
+
+
+def apply_moe(params, x, cfg):
+    """x (B,S,D) -> (out (B,S,D), aux_loss scalar).
+
+    GShard-style GROUPED dispatch: tokens are split into groups of
+    ~``moe_group_size`` and capacity is per-group, so the dispatch/combine
+    einsums cost O(T · E · C_g · D) with C_g = k·g·cf/E — linear in T.
+    (A single global capacity would make them O(T²), which at 1M-token
+    steps dwarfs the experts themselves — measured 200x in the dry-run.)
+    """
+    dt = x.dtype
+    b, s, d = x.shape
+    e, k = cfg.num_experts, cfg.num_experts_per_tok
+    t = b * s
+    gs = _group_size(t, cfg)
+    ng = t // gs
+    cap = _capacity(gs, cfg)
+    xt = x.reshape(ng, gs, d)
+
+    logits = jnp.einsum("gtd,de->gte", xt, params["router"].astype(dt)).astype(
+        jnp.float32
+    )
+    probs = jax.nn.softmax(logits, -1)  # (G, gs, E)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)  # (G, gs, k)
+    gate_vals = gate_vals / jnp.clip(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # position of each (token, choice) in its expert's per-group buffer
+    onehot = jax.nn.one_hot(expert_idx, e, dtype=jnp.int32)  # (G, gs, k, E)
+    # serialize choices within the group: choice 0 of all tokens first
+    flat = onehot.transpose(0, 2, 1, 3).reshape(ng, k * gs, e)
+    pos_in_expert = (
+        (jnp.cumsum(flat, axis=1) - flat)
+        .reshape(ng, k, gs, e)
+        .transpose(0, 2, 1, 3)
+    )
+    pos = (pos_in_expert * onehot).sum(-1)  # (G, gs, k)
+    within = (pos < cap) & (onehot.sum(-1) > 0)
+
+    cap_onehot = jax.nn.one_hot(pos, cap, dtype=dt) * within[..., None].astype(dt)
+    disp = jnp.einsum("gtke,gtkc->gtec", onehot.astype(dt), cap_onehot)
+    comb = jnp.einsum(
+        "gtk,gtke,gtkc->gtec", gate_vals.astype(dt), onehot.astype(dt), cap_onehot
+    )
+    # the group dim follows the batch sharding — leaving it unconstrained
+    # lets GSPMD replicate the dispatch/combine tensors (measured: 8 TB of
+    # all-gathers per step on mixtral train_4k)
+    disp = constrain(disp, ("act_moe_group", None, "act_experts", None))
+    comb = constrain(comb, ("act_moe_group", None, "act_experts", None))
+
+    expert_in = jnp.einsum("gtec,gtd->gecd", disp, xt)  # (G,E,C,D)
+    expert_in = constrain(
+        expert_in, ("act_moe_group", "act_experts", None, "act_embed")
+    )
+    h = jnp.einsum("gecd,edf->gecf", expert_in, params["wi"].astype(dt))
+    g_ = jnp.einsum("gecd,edf->gecf", expert_in, params["wg"].astype(dt))
+    h = _act(h, cfg.act) * g_
+    h = constrain(h, ("act_moe_group", "act_experts", None, "act_expert_mlp"))
+    expert_out = jnp.einsum("gecf,efd->gecd", h, params["wo"].astype(dt))
+    expert_out = constrain(
+        expert_out, ("act_moe_group", "act_experts", None, "act_embed")
+    )
+    out = jnp.einsum("gtec,gecd->gtd", comb, expert_out).reshape(b, s, d)
+
+    if "shared" in params:
+        out = out + apply_mlp(params["shared"], x, cfg)
+
+    # load-balance aux loss (Switch): E * Σ_e f_e · p_e
+    density = onehot.astype(jnp.float32).sum(2).mean((0, 1))
+    router_prob = probs.mean((0, 1))
+    aux = (density * router_prob).sum() * e * cfg.router_aux_weight
+    return out, aux

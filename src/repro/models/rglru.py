@@ -1,0 +1,119 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+Temporal-mixing block: two linear branches to ``lru_width``; the x-branch
+passes a causal conv1d then the Real-Gated LRU; the gate branch multiplies
+in with GeLU. Train/prefill uses an associative scan (O(log L) depth);
+decode is a single-step recurrence with a constant-size state — like the
+paper's running-sum, the whole history is folded into O(width) state.
+
+  r_t = σ(W_a x_t + b_a)          recurrence gate
+  i_t = σ(W_x x_t + b_x)          input gate
+  a_t = exp(-c · softplus(Λ) · r_t)
+  h_t = a_t h_{t-1} + sqrt(1 - a_t²) · (i_t x_t)
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.context import constrain
+from repro.distributed.sharding import ParamSpec
+
+__all__ = ["rglru_spec", "rglru_state_spec", "apply_rglru", "rglru_decode"]
+
+_C = 8.0  # Griffin's fixed recurrence sharpness
+
+
+def _width(cfg) -> int:
+    return cfg.lru_width or cfg.d_model
+
+
+def rglru_spec(cfg):
+    w = _width(cfg)
+    return {
+        "w_x_branch": ParamSpec((cfg.d_model, w), ("embed", "mlp"), init="fan_in"),
+        "w_gate_branch": ParamSpec((cfg.d_model, w), ("embed", "mlp"), init="fan_in"),
+        "conv_w": ParamSpec((cfg.conv_width, w), ("conv", "mlp"), init="fan_in"),
+        "conv_b": ParamSpec((w,), ("mlp",), init="zeros"),
+        "w_a": ParamSpec((w, w), ("mlp", "mlp"), init="fan_in"),
+        "b_a": ParamSpec((w,), ("mlp",), init="zeros"),
+        "w_i": ParamSpec((w, w), ("mlp", "mlp"), init="fan_in"),
+        "b_i": ParamSpec((w,), ("mlp",), init="zeros"),
+        "lambda_": ParamSpec((w,), ("mlp",), init="const", scale=1.0),
+        "w_out": ParamSpec((w, cfg.d_model), ("mlp", "embed"), init="fan_in"),
+    }
+
+
+def rglru_state_spec(cfg, batch: int, *, dtype=jnp.float32):
+    w = _width(cfg)
+    return {
+        "lru": ParamSpec((batch, w), ("batch", "mlp"), init="zeros", dtype=dtype),
+        "conv": ParamSpec(
+            (batch, cfg.conv_width - 1, w),
+            ("batch", "conv", "mlp"),
+            init="zeros",
+            dtype=dtype,
+        ),
+    }
+
+
+def _gates(params, x):
+    """x (..., W) fp32 -> a (decay), beta·input term."""
+    r = jax.nn.sigmoid(x @ params["w_a"].astype(jnp.float32) + params["b_a"])
+    i = jax.nn.sigmoid(x @ params["w_i"].astype(jnp.float32) + params["b_i"])
+    log_a = -_C * jax.nn.softplus(params["lambda_"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.clip(1.0 - a**2, 1e-12)) * (i * x)
+    return a, b
+
+
+def _conv(params, x, cfg):
+    k = cfg.conv_width
+    pad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    w = params["conv_w"].astype(x.dtype)
+    out = sum(pad[:, i : i + x.shape[1], :] * w[i][None, None, :] for i in range(k))
+    return out + params["conv_b"].astype(x.dtype)
+
+
+def apply_rglru(params, u, cfg, *, return_state: bool = False):
+    """u (B,L,Dm) -> (B,L,Dm) [, state]."""
+    dt = u.dtype
+    xb = jnp.einsum("bld,dw->blw", u, params["w_x_branch"].astype(dt))
+    gb = jnp.einsum("bld,dw->blw", u, params["w_gate_branch"].astype(dt))
+    xb = constrain(xb, ("act_batch", "act_seq", "act_mlp"))
+    gb = constrain(gb, ("act_batch", "act_seq", "act_mlp"))
+    xc = _conv(params, xb, cfg).astype(jnp.float32)
+    a, b = _gates(params, xc)
+
+    def combine(p, q):
+        a1, b1 = p
+        a2, b2 = q
+        return a1 * a2, a2 * b1 + b2
+
+    a_sc, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    y = (h.astype(dt)) * jax.nn.gelu(gb)
+    out = jnp.einsum("blw,wd->bld", y, params["w_out"].astype(dt))
+    if return_state:
+        tail = jnp.pad(xb, ((0, 0), (cfg.conv_width - 1, 0), (0, 0)))[
+            :, -(cfg.conv_width - 1) :, :
+        ]
+        return out, {"lru": h[:, -1, :], "conv": tail.astype(jnp.float32)}
+    return out
+
+
+def rglru_decode(params, u, state, cfg):
+    """u (B,1,Dm); state {lru (B,W), conv (B,k-1,W)}."""
+    dt = u.dtype
+    xb = jnp.einsum("bld,dw->blw", u, params["w_x_branch"].astype(dt))  # (B,1,W)
+    gb = jnp.einsum("bld,dw->blw", u, params["w_gate_branch"].astype(dt))
+    window = jnp.concatenate([state["conv"].astype(dt), xb], axis=1)  # (B,k,W)
+    w = params["conv_w"].astype(dt)
+    xc = (jnp.einsum("bkw,kw->bw", window, w) + params["conv_b"].astype(dt)).astype(
+        jnp.float32
+    )
+    a, b = _gates(params, xc)
+    h = a * state["lru"].astype(jnp.float32) + b
+    y = h[:, None, :].astype(dt) * jax.nn.gelu(gb)
+    out = jnp.einsum("blw,wd->bld", y, params["w_out"].astype(dt))
+    return out, {"lru": h, "conv": window[:, 1:, :].astype(jnp.float32)}

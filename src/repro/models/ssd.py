@@ -1,0 +1,248 @@
+"""Mamba-2 SSD (state-space duality) mixer (arXiv:2405.21060).
+
+Train/prefill uses the chunked SSD algorithm: quadratic attention-like
+compute inside chunks of length Q, linear recurrence across chunk boundary
+states — O(L·Q) instead of O(L²). Decode is the pure recurrence with a
+constant-size state (B, H, P, N): the attention-free arch's "KV cache".
+
+Shapes follow the minimal reference implementation of the paper:
+  x:  (B, L, H, P)   headdim P
+  dt: (B, L, H)      softplus-ed step sizes (A multiplied in)
+  B,C:(B, L, G, N)   state dim N, G groups broadcast over heads
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.context import constrain
+from repro.distributed.sharding import ParamSpec
+from repro.models.layers import apply_norm
+
+__all__ = ["ssd_spec", "ssd_state_spec", "apply_ssd", "ssd_decode", "d_inner"]
+
+
+def d_inner(cfg) -> int:
+    return cfg.ssm_expand * cfg.d_model
+
+
+def _heads(cfg) -> int:
+    return d_inner(cfg) // cfg.ssm_head_dim
+
+
+def ssd_spec(cfg):
+    di = d_inner(cfg)
+    h = _heads(cfg)
+    g, n = cfg.ssm_groups, cfg.ssm_state_dim
+    conv_dim = di + 2 * g * n
+    return {
+        # in_proj emits [z (di), x (di), B (g*n), C (g*n), dt (h)]
+        "w_in": ParamSpec(
+            (cfg.d_model, 2 * di + 2 * g * n + h), ("embed", "mlp"), init="fan_in"
+        ),
+        "conv_w": ParamSpec(
+            (cfg.conv_width, conv_dim), ("conv", "mlp"), init="fan_in"
+        ),
+        "conv_b": ParamSpec((conv_dim,), ("mlp",), init="zeros"),
+        "A_log": ParamSpec((h,), ("heads",), init="zeros"),
+        "D": ParamSpec((h,), ("heads",), init="ones"),
+        "dt_bias": ParamSpec((h,), ("heads",), init="zeros"),
+        "norm": ParamSpec((di,), ("norm",), init="ones"),
+        "w_out": ParamSpec((di, cfg.d_model), ("mlp", "embed"), init="fan_in"),
+    }
+
+
+def ssd_state_spec(cfg, batch: int, *, dtype=jnp.float32):
+    """Decode state: SSM state + rolling conv window."""
+    di = d_inner(cfg)
+    h = _heads(cfg)
+    g, n = cfg.ssm_groups, cfg.ssm_state_dim
+    conv_dim = di + 2 * g * n
+    return {
+        "ssm": ParamSpec(
+            (batch, h, cfg.ssm_head_dim, n),
+            ("batch", "heads", "head_dim", "state"),
+            init="zeros",
+            dtype=dtype,
+        ),
+        "conv": ParamSpec(
+            (batch, cfg.conv_width - 1, conv_dim),
+            ("batch", "conv", "mlp"),
+            init="zeros",
+            dtype=dtype,
+        ),
+    }
+
+
+def _split_proj(params, u, cfg):
+    dt_ = u.dtype
+    di = d_inner(cfg)
+    h = _heads(cfg)
+    gn = cfg.ssm_groups * cfg.ssm_state_dim
+    zxbcdt = jnp.einsum("bld,dk->blk", u, params["w_in"].astype(dt_))
+    zxbcdt = constrain(zxbcdt, ("act_batch", "act_seq", "act_mlp"))
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di : di + di + 2 * gn]
+    dt = zxbcdt[..., di + di + 2 * gn :]
+    return z, xbc, dt
+
+
+def _split_xbc(xbc, cfg):
+    di = d_inner(cfg)
+    gn = cfg.ssm_groups * cfg.ssm_state_dim
+    x = xbc[..., :di]
+    b = xbc[..., di : di + gn]
+    c = xbc[..., di + gn :]
+    return x, b, c
+
+
+def _causal_conv(xbc, params, cfg):
+    """Depthwise causal conv1d over (B, L, C) with width-k kernel."""
+    k = cfg.conv_width
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    dt_ = xbc.dtype
+    w = params["conv_w"].astype(dt_)  # (k, C)
+    out = sum(
+        pad[:, i : i + xbc.shape[1], :] * w[i][None, None, :] for i in range(k)
+    )
+    return jax.nn.silu(out + params["conv_b"].astype(dt_))
+
+
+def _ssd_chunked(x, dt, B, C, A, cfg):
+    """Chunked SSD scan. x (B,L,H,P); dt (B,L,H); B,C (B,L,G,N); A (H,)<0.
+
+    Returns y (B,L,H,P). Reference: Mamba-2 paper listing 1, re-derived for
+    einsum. G groups are broadcast to H heads.
+    """
+    bsz, L, H, P = x.shape
+    G = B.shape[2]
+    N = B.shape[3]
+    Q = min(cfg.ssm_chunk, L)
+    assert L % Q == 0, (L, Q)
+    nc = L // Q
+    rep = H // G
+
+    xs = x.reshape(bsz, nc, Q, H, P)
+    dts = dt.reshape(bsz, nc, Q, H)
+    Bs = jnp.repeat(B.reshape(bsz, nc, Q, G, N), rep, axis=3)
+    Cs = jnp.repeat(C.reshape(bsz, nc, Q, G, N), rep, axis=3)
+
+    dA = dts * A[None, None, None, :]               # (b,c,q,h) negative
+    dA_cum = jnp.cumsum(dA, axis=2)                  # within-chunk cumsum
+
+    # intra-chunk (quadratic in Q): att[i,j] = C_i·B_j exp(dA_cum_i - dA_cum_j) dt_j
+    seg = dA_cum[:, :, :, None, :] - dA_cum[:, :, None, :, :]  # (b,c,i,j,h)
+    causal = jnp.tril(jnp.ones((Q, Q), bool))
+    decay = jnp.where(causal[None, None, :, :, None], jnp.exp(seg), 0.0)
+    att = jnp.einsum("bcihn,bcjhn->bcijh", Cs, Bs) * decay
+    y_intra = jnp.einsum("bcijh,bcjh,bcjhp->bcihp", att, dts, xs)
+
+    # chunk-boundary states: S_c = Σ_j exp(dA_cum_Q - dA_cum_j) dt_j B_j x_j
+    decay_out = jnp.exp(dA_cum[:, :, -1:, :] - dA_cum)          # (b,c,q,h)
+    S = jnp.einsum("bcqh,bcqh,bcqhn,bcqhp->bchpn",
+                   decay_out, dts, Bs, xs)
+
+    # inter-chunk recurrence over c: S_prev_{c} = Σ_{c'<c} (Π decay) S_{c'}
+    chunk_decay = jnp.exp(dA_cum[:, :, -1, :])                  # (b,c,h)
+
+    def scan_fn(carry, inp):
+        s_prev = carry
+        s_c, dec = inp
+        out = s_prev
+        new = s_prev * dec[:, :, None, None] + s_c
+        return new, out
+
+    S_t = jnp.moveaxis(S, 1, 0)                 # (c,b,h,p,n)
+    dec_t = jnp.moveaxis(chunk_decay, 1, 0)     # (c,b,h)
+    init = jnp.zeros_like(S_t[0])
+    final_state, S_prev_t = jax.lax.scan(scan_fn, init, (S_t, dec_t))
+    S_prev = jnp.moveaxis(S_prev_t, 0, 1)       # (b,c,h,p,n)
+
+    # inter-chunk contribution: y_j += C_j exp(dA_cum_j) · S_prev
+    decay_in = jnp.exp(dA_cum)                  # (b,c,q,h)
+    y_inter = jnp.einsum("bcqhn,bchpn,bcqh->bcqhp", Cs, S_prev, decay_in)
+
+    y = (y_intra + y_inter).reshape(bsz, L, H, P)
+    return y, final_state
+
+
+def apply_ssd(params, u, cfg, *, return_state: bool = False):
+    """Full Mamba-2 block (train / prefill). u (B,L,Dm) -> (B,L,Dm)."""
+    dt_ = u.dtype
+    h = _heads(cfg)
+    P = cfg.ssm_head_dim
+    z, xbc, dt_raw = _split_proj(params, u, cfg)
+    xbc_conv = _causal_conv(xbc, params, cfg)
+    x, B, C = _split_xbc(xbc_conv, cfg)
+    bsz, L, _ = x.shape
+    x = x.reshape(bsz, L, h, P)
+    B = B.reshape(bsz, L, cfg.ssm_groups, cfg.ssm_state_dim)
+    C = C.reshape(bsz, L, cfg.ssm_groups, cfg.ssm_state_dim)
+    dt = jax.nn.softplus(
+        dt_raw.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32)
+    )
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    # pad L to a chunk multiple; dt=0 on padding keeps the recurrence exact
+    # (decay exp(0)=1, input contribution dt·x=0)
+    pad = (-L) % min(cfg.ssm_chunk, L) if L else 0
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+    y, state = _ssd_chunked(
+        x.astype(jnp.float32), dt, B.astype(jnp.float32), C.astype(jnp.float32), A, cfg
+    )
+    if pad:
+        y = y[:, :L]
+        x = x[:, :L]
+    y = y + x.astype(jnp.float32) * params["D"].astype(jnp.float32)[None, None, :, None]
+    y = y.reshape(bsz, L, h * P).astype(dt_)
+    y = y * jax.nn.silu(z)
+    y = apply_norm({"scale": params["norm"]}, y, cfg)
+    out = jnp.einsum("bld,dk->blk", y, params["w_out"].astype(dt_))
+    if return_state:
+        conv_tail = jnp.pad(xbc, ((0, 0), (cfg.conv_width - 1, 0), (0, 0)))[
+            :, -(cfg.conv_width - 1) :, :
+        ]
+        return out, {"ssm": state, "conv": conv_tail.astype(jnp.float32)}
+    return out
+
+
+def ssd_decode(params, u, state, cfg):
+    """Single-token recurrence. u (B,1,Dm); state {ssm, conv}."""
+    dt_ = u.dtype
+    h = _heads(cfg)
+    P = cfg.ssm_head_dim
+    z, xbc, dt_raw = _split_proj(params, u, cfg)  # (B,1,·)
+    # rolling conv window
+    window = jnp.concatenate([state["conv"].astype(dt_), xbc], axis=1)  # (B,k,C)
+    w = params["conv_w"].astype(dt_)
+    conv_out = jnp.einsum("bkc,kc->bc", window, w) + params["conv_b"].astype(dt_)
+    xbc_conv = jax.nn.silu(conv_out)[:, None, :]
+    x, B, C = _split_xbc(xbc_conv, cfg)
+    bsz = x.shape[0]
+    x = x.reshape(bsz, h, P).astype(jnp.float32)
+    B = B.reshape(bsz, cfg.ssm_groups, cfg.ssm_state_dim).astype(jnp.float32)
+    C = C.reshape(bsz, cfg.ssm_groups, cfg.ssm_state_dim).astype(jnp.float32)
+    rep = h // cfg.ssm_groups
+    B = jnp.repeat(B, rep, axis=1)
+    C = jnp.repeat(C, rep, axis=1)
+    dt = jax.nn.softplus(
+        dt_raw[:, 0].astype(jnp.float32) + params["dt_bias"].astype(jnp.float32)
+    )  # (B,H)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    decay = jnp.exp(dt * A[None, :])  # (B,H)
+    s = state["ssm"].astype(jnp.float32)
+    s = s * decay[:, :, None, None] + jnp.einsum(
+        "bh,bhn,bhp->bhpn", dt, B, x
+    )
+    y = jnp.einsum("bhn,bhpn->bhp", C, s)
+    y = y + x * params["D"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(bsz, 1, h * P).astype(dt_)
+    y = y * jax.nn.silu(z)
+    y = apply_norm({"scale": params["norm"]}, y, cfg)
+    out = jnp.einsum("bld,dk->blk", y, params["w_out"].astype(dt_))
+    new_state = {"ssm": s, "conv": window[:, 1:, :].astype(jnp.float32)}
+    return out, new_state

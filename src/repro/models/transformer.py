@@ -1,0 +1,326 @@
+"""Decoder-only transformer assembly with segment/pattern layer scanning.
+
+A model is a list of **segments**; each segment scans a repeating
+**pattern** of blocks (pattern length 1 = plain homogeneous stack). This
+one mechanism covers every assigned architecture without unrolling:
+
+  qwen2.5-32b        [(64, [attn-global + mlp])]
+  command-r-35b      [(40, [parallel attn+mlp])]
+  h2o-danube-1.8b    [(24, [attn-swa + mlp])]
+  gemma3-1b          [(4, [5×local, global])] + [(2, [local])]
+  deepseek-v2-lite   [(1, [mla + dense-mlp])] + [(26, [mla + moe])]
+  mixtral-8x7b       [(32, [attn-swa + moe])]
+  recurrentgemma-9b  [(12, [rec, rec, attn-local])] + [(2, [rec])]
+  mamba2-780m        [(48, [ssd])]
+
+Scanned params are stacked (repeat, ...) per pattern position; caches
+likewise, so ring (windowed) and full caches of different shapes can
+coexist across segments. The scan body is remat-wrapped when cfg.remat.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.context import constrain
+from repro.distributed.sharding import ParamSpec, stack_spec
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models import mla as M
+from repro.models import moe as MOE
+from repro.models import rglru as R
+from repro.models import ssd as S
+
+__all__ = ["BlockDesc", "stack_plan", "model_spec", "cache_spec_tree",
+           "forward", "prefill", "decode_step"]
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockDesc:
+    mixer: str                 # attn | mla | ssd | rec
+    ffn: str | None = "mlp"    # mlp | moe | None
+    window: int = 0            # 0 = global attention
+    d_ff: int | None = None    # per-block MLP width override
+    parallel: bool = False     # command-r style parallel residual
+
+
+# ---------------------------------------------------------------------------
+# Stack plans per architecture family
+# ---------------------------------------------------------------------------
+
+
+def stack_plan(cfg) -> list[tuple[int, list[BlockDesc]]]:
+    if cfg.family == "ssm":
+        return [(cfg.num_layers, [BlockDesc("ssd", ffn=None)])]
+
+    if cfg.family == "hybrid":
+        pat = list(cfg.block_pattern) or ["rec", "rec", "attn"]
+        descs = [
+            BlockDesc("rec")
+            if p == "rec"
+            else BlockDesc("attn", window=cfg.local_window or 2048)
+            for p in pat
+        ]
+        groups = cfg.num_layers // len(pat)
+        rem = cfg.num_layers - groups * len(pat)
+        plan = [(groups, descs)]
+        if rem:
+            plan.append((rem, [BlockDesc("rec")]))
+        return plan
+
+    ffn = "moe" if cfg.num_experts else "mlp"
+    mixer = "mla" if cfg.use_mla else "attn"
+    window = cfg.sliding_window or 0
+
+    plan: list[tuple[int, list[BlockDesc]]] = []
+    n = cfg.num_layers
+    if cfg.first_dense_layers:
+        plan.append(
+            (cfg.first_dense_layers, [BlockDesc(mixer, ffn="mlp", d_ff=cfg.d_ff)])
+        )
+        n -= cfg.first_dense_layers
+
+    if cfg.local_global_ratio:
+        r = cfg.local_global_ratio
+        local = BlockDesc(mixer, ffn=ffn, window=cfg.local_window or 1024,
+                          parallel=cfg.parallel_block)
+        glob = BlockDesc(mixer, ffn=ffn, window=0, parallel=cfg.parallel_block)
+        groups = n // (r + 1)
+        plan.append((groups, [local] * r + [glob]))
+        rem = n - groups * (r + 1)
+        if rem:
+            plan.append((rem, [local]))
+        return plan
+
+    plan.append(
+        (n, [BlockDesc(mixer, ffn=ffn, window=window, parallel=cfg.parallel_block)])
+    )
+    return plan
+
+
+# ---------------------------------------------------------------------------
+# One block: spec + apply
+# ---------------------------------------------------------------------------
+
+
+def block_spec(cfg, desc: BlockDesc):
+    spec: dict[str, Any] = {"ln1": L.norm_spec(cfg)}
+    if desc.mixer == "attn":
+        spec["mixer"] = A.attn_spec(cfg)
+    elif desc.mixer == "mla":
+        spec["mixer"] = M.mla_spec(cfg)
+    elif desc.mixer == "ssd":
+        spec["mixer"] = S.ssd_spec(cfg)
+    elif desc.mixer == "rec":
+        spec["mixer"] = R.rglru_spec(cfg)
+    else:
+        raise ValueError(desc.mixer)
+    if desc.ffn == "mlp":
+        spec["mlp"] = L.mlp_spec(cfg, d_ff=desc.d_ff)
+        if not desc.parallel:
+            spec["ln2"] = L.norm_spec(cfg)
+    elif desc.ffn == "moe":
+        spec["moe"] = MOE.moe_spec(cfg)
+        spec["ln2"] = L.norm_spec(cfg)
+    return spec
+
+
+def block_cache_spec(cfg, desc: BlockDesc, batch: int, seq_len: int):
+    """Decode-time cache for one block. Ring caches for windowed layers."""
+    if desc.mixer == "attn":
+        cache_len = min(desc.window, seq_len) if desc.window else seq_len
+        return A.cache_spec(cfg, batch, cache_len, dtype=jnp.dtype(cfg.dtype))
+    if desc.mixer == "mla":
+        return M.mla_cache_spec(cfg, batch, seq_len, dtype=jnp.dtype(cfg.dtype))
+    if desc.mixer == "ssd":
+        return S.ssd_state_spec(cfg, batch)
+    if desc.mixer == "rec":
+        return R.rglru_state_spec(cfg, batch)
+    raise ValueError(desc.mixer)
+
+
+def apply_block(
+    params,
+    x,
+    cfg,
+    desc: BlockDesc,
+    *,
+    mode: str,
+    cache=None,
+    index=None,
+    max_len=None,
+):
+    """x -> (x, new_cache, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = L.apply_norm(params["ln1"], x, cfg)
+    new_cache = cache
+
+    if desc.mixer == "attn":
+        if mode == "decode":
+            att, new_cache = A.decode_attention(
+                params["mixer"], h, cache, index, cfg, window=desc.window
+            )
+        elif mode == "prefill":
+            target = max_len or x.shape[1]
+            cache_len = min(desc.window, target) if desc.window else target
+            att, new_cache = A.prefill_attention(
+                params["mixer"], h, cfg, window=desc.window, cache_len=cache_len
+            )
+        else:
+            att = A.attention(params["mixer"], h, cfg, window=desc.window)
+    elif desc.mixer == "mla":
+        if mode == "decode":
+            att, new_cache = M.mla_decode(params["mixer"], h, cache, index, cfg)
+        elif mode == "prefill":
+            att, new_cache = M.mla_attention(
+                params["mixer"], h, cfg, return_cache=True,
+                cache_len=max_len or x.shape[1],
+            )
+        else:
+            att = M.mla_attention(params["mixer"], h, cfg)
+    elif desc.mixer == "ssd":
+        if mode == "decode":
+            att, new_cache = S.ssd_decode(params["mixer"], h, cache, cfg)
+        elif mode == "prefill":
+            att, new_cache = S.apply_ssd(params["mixer"], h, cfg, return_state=True)
+        else:
+            att = S.apply_ssd(params["mixer"], h, cfg)
+    elif desc.mixer == "rec":
+        if mode == "decode":
+            att, new_cache = R.rglru_decode(params["mixer"], h, cache, cfg)
+        elif mode == "prefill":
+            att, new_cache = R.apply_rglru(params["mixer"], h, cfg, return_state=True)
+        else:
+            att = R.apply_rglru(params["mixer"], h, cfg)
+    else:
+        raise ValueError(desc.mixer)
+
+    if desc.parallel and desc.ffn == "mlp":
+        # command-r: attn and mlp read the same norm, summed residual
+        x = x + att + L.apply_mlp(params["mlp"], h, cfg)
+        return x, new_cache, aux
+
+    x = x + att
+    if desc.ffn == "mlp":
+        h2 = L.apply_norm(params["ln2"], x, cfg)
+        x = x + L.apply_mlp(params["mlp"], h2, cfg)
+    elif desc.ffn == "moe":
+        h2 = L.apply_norm(params["ln2"], x, cfg)
+        out, aux_moe = MOE.apply_moe(params["moe"], h2, cfg)
+        x = x + out
+        aux = aux + aux_moe
+    return x, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# Whole-model spec
+# ---------------------------------------------------------------------------
+
+
+def model_spec(cfg):
+    plan = stack_plan(cfg)
+    segments = []
+    for repeat, pattern in plan:
+        segments.append(
+            [stack_spec(block_spec(cfg, d), repeat) for d in pattern]
+        )
+    return {
+        "embed": L.embed_spec(cfg),
+        "final_norm": L.norm_spec(cfg),
+        "segments": segments,
+    }
+
+
+def cache_spec_tree(cfg, batch: int, seq_len: int):
+    plan = stack_plan(cfg)
+    segments = []
+    for repeat, pattern in plan:
+        segments.append(
+            [
+                stack_spec(block_cache_spec(cfg, d, batch, seq_len), repeat)
+                for d in pattern
+            ]
+        )
+    return segments
+
+
+# ---------------------------------------------------------------------------
+# Execution
+# ---------------------------------------------------------------------------
+
+
+def _run_segments(params, x, cfg, *, mode, caches=None, index=None, max_len=None):
+    plan = stack_plan(cfg)
+    aux_total = jnp.zeros((), jnp.float32)
+    new_caches = []
+    for seg_i, (repeat, pattern) in enumerate(plan):
+        seg_params = tuple(params["segments"][seg_i])
+        seg_caches = tuple(caches[seg_i]) if caches is not None else None
+
+        def body(carry, xs, pattern=pattern):
+            xc, aux = carry
+            if seg_caches is not None:
+                plist, clist = xs
+            else:
+                plist, clist = xs, (None,) * len(pattern)
+            ncs = []
+            for desc, p, c in zip(pattern, plist, clist):
+                xc, nc, a = apply_block(
+                    p, xc, cfg, desc, mode=mode, cache=c, index=index,
+                    max_len=max_len,
+                )
+                xc = constrain(xc, ("act_batch", "act_seq", "act_embed"))
+                ncs.append(nc)
+                aux = aux + a
+            ys = tuple(ncs) if seg_caches is not None or mode == "prefill" else None
+            return (xc, aux), ys
+
+        if cfg.remat and mode == "train":
+            policy = (
+                jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                if cfg.remat_policy == "dots"
+                else None  # minimal: save only layer boundaries (scan carry)
+            )
+            body = jax.checkpoint(body, policy=policy)
+
+        xs = (seg_params, seg_caches) if seg_caches is not None else seg_params
+        (x, aux_total), ys = jax.lax.scan(body, (x, aux_total), xs)
+        if ys is not None:
+            new_caches.append(list(ys))
+    return x, aux_total, (new_caches if new_caches else None)
+
+
+def forward(params, tokens, cfg, *, mode: str = "train"):
+    """tokens (B,S) -> logits (B,S,V). Pure training/eval forward."""
+    x = L.embed_tokens(params["embed"], tokens, cfg)
+    x = constrain(x, ("act_batch", "act_seq", "act_embed"))
+    x, aux, _ = _run_segments(params, x, cfg, mode="train")
+    x = L.apply_norm(params["final_norm"], x, cfg)
+    logits = L.unembed(params["embed"], x, cfg)
+    return constrain(logits, ("act_batch", "act_seq", "act_vocab")), aux
+
+
+def prefill(params, tokens, cfg, *, max_len=None):
+    """tokens (B,S) -> (last-position logits (B,V), caches). ``max_len``
+    sizes the caches for subsequent decode steps (defaults to S)."""
+    x = L.embed_tokens(params["embed"], tokens, cfg)
+    x, _, caches = _run_segments(params, x, cfg, mode="prefill", max_len=max_len)
+    x = L.apply_norm(params["final_norm"], x, cfg)
+    logits = L.unembed(params["embed"], x[:, -1:, :], cfg)
+    return logits[:, 0, :], caches
+
+
+def decode_step(params, caches, token, index, cfg):
+    """token (B,1) int32; index scalar int32 -> (logits (B,V), new caches)."""
+    x = L.embed_tokens(params["embed"], token, cfg)
+    x, _, new_caches = _run_segments(
+        params, x, cfg, mode="decode", caches=caches, index=index
+    )
+    x = L.apply_norm(params["final_norm"], x, cfg)
+    logits = L.unembed(params["embed"], x, cfg)
+    return logits[:, 0, :], new_caches

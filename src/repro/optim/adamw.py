@@ -1,0 +1,105 @@
+"""Self-contained AdamW (+ global-norm clipping, cosine schedule).
+
+Pytree-based, optax-shaped API (init/update) so it composes with the
+gradient-compression wrapper and shards exactly like the params (mu/nu
+mirror the param tree; FSDP rules apply to them automatically).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamW", "cosine_schedule", "global_norm"]
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves)
+    )
+
+
+def cosine_schedule(
+    peak_lr: float, warmup_steps: int = 100, total_steps: int = 10000,
+    min_ratio: float = 0.1,
+) -> Callable[[jnp.ndarray], jnp.ndarray]:
+    def lr(step):
+        step = step.astype(jnp.float32)
+        warm = peak_lr * step / max(warmup_steps, 1)
+        frac = jnp.clip(
+            (step - warmup_steps) / max(total_steps - warmup_steps, 1), 0.0, 1.0
+        )
+        cos = peak_lr * (min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * frac)))
+        return jnp.where(step < warmup_steps, warm, cos)
+
+    return lr
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    learning_rate: float | Callable = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float | None = 1.0
+
+    def init(self, params) -> dict[str, Any]:
+        zeros = lambda t: jax.tree_util.tree_map(
+            lambda x: jnp.zeros_like(x, dtype=jnp.float32), t
+        )
+        return {"mu": zeros(params), "nu": zeros(params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def state_spec(self, param_spec_tree):
+        """ParamSpec tree for the optimizer state (mirrors params, fp32)."""
+        from repro.distributed.sharding import ParamSpec, is_spec
+
+        f32 = lambda s: ParamSpec(s.shape, s.axes, init="zeros", dtype=jnp.float32)
+        mirror = lambda: jax.tree_util.tree_map(f32, param_spec_tree, is_leaf=is_spec)
+        return {
+            "mu": mirror(),
+            "nu": mirror(),
+            "step": ParamSpec((), (), init="zeros", dtype=jnp.int32),
+        }
+
+    def update(self, grads, state, params):
+        step = state["step"] + 1
+        lr = (
+            self.learning_rate(step)
+            if callable(self.learning_rate)
+            else jnp.asarray(self.learning_rate, jnp.float32)
+        )
+        if self.clip_norm is not None:
+            gn = global_norm(grads)
+            scale = jnp.minimum(1.0, self.clip_norm / jnp.maximum(gn, 1e-9))
+            grads = jax.tree_util.tree_map(
+                lambda g: g.astype(jnp.float32) * scale, grads
+            )
+        else:
+            grads = jax.tree_util.tree_map(lambda g: g.astype(jnp.float32), grads)
+
+        b1, b2 = self.b1, self.b2
+        mu = jax.tree_util.tree_map(
+            lambda m, g: b1 * m + (1 - b1) * g, state["mu"], grads
+        )
+        nu = jax.tree_util.tree_map(
+            lambda v, g: b2 * v + (1 - b2) * g * g, state["nu"], grads
+        )
+        c1 = 1.0 - b1 ** step.astype(jnp.float32)
+        c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+        def upd(p, m, v):
+            mhat = m / c1
+            vhat = v / c2
+            delta = mhat / (jnp.sqrt(vhat) + self.eps) + self.weight_decay * p.astype(
+                jnp.float32
+            )
+            return (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+
+        new_params = jax.tree_util.tree_map(upd, params, mu, nu)
+        return new_params, {"mu": mu, "nu": nu, "step": step}

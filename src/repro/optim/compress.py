@@ -1,0 +1,122 @@
+"""Error-feedback gradient compression for cross-pod all-reduce.
+
+Inter-pod links are DCN-class (an order of magnitude slower than ICI), so
+the pod-axis gradient all-reduce is the multi-pod bottleneck. Two standard
+compressors with error feedback (the residual of what compression dropped
+is carried into the next step, preserving convergence — Karimireddy et
+al., 2019):
+
+* ``int8_compress``  — per-tensor symmetric int8 quantization: 4x wire
+  reduction on fp32 grads.
+* ``topk_compress``  — magnitude top-k sparsification: k/n wire reduction.
+
+Usage pattern (launch/train.py): compress (grads + residual) BEFORE the
+``pod``-axis psum, decompress after; the ICI-local reductions stay exact.
+The compressors are pure jax functions — they jit and shard like the rest
+of the step.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "ef_init",
+    "int8_compress",
+    "int8_decompress",
+    "topk_compress",
+    "topk_decompress",
+    "ef_step",
+]
+
+
+def ef_init(params):
+    """Zero error-feedback residual matching the gradient pytree."""
+    return jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params
+    )
+
+
+# ---------------------------------------------------------------------------
+# int8 symmetric quantization
+# ---------------------------------------------------------------------------
+
+
+def int8_compress(x):
+    """x fp32 -> (int8 values, fp32 scale)."""
+    amax = jnp.max(jnp.abs(x))
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def int8_decompress(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+# ---------------------------------------------------------------------------
+# top-k sparsification
+# ---------------------------------------------------------------------------
+
+
+def topk_compress(x, k: int):
+    """x fp32 -> (values (k,), flat indices (k,))."""
+    flat = x.reshape(-1)
+    vals, idx = jax.lax.top_k(jnp.abs(flat), k)
+    taken = flat[idx]
+    return taken, idx
+
+
+def topk_decompress(vals, idx, shape):
+    flat = jnp.zeros(int(jnp.prod(jnp.asarray(shape))), vals.dtype)
+    flat = flat.at[idx].set(vals)
+    return flat.reshape(shape)
+
+
+# ---------------------------------------------------------------------------
+# one error-feedback round over a gradient pytree
+# ---------------------------------------------------------------------------
+
+
+def ef_step(grads, residual, *, kind: str = "int8", k_fraction: float = 0.05):
+    """(grads, residual) -> (decompressed grads to apply, new residual).
+
+    The returned grads are what the OTHER pods would receive after the
+    compressed all-reduce; the residual keeps the quantization/sparsity
+    error for the next step.
+    """
+
+    def one(g, r):
+        target = g.astype(jnp.float32) + r
+        if kind == "int8":
+            q, scale = int8_compress(target)
+            sent = int8_decompress(q, scale)
+        elif kind == "topk":
+            k = max(1, int(target.size * k_fraction))
+            vals, idx = topk_compress(target, k)
+            sent = topk_decompress(vals, idx, target.shape)
+        else:
+            raise ValueError(kind)
+        return sent, target - sent
+
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_r = jax.tree_util.tree_leaves(residual)
+    out = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    sent = jax.tree_util.tree_unflatten(treedef, [s for s, _ in out])
+    new_res = jax.tree_util.tree_unflatten(treedef, [r for _, r in out])
+    return sent, new_res
+
+
+def wire_bytes(grads, *, kind: str = "int8", k_fraction: float = 0.05) -> int:
+    """Bytes on the wire per all-reduce round under each scheme."""
+    total = 0
+    for g in jax.tree_util.tree_leaves(grads):
+        if kind == "none":
+            total += g.size * 4
+        elif kind == "int8":
+            total += g.size * 1 + 4
+        elif kind == "topk":
+            k = max(1, int(g.size * k_fraction))
+            total += k * 8  # fp32 value + int32 index
+    return total

@@ -1,0 +1,176 @@
+"""Three-term roofline analysis from compiled dry-run artifacts.
+
+  compute term    = HLO_FLOPs_per_device / peak_FLOPs_per_chip
+  memory term     = HLO_bytes_per_device / HBM_bw_per_chip
+  collective term = collective_bytes_per_device / link_bw
+
+Sources: ``compiled.cost_analysis()`` provides FLOPs and bytes accessed for
+the SPMD-partitioned per-device module. Collective traffic is NOT in
+cost_analysis, so we parse the optimized HLO (``compiled.as_text()``) and
+sum the result-shape bytes of every collective op, bucketed by kind.
+Methodology notes:
+  * the partitioned module is the per-device program, so all quantities
+    are already per-chip — no further division by chip count;
+  * all-reduce wire traffic is ~2x its operand bytes (ring); all-gather
+    result bytes ≈ wire bytes; we apply the per-kind wire factors below;
+  * ICI link bandwidth is per-link; `links` (default 3 usable per torus
+    direction on a 16x16 slice, conservative 1 for correctness-first
+    reporting) scales the denominator.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+
+from repro.launch.mesh import HW
+
+__all__ = ["collective_bytes", "roofline_terms", "summarize_cell", "parse_hlo_bytes"]
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1,
+    "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+_COLLECTIVES = (
+    "all-reduce",
+    "all-gather",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+# approximate wire-bytes factor per result byte (ring algorithms)
+_WIRE_FACTOR = {
+    "all-reduce": 2.0,
+    "all-gather": 1.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def parse_hlo_bytes(hlo_text: str) -> dict[str, int]:
+    """Sum result-shape bytes per collective kind from optimized HLO."""
+    out: dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    out["count"] = 0
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = re.match(r"(?:%?[\w.\-]+)\s*=\s*(.+?)\s+([a-z\-]+)\(", line)
+        if not m:
+            continue
+        type_str, op = m.groups()
+        if op.endswith("-start"):
+            op = op[: -len("-start")]
+        if op not in _COLLECTIVES:
+            continue
+        out[op] += _shape_bytes(type_str)
+        out["count"] += 1
+    return out
+
+
+def collective_bytes(hlo_text: str) -> tuple[int, dict[str, int]]:
+    per_kind = parse_hlo_bytes(hlo_text)
+    wire = sum(
+        per_kind[k] * _WIRE_FACTOR[k] for k in _COLLECTIVES
+    )
+    return int(wire), per_kind
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    flops: float
+    bytes_accessed: float
+    coll_bytes: int
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        """Lower bound: perfectly-overlapped terms -> max; report max."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    def asdict(self):
+        return {
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "flops_per_device": self.flops,
+            "bytes_per_device": self.bytes_accessed,
+            "collective_bytes_per_device": self.coll_bytes,
+        }
+
+
+def roofline_terms(
+    cost: dict, hlo_text: str, *, links: float = 1.0
+) -> RooflineTerms:
+    flops = float(cost.get("flops", 0.0))
+    byts = float(cost.get("bytes accessed", 0.0))
+    coll, _ = collective_bytes(hlo_text)
+    return RooflineTerms(
+        compute_s=flops / HW.PEAK_BF16_FLOPS,
+        memory_s=byts / HW.HBM_BW,
+        collective_s=coll / (HW.ICI_BW * links),
+        flops=flops,
+        bytes_accessed=byts,
+        coll_bytes=coll,
+    )
+
+
+def roofline_terms_corrected(corrected: dict, *, links: float = 1.0) -> RooflineTerms:
+    """Terms from the trip-count-aware HLO counter (roofline.hlo_costs)."""
+    coll_map = corrected["collectives"]
+    wire = sum(coll_map[k] * _WIRE_FACTOR[k] for k in _COLLECTIVES)
+    return RooflineTerms(
+        compute_s=corrected["flops"] / HW.PEAK_BF16_FLOPS,
+        memory_s=corrected["bytes"] / HW.HBM_BW,
+        collective_s=wire / (HW.ICI_BW * links),
+        flops=corrected["flops"],
+        bytes_accessed=corrected["bytes"],
+        coll_bytes=int(wire),
+    )
+
+
+def model_flops(n_params: int, tokens: int, *, train: bool) -> float:
+    """6·N·D for training (fwd 2ND + bwd 4ND), 2·N·D for inference."""
+    return (6.0 if train else 2.0) * n_params * tokens
+
+
+def summarize_cell(record: dict) -> str:
+    t = record["roofline"]
+    return (
+        f"{record['arch']:24s} {record['shape']:12s} {record['mesh']:10s} "
+        f"C={t['compute_s']:.3e}s M={t['memory_s']:.3e}s "
+        f"X={t['collective_s']:.3e}s dom={t['dominant']:10s} "
+        f"useful={record.get('useful_flops_ratio', 0):.2f}"
+    )

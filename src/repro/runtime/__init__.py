@@ -1,0 +1,6 @@
+from repro.runtime.fault_tolerance import (  # noqa: F401
+    HeartbeatMonitor,
+    StragglerDetector,
+    Supervisor,
+)
+from repro.runtime.elastic import elastic_reshard  # noqa: F401

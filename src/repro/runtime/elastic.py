@@ -1,0 +1,56 @@
+"""Elastic scaling: re-shard live training state onto a different mesh.
+
+Checkpoints are mesh-agnostic (full arrays + treedef), so shrink/grow is:
+  1. snapshot state to host (or restore the latest checkpoint),
+  2. build the new mesh from the surviving device set,
+  3. derive shardings for the SAME ParamSpec tree under the new mesh
+     (divisibility fallbacks re-resolve automatically — a dim that was
+     16-way shardable may become 8-way or replicated),
+  4. device_put every leaf with its new sharding.
+
+``elastic_reshard`` does 2-4 in one call; the Supervisor's ``on_restart``
+hook is the natural place to invoke it after evicting dead workers.
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from repro.distributed import sharding as sh
+
+__all__ = ["elastic_reshard", "available_mesh"]
+
+
+def available_mesh(axis_names=("data", "model"), *, devices=None):
+    """Largest power-of-2 mesh over the surviving devices."""
+    devs = list(devices if devices is not None else jax.devices())
+    n = 1
+    while n * 2 <= len(devs):
+        n *= 2
+    if len(axis_names) == 1:
+        shape: tuple[int, ...] = (n,)
+    else:
+        m = 1  # largest power of 2 with m*m <= n
+        while (m * 2) * (m * 2) <= n:
+            m *= 2
+        shape = (n // m, m)
+    return jax.make_mesh(
+        shape, axis_names,
+        devices=devs[: int(np.prod(shape))],
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axis_names),
+    )
+
+
+def elastic_reshard(state, spec_tree, new_mesh, rules=None):
+    """Move a (possibly sharded) pytree onto ``new_mesh``.
+
+    ``spec_tree`` is the ParamSpec tree describing logical axes; shardings
+    are re-derived under the new mesh with divisibility fallback.
+    """
+    shardings = sh.named_shardings(spec_tree, new_mesh, rules)
+
+    def move(x, s):
+        return jax.device_put(np.asarray(x), s)
+
+    return jax.tree_util.tree_map(move, state, shardings)

@@ -1,0 +1,98 @@
+"""Hypothesis property tests on the denoise system's invariants."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops
+from repro.kernels.ref import ref_subtract_average
+
+dims = st.tuples(
+    st.integers(1, 5),                      # G
+    st.integers(1, 4).map(lambda p: 2 * p),  # N (even)
+    st.integers(1, 12),                     # H
+    st.integers(1, 40),                     # W
+)
+
+
+def _frames(shape, seed):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.uniform(0, 4095, shape), jnp.float32)
+
+
+@settings(max_examples=25, deadline=None)
+@given(dims=dims, seed=st.integers(0, 2**31 - 1))
+def test_global_offset_cancels(dims, seed):
+    """Adding a constant to every frame leaves the output unchanged
+    (static-LED ambient light cancels in the subtraction — paper Fig. 8)."""
+    frames = _frames(dims, seed)
+    base = ref_subtract_average(frames, offset=10.0)
+    shifted = ref_subtract_average(frames + 123.0, offset=10.0)
+    np.testing.assert_allclose(np.asarray(base), np.asarray(shifted), atol=1e-2)
+
+
+@settings(max_examples=25, deadline=None)
+@given(dims=dims, seed=st.integers(0, 2**31 - 1))
+def test_group_permutation_invariance(dims, seed):
+    """Averaging is symmetric in the group order."""
+    frames = _frames(dims, seed)
+    perm = np.random.default_rng(seed).permutation(dims[0])
+    a = ref_subtract_average(frames, offset=5.0)
+    b = ref_subtract_average(frames[perm], offset=5.0)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-3)
+
+
+@settings(max_examples=25, deadline=None)
+@given(dims=dims, seed=st.integers(0, 2**31 - 1), scale=st.floats(0.25, 4.0))
+def test_linearity_in_signal(dims, seed, scale):
+    """denoise(s·frames, s·offset) == s·denoise(frames, offset)."""
+    frames = _frames(dims, seed)
+    a = ref_subtract_average(frames, offset=16.0) * scale
+    b = ref_subtract_average(frames * scale, offset=16.0 * scale)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-2)
+
+
+@settings(max_examples=20, deadline=None)
+@given(dims=dims, seed=st.integers(0, 2**31 - 1))
+def test_duplicated_groups_idempotent(dims, seed):
+    """Doubling every group (G -> 2G identical copies) keeps the mean."""
+    frames = _frames(dims, seed)
+    doubled = jnp.concatenate([frames, frames], axis=0)
+    a = ref_subtract_average(frames, offset=2.0)
+    b = ref_subtract_average(doubled, offset=2.0)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-3)
+
+
+@settings(max_examples=15, deadline=None)
+@given(dims=dims, seed=st.integers(0, 2**31 - 1))
+def test_all_algorithms_agree(dims, seed):
+    """Alg 1/2/3 differ only in dataflow, never in the result."""
+    frames = _frames(dims, seed)
+    outs = [
+        ops.subtract_average(frames, offset=7.0, algorithm=a, backend="xla")
+        for a in ("alg1", "alg2", "alg3")
+    ]
+    for o in outs[1:]:
+        np.testing.assert_allclose(
+            np.asarray(outs[0]), np.asarray(o), rtol=1e-5, atol=1e-2
+        )
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    dims=dims,
+    seed=st.integers(0, 2**31 - 1),
+    chunks=st.integers(1, 3),
+)
+def test_stream_associativity(dims, seed, chunks):
+    """Folding groups in any chunking gives the one-shot answer."""
+    frames = _frames(dims, seed)
+    G = dims[0]
+    ref = ref_subtract_average(frames, offset=3.0)
+    state = ops.stream_init(dims[1], dims[2], dims[3])
+    for g in range(G):
+        state = ops.stream_step(state, frames[g], num_groups=G, offset=3.0,
+                                backend="xla")
+    out = ops.stream_finalize(state, G)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-5,
+                               atol=1e-3)

@@ -1,0 +1,73 @@
+"""Error-feedback gradient compression: wire savings + convergence."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim import compress as C
+
+
+def test_int8_roundtrip_error_bounded():
+    x = jax.random.normal(jax.random.PRNGKey(0), (1024,)) * 3.0
+    q, scale = C.int8_compress(x)
+    back = C.int8_decompress(q, scale)
+    assert q.dtype == jnp.int8
+    # quantization error bounded by half a step
+    assert float(jnp.abs(back - x).max()) <= float(scale) * 0.5 + 1e-6
+
+
+def test_topk_keeps_largest():
+    x = jnp.asarray([0.1, -5.0, 0.2, 3.0, -0.05])
+    vals, idx = C.topk_compress(x, 2)
+    back = C.topk_decompress(vals, idx, x.shape)
+    np.testing.assert_allclose(
+        np.asarray(back), np.asarray([0.0, -5.0, 0.0, 3.0, 0.0]), atol=1e-7
+    )
+
+
+def test_wire_bytes_accounting():
+    grads = {"w": jnp.zeros((1000,)), "b": jnp.zeros((100,))}
+    exact = C.wire_bytes(grads, kind="none")
+    int8 = C.wire_bytes(grads, kind="int8")
+    topk = C.wire_bytes(grads, kind="topk", k_fraction=0.05)
+    assert exact == 4400
+    assert int8 < exact / 3.5
+    assert topk < exact / 2
+
+
+@pytest.mark.parametrize("kind", ["int8", "topk"])
+def test_error_feedback_converges_least_squares(kind):
+    """SGD on a quadratic with compressed grads + EF reaches the optimum;
+    WITHOUT error feedback, top-k at small k stalls measurably earlier."""
+    rng = np.random.default_rng(0)
+    A = jnp.asarray(rng.normal(size=(64, 16)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(64,)), jnp.float32)
+    x_star, *_ = np.linalg.lstsq(np.asarray(A), np.asarray(b), rcond=None)
+
+    def grad(x):
+        return {"x": A.T @ (A @ x["x"] - b) / A.shape[0]}
+
+    x = {"x": jnp.zeros((16,))}
+    res = C.ef_init(x)
+    lr = 0.05
+    for _ in range(800):
+        g = grad(x)
+        sent, res = C.ef_step(g, res, kind=kind, k_fraction=0.25)
+        x = jax.tree_util.tree_map(lambda p, s: p - lr * s, x, sent)
+    err = float(jnp.linalg.norm(x["x"] - jnp.asarray(x_star)))
+    assert err < 5e-2, err
+
+
+def test_ef_residual_carries_dropped_mass():
+    g = {"w": jnp.asarray([1.0, 0.001, -2.0, 0.002])}
+    res = C.ef_init(g)
+    sent, res = C.ef_step(g, res, kind="topk", k_fraction=0.5)
+    # the two small entries live in the residual now
+    assert float(jnp.abs(res["w"][1] - 0.001)) < 1e-6
+    assert float(jnp.abs(res["w"][3] - 0.002)) < 1e-6
+    # and are sent once they accumulate
+    sent2, res2 = C.ef_step(
+        {"w": jnp.zeros(4)}, res, kind="topk", k_fraction=0.5
+    )
+    assert float(jnp.abs(sent2["w"]).sum()) > 0

@@ -1,0 +1,141 @@
+"""Per-kernel validation: shape/dtype sweeps vs the pure-jnp oracle,
+streaming equivalence, and the paper's u16 overflow reproduction."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.denoise import DEFAULT_OFFSET, DenoiseConfig, StreamingDenoiser
+from repro.kernels import ops
+from repro.kernels.ref import ref_subtract_average
+
+jax.config.update("jax_enable_x64", False)
+
+SHAPES = [
+    (2, 4, 8, 16),     # minimal
+    (3, 8, 16, 32),    # odd group count
+    (8, 10, 8, 128),   # paper G, lane-aligned W
+    (2, 6, 5, 24),     # unaligned H/W (Mosaic padding path)
+    (4, 2, 80, 256),   # paper frame geometry, N=2
+]
+
+
+def _frames(shape, dtype, seed=0):
+    rng = np.random.default_rng(seed)
+    x = rng.integers(0, 4096, shape)
+    return jnp.asarray(x, dtype)
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16, jnp.int32])
+@pytest.mark.parametrize("algorithm", ["alg1", "alg2", "alg3", "alg3_v2"])
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+def test_subtract_average_matches_oracle(shape, dtype, algorithm, backend):
+    frames = _frames(shape, dtype)
+    variant = "divide_first" if algorithm == "alg3_v2" else "divide_last"
+    ref = ref_subtract_average(
+        frames.astype(jnp.float32), offset=float(DEFAULT_OFFSET), variant=variant
+    )
+    out = ops.subtract_average(
+        frames,
+        offset=float(DEFAULT_OFFSET),
+        algorithm=algorithm,
+        backend=backend,
+        accum_dtype=jnp.float32,
+    )
+    assert out.shape == (shape[1] // 2,) + shape[2:]
+    assert out.dtype == jnp.float32
+    tol = 2.0 if dtype == jnp.bfloat16 else 1e-2
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=tol)
+
+
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+def test_streaming_equals_oneshot(backend):
+    G, N, H, W = 5, 12, 16, 64
+    frames = _frames((G, N, H, W), jnp.float32, seed=3)
+    ref = ref_subtract_average(frames, offset=100.0)
+    state = ops.stream_init(N, H, W)
+    for g in range(G):
+        state = ops.stream_step(
+            state, frames[g], num_groups=G, offset=100.0, backend=backend
+        )
+    out = ops.stream_finalize(state, G)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-6)
+
+
+def test_streaming_denoiser_run():
+    cfg = DenoiseConfig(num_groups=4, frames_per_group=6, height=8, width=32)
+    den = StreamingDenoiser(cfg)
+    frames = _frames((4, 6, 8, 32), jnp.float32, seed=7)
+    out_stream = den.run(frames[g] for g in range(4))
+    out_oneshot = den(frames)
+    np.testing.assert_allclose(
+        np.asarray(out_stream), np.asarray(out_oneshot), rtol=1e-6
+    )
+    # offset removal recovers signed differences
+    signed = den.remove_offset(out_stream)
+    ref = ref_subtract_average(frames, offset=0.0)
+    np.testing.assert_allclose(np.asarray(signed), np.asarray(ref), rtol=1e-5)
+
+
+class TestPaperOverflow:
+    """Paper §4.2: 12-bit pixels + u16 running sum overflow once G > 8;
+    the v2 divide-first variant stays in range for any G."""
+
+    def _frames(self, G):
+        # worst-case bright excitation, dark control
+        N, H, W = 4, 4, 8
+        f = np.zeros((G, N, H, W), np.uint16)
+        f[:, 1::2] = 4095
+        return jnp.asarray(f)
+
+    def test_g8_no_overflow(self):
+        f = self._frames(8)
+        out = ref_subtract_average(
+            f, offset=DEFAULT_OFFSET, accum_dtype=jnp.uint16
+        )
+        assert int(out.max()) == (4095 + 4096 * 8) % 65536 // 8 or int(out.max()) == (4095 + 4096)
+        # sum = 8*(4095+4096) = 65528 < 65536: no wrap; mean == 8191
+        assert int(out.max()) == 8191
+
+    def test_g9_overflows(self):
+        f = self._frames(9)
+        out = ref_subtract_average(
+            f, offset=DEFAULT_OFFSET, accum_dtype=jnp.uint16
+        )
+        # sum = 9*8191 = 73719 -> wraps mod 65536 -> mean is corrupted
+        assert int(out.max()) != 8191
+
+    def test_v2_divide_first_is_safe(self):
+        for G in (9, 16, 64):
+            f = self._frames(G)
+            out = ref_subtract_average(
+                f,
+                offset=DEFAULT_OFFSET,
+                variant="divide_first",
+                accum_dtype=jnp.uint16,
+            )
+            # divide-first keeps each term <= 8191/G, sum bounded by 8191
+            assert int(out.max()) <= 8191
+            truth = 8191
+            assert abs(int(out.max()) - truth) <= G  # integer-division slack
+
+
+@pytest.mark.parametrize("row_tile", [1, 2, 4, 8])
+def test_pallas_row_tiles(row_tile):
+    from repro.kernels.denoise_stream import alg3_subtract_average
+
+    frames = _frames((3, 6, 8, 32), jnp.float32, seed=11)
+    ref = ref_subtract_average(frames, offset=0.0)
+    out = alg3_subtract_average(frames, row_tile=row_tile, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-6)
+
+
+def test_bad_inputs():
+    with pytest.raises(ValueError):
+        DenoiseConfig(frames_per_group=5)
+    with pytest.raises(ValueError):
+        DenoiseConfig(algorithm="nope")
+    with pytest.raises(ValueError):
+        ops.subtract_average(jnp.zeros((2, 4, 4, 8)), algorithm="bogus")
