@@ -1,8 +1,17 @@
 """Shared benchmark helpers. Every table prints ``name,us_per_call,derived``
-CSV rows via ``emit`` so ``benchmarks.run`` output is machine-readable."""
+CSV rows via ``emit`` so ``benchmarks.run`` output is machine-readable.
+
+``bench_record`` additionally appends structured trajectory points to
+``BENCH_denoise.json`` (repo root; override with ``BENCH_DENOISE_PATH``) so
+speedups of the fused/prefetched paths are tracked across PRs — see
+README.md for the schema.
+"""
 
 from __future__ import annotations
 
+import json
+import os
+import pathlib
 import time
 
 import jax
@@ -10,10 +19,41 @@ import numpy as np
 
 from repro.core.denoise import DenoiseConfig
 
-__all__ = ["emit", "timeit", "bench_config", "PAPER_G", "PAPER_N"]
+__all__ = [
+    "emit",
+    "timeit",
+    "bench_config",
+    "bench_record",
+    "PAPER_G",
+    "PAPER_N",
+    "PAPER_H",
+    "PAPER_W",
+]
 
 PAPER_G, PAPER_N = 8, 1000  # paper §6 defaults
 PAPER_H, PAPER_W = 80, 256  # one camera bank
+
+_BENCH_PATH = pathlib.Path(__file__).resolve().parent.parent / "BENCH_denoise.json"
+
+
+def bench_record(name: str, **fields) -> None:
+    """Append one trajectory point to BENCH_denoise.json.
+
+    Each point is ``{"name", "timestamp", **fields}``; speedup entries use
+    ``baseline_s`` / ``candidate_s`` / ``speedup`` plus a ``config`` dict.
+    The file is a flat JSON list, append-only across runs.
+    """
+    path = pathlib.Path(os.environ.get("BENCH_DENOISE_PATH", _BENCH_PATH))
+    records = []
+    if path.exists():
+        try:
+            records = json.loads(path.read_text())
+        except (json.JSONDecodeError, OSError):
+            records = []
+        if not isinstance(records, list):
+            records = []
+    records.append({"name": name, "timestamp": time.time(), **fields})
+    path.write_text(json.dumps(records, indent=2) + "\n")
 
 
 def bench_config(quick: bool, **kw) -> DenoiseConfig:

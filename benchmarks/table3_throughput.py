@@ -3,6 +3,19 @@
 Streams the synthetic PRISM acquisition group-by-group through each
 algorithm's streaming dataflow: Alg 3 folds into the running sum; Alg 1/2
 stage difference frames into a tmpFrame buffer and reduce at the end.
+
+The sweep covers the backend × staging matrix this PR opened up:
+
+* ``no_burst``      — Alg 1/2 dataflow (materialize diffs, reduce late).
+* ``burst_rw_f32``  — the pre-PR Alg 3 ingest: host-side f32 convert,
+  synchronous ``jnp.asarray`` staging, one XLA step per group.
+* ``burst_rw_u16``  — u16 containers straight to device (convert fuses
+  into the step), still synchronous.
+* ``prefetch_u16``  — the new double-buffered executor (``run_inline``):
+  u16 staging overlapped under compute. This is the production path; its
+  speedup over ``burst_rw_f32`` is recorded to BENCH_denoise.json.
+* ``pallas[pt=..]`` — the Pallas streaming kernel (interpret mode on CPU)
+  across pair-tile sizes, validating the pair-tiling knob end to end.
 """
 
 from __future__ import annotations
@@ -13,13 +26,23 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import bench_config, emit
-from repro.core.streaming import StreamReport
+from benchmarks.common import (
+    PAPER_G,
+    PAPER_H,
+    PAPER_N,
+    PAPER_W,
+    bench_config,
+    bench_record,
+    emit,
+)
+from repro.core.denoise import DenoiseConfig
+from repro.core.streaming import run_inline
 from repro.data.prism import PrismSource
 from repro.kernels import ops
 
 
-def _stream_alg3(cfg, groups):
+def _stream_alg3_f32(cfg, groups):
+    """Pre-PR ingest: host f32 convert + sync staging + per-group XLA step."""
     t0 = time.perf_counter()
     state = ops.stream_init(cfg.frames_per_group, cfg.height, cfg.width)
     for gf in groups:
@@ -27,6 +50,42 @@ def _stream_alg3(cfg, groups):
             state, jnp.asarray(gf.astype(np.float32)),
             num_groups=cfg.num_groups, offset=cfg.offset, backend="xla",
         )
+    out = ops.stream_finalize(state, cfg.num_groups)
+    jax.block_until_ready(out)
+    return time.perf_counter() - t0
+
+
+def _stream_alg3_u16(cfg, groups):
+    """u16 containers to device; the convert fuses into the step."""
+    t0 = time.perf_counter()
+    state = ops.stream_init(cfg.frames_per_group, cfg.height, cfg.width)
+    for gf in groups:
+        state = ops.stream_step(
+            state, jnp.asarray(gf),
+            num_groups=cfg.num_groups, offset=cfg.offset, backend="xla",
+        )
+    out = ops.stream_finalize(state, cfg.num_groups)
+    jax.block_until_ready(out)
+    return time.perf_counter() - t0
+
+
+def _stream_prefetch(cfg, groups):
+    """The new double-buffered executor over pre-staged camera frames."""
+    t0 = time.perf_counter()
+    _, rep = run_inline(cfg, iter(groups), prefetch=True)
+    del rep
+    return time.perf_counter() - t0
+
+
+def _stream_pallas(cfg, groups, pair_tile):
+    t0 = time.perf_counter()
+    state = ops.stream_init(cfg.frames_per_group, cfg.height, cfg.width)
+    for gf in groups:
+        state = ops.multibank_stream_step(
+            state[None], jnp.asarray(gf)[None],
+            num_groups=cfg.num_groups, offset=cfg.offset, backend="pallas",
+            pair_tile=pair_tile,
+        )[0]
     out = ops.stream_finalize(state, cfg.num_groups)
     jax.block_until_ready(out)
     return time.perf_counter() - t0
@@ -40,11 +99,11 @@ def _stream_materialized(cfg, groups):
     @jax.jit
     def diff(gf):
         pr = gf.reshape(p, 2, cfg.height, cfg.width)
-        return pr[:, 1] - pr[:, 0] + cfg.offset
+        return pr[:, 1].astype(jnp.float32) - pr[:, 0].astype(jnp.float32) + cfg.offset
 
     tmp = jnp.zeros((cfg.num_groups, p, cfg.height, cfg.width), jnp.float32)
     for gi, gf in enumerate(groups):
-        tmp = tmp.at[gi].set(diff(jnp.asarray(gf.astype(np.float32))))
+        tmp = tmp.at[gi].set(diff(jnp.asarray(gf)))
     out = tmp.sum(0) / cfg.num_groups
     jax.block_until_ready(out)
     return time.perf_counter() - t0
@@ -56,10 +115,18 @@ def run(quick: bool = True) -> None:
     groups = list(src.groups())
     frames = cfg.num_groups * cfg.frames_per_group
     mb = frames * cfg.frame_pixels * 2 / 1e6
-    for name, fn in (
+    variants = [
         ("no_burst(alg1-dataflow)", _stream_materialized),
-        ("burst_rw(alg3-dataflow)", _stream_alg3),
-    ):
+        ("burst_rw_f32(pre-PR)", _stream_alg3_f32),
+        ("burst_rw_u16", _stream_alg3_u16),
+        ("prefetch_u16", _stream_prefetch),
+    ]
+    for pt in (1, None):
+        label = f"pallas[pt={pt or 'auto'}]"
+        variants.append(
+            (label, lambda c, g, _pt=pt: _stream_pallas(c, g, _pt))
+        )
+    for name, fn in variants:
         t = min(fn(cfg, groups) for _ in range(2))
         emit(
             f"table3/{name}",
@@ -69,3 +136,33 @@ def run(quick: bool = True) -> None:
     # paper hardware reference points
     emit("table3/paper_fpga_alg1", 2.244e6 / 8000, "paper: 2.244s/8000 frames")
     emit("table3/paper_fpga_alg3", 0.457e6 / 8000, "paper: 0.457s=17544fps,719MBps")
+
+    # -- trajectory point: pre-PR ingest vs new executor at paper config ---
+    pcfg = DenoiseConfig(
+        num_groups=PAPER_G, frames_per_group=PAPER_N,
+        height=PAPER_H, width=PAPER_W, backend="xla",
+    )
+    pgroups = list(PrismSource(pcfg).groups())
+    _stream_alg3_f32(pcfg, pgroups)          # warm both paths
+    _stream_prefetch(pcfg, pgroups)
+    iters = 1 if quick else 2
+    t_old = min(_stream_alg3_f32(pcfg, pgroups) for _ in range(iters))
+    t_new = min(_stream_prefetch(pcfg, pgroups) for _ in range(iters))
+    speedup = t_old / max(t_new, 1e-9)
+    emit(
+        "table3/paper_cfg_prefetch_vs_f32",
+        t_new * 1e6 / (pcfg.num_groups * pcfg.frames_per_group),
+        f"pre_pr_s={t_old:.3f};new_s={t_new:.3f};speedup={speedup:.2f}x",
+    )
+    bench_record(
+        "streaming_prefetch_vs_presync",
+        config={
+            "G": PAPER_G, "N": PAPER_N, "H": PAPER_H, "W": PAPER_W,
+            "backend": "xla", "source": "pre-staged frames",
+        },
+        baseline="pre-PR ingest (host f32 convert, sync staging)",
+        candidate="double-buffered u16 ingest (run_inline prefetch)",
+        baseline_s=t_old,
+        candidate_s=t_new,
+        speedup=round(speedup, 3),
+    )

@@ -4,11 +4,30 @@ The paper's headline systems claim: the buffering phase of CPU/GPU
 workflows alone costs about as much as the entire inline pipeline. We
 measure both workflows over the same synthetic acquisition and report the
 buffering fraction.
+
+New in this table: the inline executor's double-buffering. ``run_inline``
+now stages chunk k+1 (frame synthesis + host->device transfer) while
+chunk k computes; we run the sync (``prefetch=False``, the pre-PR
+behaviour) and prefetched paths over identical live sources at the
+paper's default config and record the ratio to BENCH_denoise.json. On
+this container the synthetic camera is far slower than the denoise step,
+so the prefetched path is acquisition-bound — compute hides entirely
+under the camera (the paper's inline argument); ``overlap_frac`` reports
+how much staging time was hidden.
 """
 
 from __future__ import annotations
 
-from benchmarks.common import bench_config, emit
+from benchmarks.common import (
+    PAPER_G,
+    PAPER_H,
+    PAPER_N,
+    PAPER_W,
+    bench_config,
+    bench_record,
+    emit,
+)
+from repro.core.denoise import DenoiseConfig
 from repro.core.streaming import run_buffered, run_inline
 from repro.data.prism import PrismSource
 
@@ -43,3 +62,50 @@ def run(quick: bool = True) -> None:
     )
     emit("table10/paper_v100_total", 0.478e6 / 8000, "paper 2-bank V100 incl. I/O")
     emit("table10/paper_fpga_total", 0.4565e6 / 8000, "paper 2-bank FPGA inline")
+
+    # -- sync vs double-buffered inline, paper default config --------------
+    pcfg = DenoiseConfig(
+        num_groups=PAPER_G,
+        frames_per_group=PAPER_N if not quick else 400,
+        height=PAPER_H,
+        width=PAPER_W,
+        backend="xla",
+    )
+    run_inline(pcfg, iter(PrismSource(pcfg).groups()))  # warm
+    _, sync = run_inline(pcfg, PrismSource(pcfg).groups(), prefetch=False)
+    _, pre = run_inline(pcfg, PrismSource(pcfg).groups(), prefetch=True)
+    ratio = sync.elapsed_s / max(pre.elapsed_s, 1e-9)
+    emit(
+        "table8/inline_sync",
+        sync.elapsed_s * 1e6 / sync.frames,
+        f"total_s={sync.elapsed_s:.3f};transfer_s={sync.transfer_s:.3f}",
+    )
+    emit(
+        "table8/inline_prefetch",
+        pre.elapsed_s * 1e6 / pre.frames,
+        f"total_s={pre.elapsed_s:.3f};speedup={ratio:.2f}x;"
+        f"overlap_frac={pre.overlap_frac:.2f}",
+    )
+    bench_record(
+        "inline_prefetch_vs_sync",
+        config={
+            "G": pcfg.num_groups,
+            "N": pcfg.frames_per_group,
+            "H": pcfg.height,
+            "W": pcfg.width,
+            "backend": "xla",
+            "source": "live synthesis",
+        },
+        baseline="sync ingest (stage then compute, serial)",
+        candidate="double-buffered ingest (stage k+1 under compute k)",
+        baseline_s=sync.elapsed_s,
+        candidate_s=pre.elapsed_s,
+        speedup=round(ratio, 3),
+        overlap_frac=round(pre.overlap_frac, 3),
+        note=(
+            "acquisition-bound: the synthetic camera is ~10x slower than the "
+            "denoise step, and on a 2-core host the staging worker contends "
+            "with XLA's compute threads, so overlap nets out ~1.0x here; the "
+            "fused-path records above carry the speedup on this container"
+        ),
+    )

@@ -7,6 +7,14 @@ analogue shards the bank axis across devices of a 1-D ``bank`` mesh with
 communication is needed until (optionally) a final gather — the same
 communication-free scaling the paper exploits.
 
+The per-shard body dispatches through the ``ops`` backend layer, so each
+device runs the *fast* path for its platform: the fused multi-bank Pallas
+kernel on TPU (grid over the device's local banks), the fused batched XLA
+program elsewhere — never the per-group reference scan. Older-JAX quirks
+(no ``jax.shard_map``, no ``jax.lax.pcast``) are absorbed by
+``repro.jax_compat``; the pcast varying-cast is applied only when the
+installed JAX has a varying-type system.
+
 On this CPU container the mesh has a single device unless the caller brings
 a multi-device mesh (tests spawn subprocesses with
 ``XLA_FLAGS=--xla_force_host_platform_device_count=8``).
@@ -17,11 +25,11 @@ from __future__ import annotations
 import functools
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.denoise import DenoiseConfig
-from repro.kernels.ref import ref_stream_finalize, ref_stream_step
+from repro.jax_compat import shard_map
+from repro.kernels import ops
 
 __all__ = ["make_bank_mesh", "banked_subtract_average", "banked_stream_step"]
 
@@ -35,78 +43,64 @@ def make_bank_mesh(num_banks: int | None = None) -> Mesh:
 
 
 def banked_subtract_average(
-    frames: jnp.ndarray,
+    frames,
     mesh: Mesh,
     *,
     config: DenoiseConfig,
-) -> jnp.ndarray:
+):
     """frames (B, G, N, H, W), bank axis sharded -> (B, N/2, H, W) sharded.
 
     Pure data parallelism over banks — zero collectives, matching the
-    paper's observation that 2-bank latency == 1-bank latency.
+    paper's observation that 2-bank latency == 1-bank latency. Each shard
+    runs the fused multi-bank kernel over its local banks.
     """
     spec = P("bank", None, None, None, None)
 
     @functools.partial(
-        jax.shard_map, mesh=mesh, in_specs=spec, out_specs=P("bank", None, None, None)
+        shard_map, mesh=mesh, in_specs=spec, out_specs=P("bank", None, None, None)
     )
     def _per_bank(local):  # local: (B/banks, G, N, H, W)
-        def one(f):
-            g = f.shape[0]
-
-            def body(s, grp):
-                return (
-                    ref_stream_step(
-                        s,
-                        grp,
-                        offset=config.offset,
-                        variant=config.variant,
-                        num_groups=g,
-                    ),
-                    None,
-                )
-
-            init = jax.lax.pcast(
-                jnp.zeros((f.shape[1] // 2, f.shape[2], f.shape[3]), jnp.float32),
-                ("bank",),
-                to="varying",
-            )
-            total, _ = jax.lax.scan(body, init, f)
-            return ref_stream_finalize(total, g, variant=config.variant)
-
-        return jax.vmap(one)(local)
+        return ops.multibank_subtract_average(
+            local,
+            offset=config.offset,
+            algorithm=config.algorithm,
+            backend=config.backend,
+            row_tile=config.row_tile,
+            pair_tile=config.pair_tile,
+        )
 
     sharded = jax.device_put(frames, NamedSharding(mesh, spec))
     return _per_bank(sharded)
 
 
 def banked_stream_step(
-    sum_frames: jnp.ndarray,
-    group_frames: jnp.ndarray,
+    sum_frames,
+    group_frames,
     mesh: Mesh,
     *,
     config: DenoiseConfig,
-) -> jnp.ndarray:
+):
     """Streaming variant: one group per step, banks in parallel.
 
     sum_frames (B, N/2, H, W), group_frames (B, N, H, W), both bank-sharded.
     """
 
     @functools.partial(
-        jax.shard_map,
+        shard_map,
         mesh=mesh,
         in_specs=(P("bank", None, None, None), P("bank", None, None, None)),
         out_specs=P("bank", None, None, None),
     )
     def _step(s, f):
-        return jax.vmap(
-            lambda si, fi: ref_stream_step(
-                si,
-                fi,
-                offset=config.offset,
-                variant=config.variant,
-                num_groups=config.num_groups,
-            )
-        )(s, f)
+        return ops.multibank_stream_step(
+            s,
+            f,
+            num_groups=config.num_groups,
+            offset=config.offset,
+            variant=config.variant,
+            backend=config.backend,
+            row_tile=config.row_tile,
+            pair_tile=config.pair_tile,
+        )
 
     return _step(sum_frames, group_frames)

@@ -41,12 +41,17 @@ class DenoiseConfig:
     algorithm: str = "alg3"      # alg1 | alg2 | alg3 | alg3_v2
     accum_dtype: str = "float32"
     backend: str = "auto"        # auto | pallas | xla
+    num_banks: int = 1           # B  (paper: one FPGA per 256x80 bank)
+    row_tile: int | None = None  # Pallas rows/block override (None = auto)
+    pair_tile: int | None = None  # Pallas frame-pairs/block override
 
     def __post_init__(self):
         if self.frames_per_group % 2:
             raise ValueError("frames_per_group (N) must be even")
         if self.algorithm not in ops.ALGORITHMS:
             raise ValueError(f"unknown algorithm {self.algorithm}")
+        if self.num_banks < 1:
+            raise ValueError("num_banks must be >= 1")
 
     @property
     def pairs_per_group(self) -> int:
@@ -84,11 +89,38 @@ class StreamingDenoiser:
     # -- streaming interface (Alg 3 dataflow) ------------------------------
     def init(self) -> jnp.ndarray:
         c = self.config
+        if c.num_banks > 1:
+            return ops.multibank_stream_init(
+                c.num_banks, c.frames_per_group, c.height, c.width, self._accum
+            )
         return ops.stream_init(c.frames_per_group, c.height, c.width, self._accum)
 
     def ingest(self, sum_frame: jnp.ndarray, group_frames: jnp.ndarray) -> jnp.ndarray:
-        """Fold one group (N, H, W) into the running sum. Donates sum_frame."""
+        """Fold one group into the running sum. Donates sum_frame.
+
+        Shapes: (N, H, W) single-bank, (B, N, H, W) banked — banked input
+        routes through the fused multi-bank step automatically.
+        """
+        if group_frames.ndim == 4:
+            if sum_frame.ndim == 3:
+                # single-bank state fed a banked chunk: accept B=1 by
+                # squeezing (keeps donation; no silent broadcast), reject else
+                if group_frames.shape[0] != 1:
+                    raise ValueError(
+                        f"state is single-bank {sum_frame.shape} but chunk "
+                        f"has {group_frames.shape[0]} banks"
+                    )
+                group_frames = group_frames[0]
+            else:
+                return self.ingest_many(sum_frame, group_frames)
         c = self.config
+        if c.num_banks > 1:
+            # without this, (N, H, W) would broadcast into every bank slot of
+            # the (B, N/2, H, W) state — plausibly shaped but wrong output
+            raise ValueError(
+                f"config has num_banks={c.num_banks}: ingest expects banked "
+                f"(B, N, H, W) chunks, got shape {group_frames.shape}"
+            )
         return ops.stream_step(
             sum_frame,
             group_frames,
@@ -96,6 +128,34 @@ class StreamingDenoiser:
             offset=c.offset,
             variant=c.variant,
             backend=c.backend,
+            row_tile=c.row_tile,
+            pair_tile=c.pair_tile,
+        )
+
+    def ingest_many(
+        self, sum_frames: jnp.ndarray, group_frames: jnp.ndarray
+    ) -> jnp.ndarray:
+        """Fold one group per bank (B, N, H, W) into donated (B, N/2, H, W)."""
+        if sum_frames.ndim != 4:
+            raise ValueError(
+                f"ingest_many needs banked (B, N/2, H, W) state, got "
+                f"{sum_frames.shape}; init() returns one when num_banks > 1"
+            )
+        if group_frames.shape[0] != sum_frames.shape[0]:
+            raise ValueError(
+                f"chunk has {group_frames.shape[0]} banks, state has "
+                f"{sum_frames.shape[0]}"
+            )
+        c = self.config
+        return ops.multibank_stream_step(
+            sum_frames,
+            group_frames,
+            num_groups=c.num_groups,
+            offset=c.offset,
+            variant=c.variant,
+            backend=c.backend,
+            row_tile=c.row_tile,
+            pair_tile=c.pair_tile,
         )
 
     def finalize(self, sum_frame: jnp.ndarray) -> jnp.ndarray:
@@ -118,14 +178,26 @@ class StreamingDenoiser:
 
     # -- one-shot interface -------------------------------------------------
     def __call__(self, frames: jnp.ndarray) -> jnp.ndarray:
-        """frames (G, N, H, W) -> (N/2, H, W)."""
+        """(G, N, H, W) -> (N/2, H, W); (B, G, N, H, W) -> (B, N/2, H, W)."""
         c = self.config
+        if frames.ndim == 5:
+            return ops.multibank_subtract_average(
+                frames,
+                offset=c.offset,
+                algorithm=c.algorithm,
+                backend=c.backend,
+                accum_dtype=self._accum,
+                row_tile=c.row_tile,
+                pair_tile=c.pair_tile,
+            )
         return ops.subtract_average(
             frames,
             offset=c.offset,
             algorithm=c.algorithm,
             backend=c.backend,
             accum_dtype=self._accum,
+            row_tile=c.row_tile,
+            pair_tile=c.pair_tile,
         )
 
     # -- container-faithful reference (overflow reproduction) ---------------

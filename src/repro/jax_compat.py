@@ -1,0 +1,47 @@
+"""Version portability shims for the JAX APIs this repo leans on.
+
+The repo targets recent JAX (``jax.shard_map``, ``jax.lax.pcast``,
+``jax.sharding.AxisType``) but must run on the pinned container JAX as
+well. Every site that needs one of these imports it from here so the
+version probe lives in exactly one place.
+
+* ``shard_map``     — ``jax.shard_map`` when present, else the
+  ``jax.experimental.shard_map`` original.
+* ``pcast_varying`` — marks an array as axis-varying under shard_map's
+  replication checker. Older JAX has no varying-type system, so the
+  fallback is the identity (older shard_map accepts plain arrays).
+* ``make_mesh``     — forwards ``axis_types=(AxisType.Auto, ...)`` only
+  when the installed ``jax.sharding`` exports ``AxisType``.
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["shard_map", "pcast_varying", "make_mesh", "HAS_AXIS_TYPE"]
+
+
+if hasattr(jax, "shard_map"):
+    shard_map = jax.shard_map
+else:  # JAX < 0.6: the experimental original
+    from jax.experimental.shard_map import shard_map  # noqa: F401
+
+
+def pcast_varying(x, axis_names):
+    """``jax.lax.pcast(x, axis_names, to="varying")`` where supported."""
+    if hasattr(jax.lax, "pcast"):
+        return jax.lax.pcast(x, tuple(axis_names), to="varying")
+    return x
+
+
+HAS_AXIS_TYPE = hasattr(jax.sharding, "AxisType")
+
+
+def make_mesh(shape, axis_names, *, devices=None, auto=True):
+    """``jax.make_mesh`` with ``AxisType.Auto`` axes when available."""
+    kw = {}
+    if devices is not None:
+        kw["devices"] = devices
+    if auto and HAS_AXIS_TYPE:
+        kw["axis_types"] = (jax.sharding.AxisType.Auto,) * len(axis_names)
+    return jax.make_mesh(tuple(shape), tuple(axis_names), **kw)

@@ -10,6 +10,14 @@ Dispatch layers:
   XLA cannot fuse the two passes; Alg 3 is a running-sum scan with O(N/2·H·W)
   state), which is what the paper's comparison measures.
 * ``backend='auto'``  — pallas on TPU, xla elsewhere.
+
+Multi-bank entry points (``multibank_*``) carry a leading bank axis
+(B, ...) and take the fast path on every backend: one fused ``pallas_call``
+whose grid covers (banks, pairs, rows, groups) on TPU, a fused
+batched/vectorized XLA program elsewhere (NOT the per-group reference
+scan — banks and pairs vectorize, subtract fuses into the reduction).
+``repro.core.banks`` wraps these in ``shard_map`` so the same code runs
+one-bank-per-device, matching the paper's one-FPGA-per-bank topology.
 """
 
 from __future__ import annotations
@@ -19,12 +27,21 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import denoise_stream, denoise_tmpframe
+from repro.kernels import denoise_multibank, denoise_stream, denoise_tmpframe
 from repro.kernels.ref import ref_stream_finalize, ref_stream_init, ref_stream_step
 
-__all__ = ["subtract_average", "stream_init", "stream_step", "stream_finalize"]
+__all__ = [
+    "subtract_average",
+    "stream_init",
+    "stream_step",
+    "stream_finalize",
+    "multibank_subtract_average",
+    "multibank_stream_init",
+    "multibank_stream_step",
+]
 
 ALGORITHMS = ("alg1", "alg2", "alg3", "alg3_v2")
+BACKENDS = ("auto", "pallas", "xla")
 
 
 def _on_tpu() -> bool:
@@ -34,6 +51,8 @@ def _on_tpu() -> bool:
 def _resolve(backend: str) -> str:
     if backend == "auto":
         return "pallas" if _on_tpu() else "xla"
+    if backend not in ("pallas", "xla"):
+        raise ValueError(f"backend must be one of {BACKENDS}, got {backend}")
     return backend
 
 
@@ -77,9 +96,59 @@ def _xla_streaming(frames, *, offset, accum_dtype, divide_first):
     return ref_stream_finalize(total, g, variant=variant)
 
 
+def _xla_materialized_banked(frames, *, offset, accum_dtype):
+    """Banked Alg 1/2 dataflow: materialize all diffs, reduce late.
+
+    Written directly on the 5-D array (not vmap of the 4-D version:
+    ``optimization_barrier`` has no batching rule on older JAX).
+    """
+    b, g, n, h, w = frames.shape
+    pairs = frames.reshape(b, g, n // 2, 2, h, w)
+    acc = jnp.dtype(accum_dtype)
+    tmp = (
+        pairs[:, :, :, 1].astype(acc)
+        - pairs[:, :, :, 0].astype(acc)
+        + jnp.asarray(offset, acc)
+    )
+    tmp = jax.lax.optimization_barrier(tmp)
+    return tmp.sum(axis=1) / jnp.asarray(g, acc)
+
+
+def _xla_fused_banked(frames, *, offset, accum_dtype, divide_first):
+    """Fused multi-bank path: (B, G, N, H, W) -> (B, N/2, H, W), one pass.
+
+    Unlike the reference scan this lets XLA fuse the pair subtraction into
+    the group reduction — no per-group dispatch, no materialized diffs.
+    """
+    b, g, n, h, w = frames.shape
+    acc = jnp.dtype(accum_dtype)
+    pairs = frames.reshape(b, g, n // 2, 2, h, w)
+    diff = (
+        pairs[:, :, :, 1].astype(acc)
+        - pairs[:, :, :, 0].astype(acc)
+        + jnp.asarray(offset, acc)
+    )
+    gg = jnp.asarray(g, acc)
+    if jnp.issubdtype(acc, jnp.integer):
+        if divide_first:
+            return (diff // gg).sum(axis=1, dtype=acc)
+        return diff.sum(axis=1, dtype=acc) // gg
+    if divide_first:
+        return (diff / gg).sum(axis=1, dtype=acc)
+    return diff.sum(axis=1, dtype=acc) / gg
+
+
 @functools.partial(
     jax.jit,
-    static_argnames=("offset", "algorithm", "backend", "accum_dtype", "interpret"),
+    static_argnames=(
+        "offset",
+        "algorithm",
+        "backend",
+        "accum_dtype",
+        "interpret",
+        "row_tile",
+        "pair_tile",
+    ),
 )
 def subtract_average(
     frames: jnp.ndarray,
@@ -89,8 +158,14 @@ def subtract_average(
     backend: str = "auto",
     accum_dtype=jnp.float32,
     interpret: bool | None = None,
+    row_tile: int | None = None,
+    pair_tile: int | None = None,
 ) -> jnp.ndarray:
-    """PRISM denoise: (G, N, H, W) frames -> (N/2, H, W) averaged diffs."""
+    """PRISM denoise: (G, N, H, W) frames -> (N/2, H, W) averaged diffs.
+
+    ``row_tile`` / ``pair_tile`` override the Pallas block geometry (Alg 3
+    kernels only; XLA has no tiles and ignores them).
+    """
     if algorithm not in ALGORITHMS:
         raise ValueError(f"algorithm must be one of {ALGORITHMS}, got {algorithm}")
     backend = _resolve(backend)
@@ -110,6 +185,8 @@ def subtract_average(
             divide_first=(algorithm == "alg3_v2"),
             accum_dtype=accum_dtype,
             interpret=interp,
+            row_tile=row_tile,
+            pair_tile=pair_tile,
         )
     if algorithm in ("alg1", "alg2"):
         return _xla_materialized(frames, offset=offset, accum_dtype=accum_dtype)
@@ -132,7 +209,15 @@ def stream_init(n: int, h: int, w: int, accum_dtype=jnp.float32) -> jnp.ndarray:
 
 @functools.partial(
     jax.jit,
-    static_argnames=("num_groups", "offset", "variant", "backend", "interpret"),
+    static_argnames=(
+        "num_groups",
+        "offset",
+        "variant",
+        "backend",
+        "interpret",
+        "row_tile",
+        "pair_tile",
+    ),
     donate_argnums=(0,),
 )
 def stream_step(
@@ -144,6 +229,8 @@ def stream_step(
     variant: str = "divide_last",
     backend: str = "auto",
     interpret: bool | None = None,
+    row_tile: int | None = None,
+    pair_tile: int | None = None,
 ) -> jnp.ndarray:
     backend = _resolve(backend)
     interp = (not _on_tpu()) if interpret is None else interpret
@@ -155,6 +242,8 @@ def stream_step(
             offset=offset,
             divide_first=(variant == "divide_first"),
             interpret=interp,
+            row_tile=row_tile,
+            pair_tile=pair_tile,
         )
     return ref_stream_step(
         sum_frame,
@@ -167,3 +256,127 @@ def stream_step(
 
 def stream_finalize(sum_frame, num_groups, *, variant="divide_last"):
     return ref_stream_finalize(sum_frame, num_groups, variant=variant)
+
+
+# ---------------------------------------------------------------------------
+# Multi-bank API: leading bank axis, fast path on every backend. Called
+# either directly (many banks on one device) or per-shard inside
+# ``repro.core.banks``'s shard_map (one bank slice per device).
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "offset",
+        "algorithm",
+        "backend",
+        "accum_dtype",
+        "interpret",
+        "row_tile",
+        "pair_tile",
+    ),
+)
+def multibank_subtract_average(
+    frames: jnp.ndarray,
+    *,
+    offset: float = 0.0,
+    algorithm: str = "alg3",
+    backend: str = "auto",
+    accum_dtype=jnp.float32,
+    interpret: bool | None = None,
+    row_tile: int | None = None,
+    pair_tile: int | None = None,
+) -> jnp.ndarray:
+    """(B, G, N, H, W) -> (B, N/2, H, W), banks independent (zero traffic).
+
+    Only the Alg 3 variants have a fused multi-bank Pallas kernel; the
+    Alg 1/2 baselines exist for dataflow comparison and run the vmapped
+    materialized XLA path under ``backend='auto'``. Requesting
+    ``backend='pallas'`` for them explicitly is an error rather than a
+    silent fallback.
+    """
+    if algorithm not in ALGORITHMS:
+        raise ValueError(f"algorithm must be one of {ALGORITHMS}, got {algorithm}")
+    if backend == "pallas" and algorithm in ("alg1", "alg2"):
+        raise ValueError(
+            f"no multibank pallas kernel for {algorithm}; use backend='auto'/"
+            "'xla' (vmapped materialized baseline) or the single-bank "
+            "subtract_average"
+        )
+    backend = _resolve(backend)
+    interp = (not _on_tpu()) if interpret is None else interpret
+    divide_first = algorithm == "alg3_v2"
+    if backend == "pallas" and algorithm in ("alg3", "alg3_v2"):
+        return denoise_multibank.multibank_subtract_average(
+            frames,
+            offset=offset,
+            divide_first=divide_first,
+            accum_dtype=accum_dtype,
+            interpret=interp,
+            row_tile=row_tile,
+            pair_tile=pair_tile,
+        )
+    if algorithm in ("alg1", "alg2"):
+        return _xla_materialized_banked(
+            frames, offset=offset, accum_dtype=accum_dtype
+        )
+    return _xla_fused_banked(
+        frames, offset=offset, accum_dtype=accum_dtype, divide_first=divide_first
+    )
+
+
+def multibank_stream_init(
+    banks: int, n: int, h: int, w: int, accum_dtype=jnp.float32
+) -> jnp.ndarray:
+    """Running-sum state with a leading bank axis: (B, N/2, H, W) zeros."""
+    return jnp.zeros((banks, n // 2, h, w), dtype=jnp.dtype(accum_dtype))
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "num_groups",
+        "offset",
+        "variant",
+        "backend",
+        "interpret",
+        "row_tile",
+        "pair_tile",
+    ),
+    donate_argnums=(0,),
+)
+def multibank_stream_step(
+    sum_frames: jnp.ndarray,
+    group_frames: jnp.ndarray,
+    *,
+    num_groups: int,
+    offset: float = 0.0,
+    variant: str = "divide_last",
+    backend: str = "auto",
+    interpret: bool | None = None,
+    row_tile: int | None = None,
+    pair_tile: int | None = None,
+) -> jnp.ndarray:
+    """Fold one group per bank (B, N, H, W) into donated sums (B, N/2, H, W)."""
+    backend = _resolve(backend)
+    interp = (not _on_tpu()) if interpret is None else interpret
+    if backend == "pallas":
+        return denoise_multibank.multibank_stream_step(
+            group_frames,
+            sum_frames,
+            num_groups=num_groups,
+            offset=offset,
+            divide_first=(variant == "divide_first"),
+            interpret=interp,
+            row_tile=row_tile,
+            pair_tile=pair_tile,
+        )
+    # vectorized over the bank axis; subtract fuses into the accumulate
+    return ref_stream_step(
+        sum_frames,
+        group_frames,
+        offset=offset,
+        variant=variant,
+        num_groups=num_groups,
+    )

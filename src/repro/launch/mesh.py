@@ -10,8 +10,7 @@ links).
 
 from __future__ import annotations
 
-import jax
-from jax.sharding import AxisType
+from repro import jax_compat
 
 __all__ = ["make_production_mesh", "make_mesh", "HW"]
 
@@ -19,11 +18,11 @@ __all__ = ["make_production_mesh", "make_mesh", "HW"]
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return jax_compat.make_mesh(shape, axes)
 
 
 def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]):
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return jax_compat.make_mesh(shape, axes)
 
 
 class HW:

@@ -111,10 +111,12 @@ def _parse_computations(text: str) -> dict[str, list[_Instr]]:
     return comps
 
 
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+
 def _operands(instr: _Instr) -> list[str]:
     # take ids up to the closing paren of the operand list
     depth = 1
-    out = []
     buf = ""
     for ch in instr.rest:
         if ch == "(":
@@ -124,11 +126,10 @@ def _operands(instr: _Instr) -> list[str]:
             if depth == 0:
                 break
         buf += ch
-    for tok in buf.split(","):
-        tok = tok.strip()
-        if tok.startswith("%"):
-            out.append(tok[1:])
-    return out
+    # Operands are the %-prefixed ids; some XLA versions prefix each with its
+    # type (``f32[8,16]{1,0} %name``), so match ids rather than splitting on
+    # commas (shape dims contain commas too).
+    return _OPERAND_RE.findall(buf)
 
 
 def _attr(instr: _Instr, key: str) -> str | None:

@@ -17,6 +17,7 @@ from __future__ import annotations
 import jax
 import numpy as np
 
+from repro import jax_compat
 from repro.distributed import sharding as sh
 
 __all__ = ["elastic_reshard", "available_mesh"]
@@ -35,10 +36,8 @@ def available_mesh(axis_names=("data", "model"), *, devices=None):
         while (m * 2) * (m * 2) <= n:
             m *= 2
         shape = (n // m, m)
-    return jax.make_mesh(
-        shape, axis_names,
-        devices=devs[: int(np.prod(shape))],
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axis_names),
+    return jax_compat.make_mesh(
+        shape, axis_names, devices=devs[: int(np.prod(shape))]
     )
 
 

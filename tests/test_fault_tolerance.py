@@ -106,13 +106,12 @@ class TestElastic:
             from repro.runtime.elastic import elastic_reshard
             spec = {"w": ParamSpec((8, 16), ("embed", "mlp"))}
             state = {"w": jnp.arange(128, dtype=jnp.float32).reshape(8, 16)}
-            mesh8 = jax.make_mesh((4, 2), ("data", "model"),
-                axis_types=(jax.sharding.AxisType.Auto,) * 2)
+            from repro.jax_compat import make_mesh
+            mesh8 = make_mesh((4, 2), ("data", "model"))
             sharded = jax.tree_util.tree_map(
                 jax.device_put, state, named_shardings(spec, mesh8))
-            mesh4 = jax.make_mesh((2, 2), ("data", "model"),
-                devices=jax.devices()[:4],
-                axis_types=(jax.sharding.AxisType.Auto,) * 2)
+            mesh4 = make_mesh((2, 2), ("data", "model"),
+                              devices=jax.devices()[:4])
             moved = elastic_reshard(sharded, spec, mesh4)
             np.testing.assert_array_equal(np.asarray(moved["w"]),
                                           np.asarray(state["w"]))

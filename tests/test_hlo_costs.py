@@ -24,8 +24,10 @@ def test_scan_flops_multiplied_by_trip_count():
     expected = 12 * 2 * 128**3
     assert abs(r["flops"] - expected) / expected < 0.01
     # raw cost_analysis undercounts by exactly the trip count
-    raw = _compiled(f, a, ws).cost_analysis()["flops"]
-    assert raw == pytest.approx(expected / 12)
+    raw = _compiled(f, a, ws).cost_analysis()
+    if isinstance(raw, (list, tuple)):  # older JAX returns [dict]
+        raw = raw[0]
+    assert raw["flops"] == pytest.approx(expected / 12, rel=1e-4)
 
 
 def test_nested_scan():
@@ -85,8 +87,8 @@ def test_collectives_counted_with_trips():
         import jax, jax.numpy as jnp
         from jax.sharding import NamedSharding, PartitionSpec as P
         from repro.roofline import hlo_costs
-        mesh = jax.make_mesh((4,), ("m",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.jax_compat import make_mesh
+        mesh = make_mesh((4,), ("m",))
         sh = NamedSharding(mesh, P(None, "m"))
         rep = NamedSharding(mesh, P())
 

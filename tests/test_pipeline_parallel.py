@@ -22,8 +22,8 @@ def test_pipeline_matches_sequential():
         def stage_fn(w, x):
             return jnp.tanh(x @ w)
 
-        mesh = jax.make_mesh((P_STAGES,), ("stage",),
-            axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.jax_compat import make_mesh
+        mesh = make_mesh((P_STAGES,), ("stage",))
         out = pipeline_forward({"w": ws}, xs, mesh,
                                lambda p, x: stage_fn(p["w"], x))
 
