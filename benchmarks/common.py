@@ -1,10 +1,13 @@
 """Shared benchmark helpers. Every table prints ``name,us_per_call,derived``
-CSV rows via ``emit`` so ``benchmarks.run`` output is machine-readable.
+CSV rows via ``emit`` so ``benchmarks.run`` output is machine-readable;
+executor tables additionally print full ``StreamReport`` rows via
+``emit_report`` (transfer/stall/overlap and the per-stage ring fields —
+the data PR 1's CSVs silently dropped).
 
 ``bench_record`` additionally appends structured trajectory points to
 ``BENCH_denoise.json`` (repo root; override with ``BENCH_DENOISE_PATH``) so
 speedups of the fused/prefetched paths are tracked across PRs — see
-README.md for the schema.
+docs/BENCHMARKS.md for the schema.
 """
 
 from __future__ import annotations
@@ -18,9 +21,11 @@ import jax
 import numpy as np
 
 from repro.core.denoise import DenoiseConfig
+from repro.core.streaming import StreamReport
 
 __all__ = [
     "emit",
+    "emit_report",
     "timeit",
     "bench_config",
     "bench_record",
@@ -71,6 +76,25 @@ def bench_config(quick: bool, **kw) -> DenoiseConfig:
 
 def emit(name: str, us_per_call: float, derived: str = "") -> None:
     print(f"{name},{us_per_call:.1f},{derived}")
+
+
+_report_header_printed = False
+
+
+def emit_report(name: str, report: StreamReport) -> None:
+    """Print one full ``StreamReport`` CSV row (header once per process).
+
+    Carries every field ``StreamReport.row`` produces — elapsed/buffering/
+    compute plus transfer_s, stall_s, overlap_frac and the ring-pipeline
+    stage breakdown — so executor benchmarks never lose the overlap data
+    to a truncated row again. Rows are prefixed ``report/`` to keep them
+    distinguishable from the 3-column ``emit`` rows in mixed output.
+    """
+    global _report_header_printed
+    if not _report_header_printed:
+        print(f"# {StreamReport.header()}")
+        _report_header_printed = True
+    print(f"report/{report.row(name)}")
 
 
 def timeit(fn, *args, warmup: int = 1, iters: int = 3, **kw) -> float:

@@ -19,6 +19,7 @@ from benchmarks import (
     table6_group_sweep,
     table7_cpu_baseline,
     table8_buffered_vs_inline,
+    table9_ring_depth,
 )
 
 MODULES = [
@@ -30,6 +31,7 @@ MODULES = [
     ("table6", table6_group_sweep),
     ("table7", table7_cpu_baseline),
     ("table8-10", table8_buffered_vs_inline),
+    ("table9", table9_ring_depth),
     ("fig8", fig8_denoise_snr),
     ("roofline", roofline_report),
 ]

@@ -26,6 +26,7 @@ from benchmarks.common import (
     bench_config,
     bench_record,
     emit,
+    emit_report,
 )
 from repro.core.denoise import DenoiseConfig
 from repro.core.streaming import run_buffered, run_inline
@@ -86,6 +87,9 @@ def run(quick: bool = True) -> None:
         f"total_s={pre.elapsed_s:.3f};speedup={ratio:.2f}x;"
         f"overlap_frac={pre.overlap_frac:.2f}",
     )
+    # full rows: transfer/stall/overlap + ring fields (dropped pre-PR 2)
+    emit_report("table8/inline_sync", sync)
+    emit_report("table8/inline_prefetch", pre)
     bench_record(
         "inline_prefetch_vs_sync",
         config={

@@ -1,0 +1,183 @@
+"""Table 9 (framework extension): ring-buffer depth sweep.
+
+The paper's §5 ping-pong buffering is a depth-2 ring; ``run_pipelined``
+generalizes the depth. This table measures what depth buys: we replay a
+pre-synthesized acquisition through ``run_pipelined`` at ring depths
+1/2/3/4 under a *bursty* camera model — every ``BURST_EVERY``-th chunk's
+readout takes ``BURST_COMPUTE_MULT`` (~4) compute-intervals extra
+(frame-batch readout jitter, the case deeper rings exist for). A depth-1 ring serializes staging and compute; a
+depth-2 (ping-pong) ring hides steady-state staging but surfaces each
+burst as a compute stall; deeper rings bank chunks ahead during the fast
+phase and ride the burst out.
+
+Sweep: slot count x chunk size (frames per group N) x backend. The
+``pallas`` column only runs on a real TPU — on CPU it would be the
+interpreter, which benchmarks the emulation, not the kernel.
+
+Per-depth speedups vs the depth-1 baseline and overlap fractions are
+appended to ``BENCH_denoise.json`` as ``ring_depth_overlap`` points (see
+docs/BENCHMARKS.md). On this host the expectation checked by the PR
+acceptance criteria is: deeper rings (>= 3 slots) reach at least the
+2-slot overlap fraction.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Iterator
+
+import jax
+import numpy as np
+
+from benchmarks.common import (
+    PAPER_H,
+    PAPER_W,
+    bench_config,
+    bench_record,
+    emit,
+    emit_report,
+)
+from repro.core.streaming import run_pipelined
+from repro.data.prism import PrismSource
+
+DEPTHS = (1, 2, 3, 4)
+BURST_EVERY = 4  # every 4th chunk is a slow readout ...
+# ... taking ~2.5 compute-intervals extra: sized so a 2-slot (ping-pong)
+# ring structurally cannot hide a burst (2 banked chunks < 2.5) but a
+# 3-slot ring can (3 banked chunks >= 2.5) — and the deeper>=shallower
+# overlap ordering survives host-speed drift in either direction
+BURST_COMPUTE_MULT = 2.5
+
+
+def bursty(chunks: list, burst_s: float, every: int = BURST_EVERY) -> Iterator:
+    """Replay device-resident chunks with periodic readout bursts.
+
+    The chunks are pre-committed to the device, like the paper's camera
+    DMA-ing frames straight into DRAM banks: the producer's fast phase is
+    then near-free and the only staging cost is the injected burst, so the
+    sweep isolates ring *scheduling* — how much of a readout burst each
+    depth can ride out on banked-ahead chunks — from host->device copy
+    bandwidth (which table8 measures).
+    """
+    for i, chunk in enumerate(chunks):
+        if i % every == every - 1:
+            time.sleep(burst_s)
+        yield chunk
+
+
+def _measure_depths(cfg, chunks, iters=4):
+    """Pooled-over-iters report per depth, iterations round-robined.
+
+    Three choices against measurement noise on a small shared host:
+
+    * round-robin: running all iterations of one depth back-to-back lets
+      transient machine load (another process, turbo/thermal drift) land
+      entirely on one depth and invert the depth-vs-overlap ordering;
+      interleaving exposes every depth to the same drift.
+    * per-cycle burst recalibration: the burst must stay ~2.5 compute-
+      intervals (see BURST_COMPUTE_MULT) for the depth ordering to carry
+      signal, but host compute speed drifts across seconds — a burst
+      sized once can end up anywhere from ~1x to ~5x compute by the time
+      a depth is measured. Each cycle re-times a no-burst replay and
+      re-sizes the burst from it.
+    * pooling, not best-of: per-depth stall/transfer/elapsed are *summed*
+      across iterations and the overlap fraction computed from the pooled
+      sums. Best-of/min-of selection amplifies each depth's lucky tail —
+      one slow-compute iteration can hand the shallow baseline a near-1.0
+      overlap.
+    """
+    from repro.core.streaming import StreamReport
+
+    acc: dict[int, list] = {d: [] for d in DEPTHS}
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        run_pipelined(cfg, iter(chunks), num_slots=1)  # calibrate this cycle
+        burst_s = max(
+            BURST_COMPUTE_MULT * (time.perf_counter() - t0) / len(chunks), 0.004
+        )
+        for depth in DEPTHS:
+            _, rep = run_pipelined(
+                cfg, bursty(chunks, burst_s), num_slots=depth, policy="block"
+            )
+            acc[depth].append(rep)
+    pooled = {}
+    for depth, reps in acc.items():
+        pooled[depth] = StreamReport(
+            elapsed_s=sum(r.elapsed_s for r in reps),
+            buffering_s=0.0,
+            compute_s=sum(r.compute_s for r in reps),
+            frames=sum(r.frames for r in reps),
+            bytes_in=sum(r.bytes_in for r in reps),
+            transfer_s=sum(r.transfer_s for r in reps),
+            stall_s=sum(r.stall_s for r in reps),
+            num_slots=depth,
+            produce_wait_s=sum(r.produce_wait_s for r in reps),
+            drops=sum(r.drops for r in reps),
+            ring_occupancy_mean=sum(r.ring_occupancy_mean for r in reps)
+            / len(reps),
+            ring_occupancy_max=max(r.ring_occupancy_max for r in reps),
+        )
+    return pooled
+
+
+def run(quick: bool = True) -> None:
+    backends = ["xla"] + (["pallas"] if jax.default_backend() == "tpu" else [])
+    # chunk compute must dwarf time.sleep/scheduler jitter for the depth
+    # ordering to be stable on a small host — N >= 400 in both modes
+    chunk_sizes = (400, 800) if quick else (400, 1000)
+    for backend in backends:
+        for n in chunk_sizes:
+            cfg = bench_config(
+                quick,
+                num_groups=24,  # 6 bursts per replay: averages burst noise
+                frames_per_group=n,
+                height=PAPER_H,
+                width=PAPER_W,
+                backend=backend,
+            )
+            chunks = [
+                jax.device_put(np.asarray(c)) for c in PrismSource(cfg).groups()
+            ]
+            jax.block_until_ready(chunks)
+
+            run_pipelined(cfg, iter(chunks[:2]), num_slots=1)  # warm the jit
+            reports = _measure_depths(cfg, chunks)
+            base = reports[DEPTHS[0]]
+            for d in DEPTHS:
+                rep = reports[d]
+                speedup = base.elapsed_s / max(rep.elapsed_s, 1e-9)
+                tag = f"table9/{backend}/N{n}/slots{d}"
+                emit(
+                    tag,
+                    rep.elapsed_s * 1e6 / rep.frames,
+                    f"speedup_vs_slots1={speedup:.2f}x;"
+                    f"overlap_frac={rep.overlap_frac:.2f};"
+                    f"stall_s={rep.stall_s:.3f};"
+                    f"occ_mean={rep.ring_occupancy_mean:.2f}",
+                )
+                emit_report(tag, rep)
+                if d == 1:
+                    continue  # the baseline itself is not a speedup point
+                bench_record(
+                    "ring_depth_overlap",
+                    config={
+                        "G": cfg.num_groups,
+                        "N": n,
+                        "H": cfg.height,
+                        "W": cfg.width,
+                        "backend": backend,
+                        "slots": d,
+                        "policy": "block",
+                        "burst_every": BURST_EVERY,
+                        "burst_compute_mult": BURST_COMPUTE_MULT,
+                    },
+                    baseline="run_pipelined num_slots=1 (serial ring)",
+                    candidate=f"run_pipelined num_slots={d}",
+                    baseline_s=round(base.elapsed_s, 4),
+                    candidate_s=round(rep.elapsed_s, 4),
+                    speedup=round(speedup, 3),
+                    overlap_frac=round(rep.overlap_frac, 3),
+                    stall_s=round(rep.stall_s, 4),
+                    produce_wait_s=round(rep.produce_wait_s, 4),
+                    ring_occupancy_mean=round(rep.ring_occupancy_mean, 2),
+                )

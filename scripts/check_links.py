@@ -1,0 +1,57 @@
+#!/usr/bin/env python
+"""Fail on broken intra-repo links in README.md and docs/*.md.
+
+Checks every inline markdown link ``[text](target)`` whose target is a
+relative path (external ``http(s)://``/``mailto:`` links and pure
+``#anchor`` links are skipped). Targets resolve relative to the file that
+contains them; a ``#fragment`` suffix is ignored for existence checking.
+
+Usage: python scripts/check_links.py  (exits 1 listing broken links)
+"""
+
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+SKIP_PREFIXES = ("http://", "https://", "mailto:")
+
+
+def md_files() -> list[pathlib.Path]:
+    files = [REPO / "README.md"]
+    files += sorted((REPO / "docs").glob("*.md")) if (REPO / "docs").is_dir() else []
+    return [f for f in files if f.is_file()]
+
+
+def check(path: pathlib.Path) -> list[str]:
+    broken = []
+    for lineno, line in enumerate(path.read_text().splitlines(), 1):
+        for target in LINK.findall(line):
+            if target.startswith(SKIP_PREFIXES) or target.startswith("#"):
+                continue
+            rel = target.split("#", 1)[0]
+            if not rel:
+                continue
+            resolved = (path.parent / rel).resolve()
+            if not resolved.exists():
+                broken.append(
+                    f"{path.relative_to(REPO)}:{lineno}: broken link "
+                    f"'{target}' (resolved: {resolved})"
+                )
+    return broken
+
+
+def main() -> int:
+    files = md_files()
+    broken = [b for f in files for b in check(f)]
+    for b in broken:
+        print(b, file=sys.stderr)
+    print(f"checked {len(files)} markdown files, {len(broken)} broken links")
+    return 1 if broken else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -2,9 +2,13 @@
 
 Public surface:
   DenoiseConfig / StreamingDenoiser — the subtract-and-average stage
+  run_pipelined                      — ring-pipelined 3-stage executor (§5)
   run_inline / run_buffered          — inline vs buffer-then-process drivers
+  RingBuffer                         — bounded ring with backpressure
   latency_model                      — paper §6 analytic model (exact)
   banks                              — multi-bank (multi-device) scaling
+
+See docs/ARCHITECTURE.md for the paper-section -> module map.
 """
 
 from repro.core.denoise import (  # noqa: F401
@@ -13,4 +17,11 @@ from repro.core.denoise import (  # noqa: F401
     DenoiseConfig,
     StreamingDenoiser,
 )
-from repro.core.streaming import StreamReport, run_buffered, run_inline  # noqa: F401
+from repro.core.ringbuf import RingBuffer, RingClosed, RingStats  # noqa: F401
+from repro.core.streaming import (  # noqa: F401
+    DownloadConsumer,
+    StreamReport,
+    run_buffered,
+    run_inline,
+    run_pipelined,
+)

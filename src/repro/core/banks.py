@@ -15,6 +15,13 @@ program elsewhere — never the per-group reference scan. Older-JAX quirks
 ``repro.jax_compat``; the pcast varying-cast is applied only when the
 installed JAX has a varying-type system.
 
+Streaming ingest composes with the ring-buffer pipeline
+(``repro.core.ringbuf``): ``run_pipelined_banked`` gives every bank shard
+its own bounded ring, so each camera's acquisition thread stages
+independently with backpressure, and the compute step gathers one chunk
+per bank, lands the stack bank-sharded, and folds it with
+``banked_stream_step`` — the paper's one-DRAM-pipeline-per-FPGA topology.
+
 On this CPU container the mesh has a single device unless the caller brings
 a multi-device mesh (tests spawn subprocesses with
 ``XLA_FLAGS=--xla_force_host_platform_device_count=8``).
@@ -23,15 +30,26 @@ a multi-device mesh (tests spawn subprocesses with
 from __future__ import annotations
 
 import functools
+import threading
+import time
+from typing import Iterator, Sequence
 
 import jax
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.denoise import DenoiseConfig
+from repro.core.ringbuf import RingBuffer, RingClosed
+from repro.core.streaming import StreamReport
 from repro.jax_compat import shard_map
 from repro.kernels import ops
 
-__all__ = ["make_bank_mesh", "banked_subtract_average", "banked_stream_step"]
+__all__ = [
+    "make_bank_mesh",
+    "banked_subtract_average",
+    "banked_stream_step",
+    "run_pipelined_banked",
+]
 
 
 def make_bank_mesh(num_banks: int | None = None) -> Mesh:
@@ -104,3 +122,134 @@ def banked_stream_step(
         )
 
     return _step(sum_frames, group_frames)
+
+
+def run_pipelined_banked(
+    config: DenoiseConfig,
+    sources: Sequence[Iterator[np.ndarray]],
+    mesh: Mesh,
+    *,
+    num_slots: int | None = None,
+    policy: str | None = None,
+):
+    """Ring-pipelined multi-bank ingest: one bounded ring per bank shard.
+
+    ``sources`` holds one chunk iterator per bank (e.g.
+    ``PrismSource.bank_sources``), each yielding (N, H, W) groups. Every
+    bank gets its own acquisition thread and its own ``RingBuffer`` —
+    cameras stage independently, with per-bank backpressure, exactly like
+    the paper's one-DRAM-pipeline-per-FPGA topology. Each compute step
+    gathers one chunk from every ring (a per-group barrier across banks),
+    lands the (B, N, H, W) stack bank-sharded on the mesh, and folds it
+    with the fused ``banked_stream_step``. Only the lossless ``"block"``
+    policy is accepted: asymmetric per-bank drops would misalign groups
+    at the gather barrier, so ``"drop_oldest"`` raises.
+
+    Returns ``(out, report)`` like ``run_pipelined``; ``out`` is the
+    bank-sharded (B, N/2, H, W) result. In the report, ``transfer_s`` /
+    ``produce_wait_s`` / ``drops`` are summed over the per-bank rings
+    (bank staging overlaps, so ``transfer_s`` can exceed ``elapsed_s``),
+    ``stall_s`` is the compute thread's total wait on the gather, and the
+    occupancy fields aggregate mean/max depth across rings.
+    """
+    banks = mesh.shape["bank"]
+    if len(sources) != banks:
+        raise ValueError(f"mesh has {banks} banks but got {len(sources)} sources")
+    num_slots = config.num_slots if num_slots is None else num_slots
+    policy = config.overflow_policy if policy is None else policy
+    if policy != "block":
+        # asymmetric per-bank drops would silently fold bank i's group k
+        # with bank j's group k+1 at the gather barrier
+        raise ValueError(
+            "run_pipelined_banked requires policy='block': the per-group "
+            f"gather barrier cannot tolerate per-bank loss (got {policy!r})"
+        )
+
+    rings = [RingBuffer(num_slots, policy=policy) for _ in range(banks)]
+    errors: list[BaseException] = []
+
+    def _produce(ring: RingBuffer, source: Iterator[np.ndarray]) -> None:
+        it = iter(source)
+        try:
+            while True:
+                t0 = time.perf_counter()  # time the pull (camera) + the copy
+                try:
+                    chunk = next(it)
+                except StopIteration:
+                    break
+                staged = np.ascontiguousarray(chunk)
+                ring.put((staged, time.perf_counter() - t0))
+        except RingClosed:
+            pass  # compute side shut down early (error path)
+        except BaseException as e:
+            errors.append(e)
+        finally:
+            ring.close()
+
+    threads = [
+        threading.Thread(
+            target=_produce, args=(ring, src), name=f"prism-bank{i}", daemon=True
+        )
+        for i, (ring, src) in enumerate(zip(rings, sources))
+    ]
+    for t in threads:
+        t.start()
+
+    spec = P("bank", None, None, None)
+    sharding = NamedSharding(mesh, spec)
+    c = config
+    t_start = time.perf_counter()
+    state = jax.device_put(
+        ops.multibank_stream_init(
+            banks, c.frames_per_group, c.height, c.width, c.accum_dtype
+        ),
+        sharding,
+    )
+    frames = 0
+    transfer_s = 0.0
+    stall_s = 0.0
+    try:
+        while True:
+            t_wait = time.perf_counter()
+            try:
+                items = [ring.get() for ring in rings]
+            except RingClosed:
+                break  # sources drained (or an error closed the rings)
+            stall_s += time.perf_counter() - t_wait
+            transfer_s += sum(dt for _, dt in items)
+            dev = jax.device_put(np.stack([chunk for chunk, _ in items]), sharding)
+            state = banked_stream_step(state, dev, mesh, config=config)
+            frames += banks * items[0][0].shape[0]
+    finally:
+        for ring in rings:
+            ring.close()
+        for t in threads:
+            t.join()
+
+    if errors:
+        raise errors[0]
+    gets = {ring.stats.gets for ring in rings}
+    if len(gets) > 1 or any(len(ring) for ring in rings):
+        raise ValueError(
+            "bank sources yielded unequal chunk counts: a per-group barrier "
+            "needs one chunk per bank per step"
+        )
+
+    out = ops.stream_finalize(state, c.num_groups, variant=c.variant)
+    jax.block_until_ready(out)
+    elapsed = time.perf_counter() - t_start
+    stats = [ring.stats for ring in rings]
+    return out, StreamReport(
+        elapsed_s=elapsed,
+        buffering_s=0.0,
+        compute_s=elapsed - stall_s,
+        frames=frames,
+        bytes_in=frames * c.frame_pixels * 2,
+        transfer_s=transfer_s,
+        stall_s=stall_s,
+        num_slots=num_slots,
+        produce_wait_s=sum(s.put_wait_s for s in stats),
+        drops=sum(s.drops for s in stats),
+        ring_occupancy_mean=sum(s.occupancy_mean for s in stats) / banks,
+        ring_occupancy_max=max(s.occupancy_max for s in stats),
+    )

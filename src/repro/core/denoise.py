@@ -44,6 +44,8 @@ class DenoiseConfig:
     num_banks: int = 1           # B  (paper: one FPGA per 256x80 bank)
     row_tile: int | None = None  # Pallas rows/block override (None = auto)
     pair_tile: int | None = None  # Pallas frame-pairs/block override
+    num_slots: int = 2           # ring depth for run_pipelined (2 = ping-pong)
+    overflow_policy: str = "block"  # block (lossless) | drop_oldest (real-time)
 
     def __post_init__(self):
         if self.frames_per_group % 2:
@@ -52,6 +54,13 @@ class DenoiseConfig:
             raise ValueError(f"unknown algorithm {self.algorithm}")
         if self.num_banks < 1:
             raise ValueError("num_banks must be >= 1")
+        if self.num_slots < 1:
+            raise ValueError("num_slots must be >= 1")
+        if self.overflow_policy not in ("block", "drop_oldest"):
+            raise ValueError(
+                "overflow_policy must be 'block' or 'drop_oldest', got "
+                f"{self.overflow_policy!r}"
+            )
 
     @property
     def pairs_per_group(self) -> int:

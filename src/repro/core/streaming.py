@@ -1,49 +1,76 @@
-"""Streaming executor: inline (FPGA-style) vs buffer-then-process workflows.
+"""Streaming executors: inline, ring-pipelined, and buffer-then-process.
 
 Reproduces the systems argument of paper §7 (Tables 7-10): when
 preprocessing runs *inline* with acquisition, the buffering step of
 CPU/GPU-style workflows disappears — and that buffering step alone costs
 about as much as the whole inline pipeline.
 
-Two executors over the same synthetic camera source:
+Three executors over the same synthetic camera source:
 
-* ``run_inline``   — per-group ingest into the running-sum denoiser
-  (Alg 3 dataflow), state donated between steps; optionally rate-limited to
-  the camera inter-frame interval (the paper's LED/software trigger modes).
-  With ``prefetch=True`` (default) it is **double-buffered**: a staging
-  worker pulls chunk *k+1* from the source and ``jax.device_put``s it while
-  chunk *k* computes, the software analogue of the paper's ping-pong BRAM
-  buffers (and of the Mosaic DMA/compute overlap inside the kernel, one
-  level up the hierarchy). The numerical stream is bit-identical with
-  prefetching on or off — only the staging schedule changes.
+* ``run_pipelined`` — the general form of the paper's §5 DRAM ping-pong
+  buffering: acquisition, denoise, and an optional downstream consumer run
+  as three overlapped stages connected by bounded ``RingBuffer``s
+  (``repro.core.ringbuf``) with backpressure. ``num_slots`` sets the ring
+  depth (2 = the paper's ping-pong pair; deeper absorbs rate jitter),
+  ``policy`` the overflow behaviour (``"block"`` = lossless backpressure,
+  ``"drop_oldest"`` = real-time camera mode), and ``consumer`` an optional
+  per-step stage fed the running partial average (e.g. averaging-reduction
+  download to host, SNR accumulation) on its own thread.
+* ``run_inline`` — the two-stage special case. ``prefetch=True`` (default)
+  delegates to ``run_pipelined(num_slots=2, consumer=None)``: chunk *k+1*
+  is acquired and landed on device while chunk *k* computes, the software
+  analogue of the paper's ping-pong buffers. ``prefetch=False`` is the
+  serial stage-then-compute schedule. The numerical stream is bit-identical
+  across all of these — only the staging schedule changes.
 * ``run_buffered`` — stage all raw frames into a host-side buffer first
   (the acquisition phase), then denoise the staged array (the processing
   phase). Reports both phases separately, like the paper's Tables 8-10.
 
-``StreamReport`` now separates transfer from compute: ``transfer_s`` is
-total staging time (source next + host->device copy), ``stall_s`` the part
-the compute loop actually waited on, so ``overlap_s = transfer_s -
-stall_s`` is acquisition time hidden under compute.
+``StreamReport`` carries the per-stage breakdown: ``transfer_s`` is total
+staging time (source next + host->device copy), ``stall_s`` the part the
+compute loop actually waited on (so ``overlap_s = transfer_s - stall_s`` is
+acquisition time hidden under compute), ``produce_wait_s`` producer time
+blocked on a full ring (backpressure), ``consume_wait_s``/``consume_s`` the
+consumer stage's starvation/busy split, and ``ring_occupancy_*`` the staged
+queue depth. ``StreamReport.header()``/``.row(name)`` emit the full
+breakdown as CSV. See ``docs/ARCHITECTURE.md`` for the stage diagram and
+the ring-buffer contract.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
-from concurrent.futures import ThreadPoolExecutor
-from typing import Callable, Iterator
+from typing import Any, Callable, Iterator
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.denoise import DenoiseConfig, StreamingDenoiser
+from repro.core.ringbuf import RingBuffer, RingClosed
 
-__all__ = ["StreamReport", "run_inline", "run_buffered", "rate_limited"]
+__all__ = [
+    "StreamReport",
+    "run_pipelined",
+    "run_inline",
+    "run_buffered",
+    "rate_limited",
+    "DownloadConsumer",
+]
 
 
 @dataclasses.dataclass
 class StreamReport:
+    """Wall-clock breakdown of one executor run.
+
+    The first block of fields applies to every executor; the pipeline
+    block (``num_slots`` onward) is populated by ``run_pipelined`` (and by
+    ``run_inline(prefetch=True)``, which delegates to it) and left at the
+    zero defaults elsewhere.
+    """
+
     elapsed_s: float
     buffering_s: float
     compute_s: float
@@ -51,10 +78,19 @@ class StreamReport:
     bytes_in: int
     transfer_s: float = 0.0   # total staging time (source + host->device)
     stall_s: float = 0.0      # staging time NOT hidden under compute
+    # -- pipeline stage breakdown (run_pipelined only) ----------------------
+    num_slots: int = 0        # stage-ring depth; 0 = not a ring pipeline
+    produce_wait_s: float = 0.0  # producer blocked on full ring (backpressure)
+    consume_wait_s: float = 0.0  # consumer stage blocked waiting for results
+    consume_s: float = 0.0       # time spent inside the consumer callable
+    deliver_wait_s: float = 0.0  # compute blocked on a full consumer ring
+    drops: int = 0               # chunks lost to the drop_oldest policy
+    ring_occupancy_mean: float = 0.0  # staged-chunk queue depth, mean ...
+    ring_occupancy_max: int = 0       # ... and max (<= num_slots)
 
     @property
     def overlap_s(self) -> float:
-        """Staging time hidden under compute by double-buffering."""
+        """Staging time hidden under compute by the ring/double-buffering."""
         return max(0.0, self.transfer_s - self.stall_s)
 
     @property
@@ -69,10 +105,25 @@ class StreamReport:
     def mb_per_s(self) -> float:
         return self.bytes_in / 1e6 / self.elapsed_s if self.elapsed_s else 0.0
 
+    @staticmethod
+    def header() -> str:
+        """CSV header matching ``row()`` (leading ``name`` column)."""
+        return (
+            "name,elapsed_s,buffering_s,compute_s,fps,mb_per_s,"
+            "transfer_s,stall_s,overlap_frac,num_slots,produce_wait_s,"
+            "consume_wait_s,deliver_wait_s,drops,ring_occupancy_mean"
+        )
+
     def row(self, name: str) -> str:
+        """One CSV row; includes the transfer/stall and per-stage fields."""
         return (
             f"{name},{self.elapsed_s:.4f},{self.buffering_s:.4f},"
-            f"{self.compute_s:.4f},{self.fps:.0f},{self.mb_per_s:.1f}"
+            f"{self.compute_s:.4f},{self.fps:.0f},{self.mb_per_s:.1f},"
+            f"{self.transfer_s:.4f},{self.stall_s:.4f},"
+            f"{self.overlap_frac:.3f},{self.num_slots},"
+            f"{self.produce_wait_s:.4f},{self.consume_wait_s:.4f},"
+            f"{self.deliver_wait_s:.4f},"
+            f"{self.drops},{self.ring_occupancy_mean:.2f}"
         )
 
 
@@ -100,7 +151,7 @@ _DONE = object()
 
 def _stage_next(source: Iterator) -> object:
     """Pull one chunk from the source and land it on device. Runs on the
-    staging worker: the pull (camera wait / frame synthesis) and the
+    staging stage: the pull (camera wait / frame synthesis) and the
     host->device copy both happen off the compute thread."""
     t0 = time.perf_counter()
     try:
@@ -112,6 +163,199 @@ def _stage_next(source: Iterator) -> object:
     return dev, time.perf_counter() - t0
 
 
+class DownloadConsumer:
+    """Averaging-reduction download stage: lands each per-step partial
+    average on the host (the paper's frame-grabber readback path).
+
+    ``partials[k]`` is the host copy of the denoised estimate after groups
+    ``0..k``; ``partials[-1]`` equals the executor's final output.
+    """
+
+    def __init__(self):
+        self.partials: list[np.ndarray] = []
+
+    def __call__(self, step: int, partial: jnp.ndarray) -> None:
+        self.partials.append(np.asarray(partial))
+
+
+def _partial_average(state: jnp.ndarray, step: int, config: DenoiseConfig):
+    """Denoised estimate averaging the ``step + 1`` groups ingested so far
+    (fresh array, never aliases the donated running sum).
+
+    divide_last keeps a raw running sum, so the estimate is ``sum/(k+1)``;
+    divide_first pre-divides every diff by G, so it is ``sum * G/(k+1)`` —
+    computed widened to int32 for integer accumulators (ample for the
+    paper's u16 containers), where scaling in the container dtype would
+    truncate the factor (or wrap the product) and corrupt every
+    mid-stream partial. At ``step == G-1`` both variants
+    match ``StreamingDenoiser.finalize`` bit-for-bit (the last scale is
+    the same division / an exact unit factor).
+    """
+    g = step + 1
+    if config.variant == "divide_first":
+        if jnp.issubdtype(state.dtype, jnp.integer):
+            wide = state.astype(jnp.int32) * config.num_groups // g
+            return wide.astype(state.dtype)
+        return state * jnp.asarray(config.num_groups / g, state.dtype)
+    if jnp.issubdtype(state.dtype, jnp.integer):
+        return state // g
+    return state / g
+
+
+def run_pipelined(
+    config: DenoiseConfig,
+    source: Iterator[np.ndarray],
+    *,
+    interval_us: float | None = None,
+    num_slots: int | None = None,
+    policy: str | None = None,
+    consumer: Callable[[int, jnp.ndarray], None] | None = None,
+    consumer_slots: int | None = None,
+) -> tuple[jnp.ndarray, StreamReport]:
+    """Three-stage ring-pipelined executor (paper §5 generalized).
+
+    Stages, each on its own thread, connected by bounded rings::
+
+        acquire/stage ──ring(num_slots)──> denoise ──ring──> consumer
+
+    * **acquire/stage**: pulls chunks from ``source`` and lands them on
+      device (``jax.device_put`` + block), so ring slots hold
+      device-resident data — the DRAM-bank analogue. Blocks when the ring
+      is full (``policy="block"``, lossless) or discards the oldest staged
+      chunk (``policy="drop_oldest"``, real-time camera mode; the denoiser
+      then averages only the surviving groups — use ``drops`` in the
+      report to detect loss).
+    * **denoise**: folds each chunk into the running sum via
+      ``StreamingDenoiser.ingest`` (single-bank (N, H, W) and banked
+      (B, N, H, W) chunks both accepted, as in ``run_inline``).
+    * **consumer** (optional): called as ``consumer(step, partial)`` with
+      the running partial average after each group, on its own thread
+      behind a second ring — e.g. :class:`DownloadConsumer` or an SNR
+      accumulator. ``consumer=None`` skips the stage entirely.
+
+    ``num_slots``/``policy`` default to ``config.num_slots`` /
+    ``config.overflow_policy``. With ``num_slots=2, consumer=None`` the
+    schedule is the classic ping-pong double-buffer and the output is
+    bit-identical to ``run_inline(prefetch=True)`` (which delegates here).
+    Output is bit-identical for any ``num_slots`` and any consumer under
+    the ``block`` policy — depth and consumers change only wall-clock
+    accounting, never numerics.
+    """
+    num_slots = config.num_slots if num_slots is None else num_slots
+    policy = config.overflow_policy if policy is None else policy
+    den = StreamingDenoiser(config)
+    if interval_us is not None:
+        source = rate_limited(source, interval_us, config.frames_per_group)
+    source = iter(source)
+
+    stage_ring = RingBuffer(num_slots, policy=policy)
+    out_ring = (
+        RingBuffer(consumer_slots or num_slots) if consumer is not None else None
+    )
+    errors: list[BaseException] = []
+    consume_busy = [0.0]
+
+    def _produce() -> None:
+        try:
+            while True:
+                item = _stage_next(source)
+                if item is _DONE:
+                    break
+                stage_ring.put(item)
+        except RingClosed:
+            pass  # compute side shut down early (error path)
+        except BaseException as e:  # propagate source failures to the caller
+            errors.append(e)
+        finally:
+            stage_ring.close()
+
+    def _consume() -> None:
+        try:
+            for step, partial in out_ring:
+                t0 = time.perf_counter()
+                consumer(step, partial)
+                consume_busy[0] += time.perf_counter() - t0
+        except BaseException as e:
+            errors.append(e)
+            out_ring.close()  # unblock the compute stage's put
+
+    t0 = time.perf_counter()
+    state = den.init()
+    frames = 0  # counted from chunk shapes: (N, H, W) or (B, N, H, W)
+    transfer_s = 0.0
+    step = 0
+
+    producer = threading.Thread(target=_produce, name="prism-stage", daemon=True)
+    producer.start()
+    consumer_thread = None
+    if out_ring is not None:
+        consumer_thread = threading.Thread(
+            target=_consume, name="prism-consume", daemon=True
+        )
+        consumer_thread.start()
+
+    try:
+        while True:
+            try:
+                dev, dt = stage_ring.get()
+            except RingClosed:
+                break
+            transfer_s += dt
+            state = den.ingest(state, dev)
+            frames += int(np.prod(dev.shape[:-2]))
+            if out_ring is not None:
+                try:
+                    out_ring.put((step, _partial_average(state, step, config)))
+                except RingClosed:
+                    break  # consumer died; its error surfaces below
+            step += 1
+    finally:
+        # Unblock the stages on both the normal and the error path.
+        stage_ring.close()
+        if out_ring is not None:
+            out_ring.close()
+        producer.join()
+        if consumer_thread is not None:
+            consumer_thread.join()
+
+    if errors:
+        raise errors[0]
+
+    if policy == "drop_oldest" and step:
+        # average over the groups that actually survived: finalize would
+        # divide the surviving sum by the configured G, biasing the output
+        # low by drops/G. This is also what keeps the consumer's last
+        # partial identical to the final output under loss.
+        out = _partial_average(state, step - 1, config)
+    else:
+        out = den.finalize(state)
+    jax.block_until_ready(out)
+    elapsed = time.perf_counter() - t0
+    stall_s = stage_ring.stats.get_wait_s
+    # `is not None`, not truthiness: RingBuffer defines __len__, so a
+    # drained ring is falsy and would silently zero these fields
+    deliver_wait_s = out_ring.stats.put_wait_s if out_ring is not None else 0.0
+    return out, StreamReport(
+        elapsed_s=elapsed,
+        buffering_s=0.0,  # inline: no staging phase at all
+        # compute = elapsed minus time blocked on EITHER ring, else a
+        # consumer-bottlenecked run masquerades as denoise-bound
+        compute_s=elapsed - stall_s - deliver_wait_s,
+        frames=frames,
+        bytes_in=frames * config.frame_pixels * 2,
+        transfer_s=transfer_s,
+        stall_s=stall_s,
+        num_slots=num_slots,
+        produce_wait_s=stage_ring.stats.put_wait_s,
+        consume_wait_s=out_ring.stats.get_wait_s if out_ring is not None else 0.0,
+        consume_s=consume_busy[0],
+        deliver_wait_s=deliver_wait_s,
+        drops=stage_ring.stats.drops,
+        ring_occupancy_mean=stage_ring.stats.occupancy_mean,
+        ring_occupancy_max=stage_ring.stats.occupancy_max,
+    )
+
+
 def run_inline(
     config: DenoiseConfig,
     source: Iterator[np.ndarray],
@@ -121,10 +365,22 @@ def run_inline(
 ) -> tuple[jnp.ndarray, StreamReport]:
     """Denoise inline with acquisition (the paper's FPGA workflow).
 
-    ``prefetch=True`` double-buffers: chunk k+1 is staged (acquired +
-    transferred) while chunk k computes. Output is bit-identical either
-    way; only wall-clock accounting differs.
+    ``prefetch=True`` delegates to ``run_pipelined(num_slots=2,
+    consumer=None)``: chunk k+1 is staged (acquired + transferred) while
+    chunk k computes, the paper's ping-pong double-buffer. ``prefetch=
+    False`` runs the serial stage-then-compute schedule on one thread.
+    Output is bit-identical either way; only wall-clock accounting differs.
     """
+    if prefetch:
+        return run_pipelined(
+            config,
+            source,
+            interval_us=interval_us,
+            num_slots=2,
+            policy="block",
+            consumer=None,
+        )
+
     den = StreamingDenoiser(config)
     if interval_us is not None:
         source = rate_limited(source, interval_us, config.frames_per_group)
@@ -132,45 +388,29 @@ def run_inline(
 
     t0 = time.perf_counter()
     state = den.init()
-    frames = 0  # counted from chunk shapes: (N, H, W) or (B, N, H, W)
+    frames = 0
     transfer_s = 0.0
     stall_s = 0.0
-
-    if prefetch:
-        with ThreadPoolExecutor(max_workers=1) as pool:
-            fut = pool.submit(_stage_next, source)
-            while True:
-                t_wait = time.perf_counter()
-                item = fut.result()
-                stall_s += time.perf_counter() - t_wait
-                if item is _DONE:
-                    break
-                dev, dt = item
-                transfer_s += dt
-                fut = pool.submit(_stage_next, source)  # stage k+1 ...
-                state = den.ingest(state, dev)          # ... while k computes
-                frames += int(np.prod(dev.shape[:-2]))
-    else:
-        while True:
-            t_wait = time.perf_counter()
-            item = _stage_next(source)
-            dt = time.perf_counter() - t_wait
-            stall_s += dt
-            if item is _DONE:
-                break
-            dev, _ = item
-            transfer_s += dt
-            # no per-step block: async dispatch is the pre-PR behaviour the
-            # sync mode preserves — only the staging runs on-thread here
-            state = den.ingest(state, dev)
-            frames += int(np.prod(dev.shape[:-2]))
+    while True:
+        t_wait = time.perf_counter()
+        item = _stage_next(source)
+        dt = time.perf_counter() - t_wait
+        stall_s += dt
+        if item is _DONE:
+            break
+        dev, _ = item
+        transfer_s += dt
+        # no per-step block: async dispatch is the pre-PR behaviour the
+        # sync mode preserves — only the staging runs on-thread here
+        state = den.ingest(state, dev)
+        frames += int(np.prod(dev.shape[:-2]))
 
     out = den.finalize(state)
     jax.block_until_ready(out)
     elapsed = time.perf_counter() - t0
     return out, StreamReport(
         elapsed_s=elapsed,
-        buffering_s=0.0,  # inline: no staging phase at all
+        buffering_s=0.0,
         compute_s=elapsed - stall_s,
         frames=frames,
         bytes_in=frames * config.frame_pixels * 2,

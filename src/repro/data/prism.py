@@ -98,6 +98,27 @@ class PrismSource:
         for _ in range(c.num_groups):
             yield np.stack([self._group(r) for r in rngs])
 
+    def bank_source(self, bank: int) -> Iterator[np.ndarray]:
+        """Yield bank ``bank``'s G groups of (N, H, W) frames, standalone.
+
+        Hook for the ring-pipelined executors: each bank's acquisition
+        thread pulls from its own iterator. Per-bank streams are seeded
+        ``seed + bank``, so ``bank_source(b)`` yields exactly the ``[b]``
+        slice of ``banked_groups`` — one camera pulled independently.
+        """
+        rng = np.random.default_rng(self.seed + bank)
+        for _ in range(self.config.num_groups):
+            yield self._group(rng)
+
+    def bank_sources(self, num_banks: int | None = None) -> list[Iterator[np.ndarray]]:
+        """One independent per-bank iterator per camera (see ``bank_source``).
+
+        Feeds ``repro.core.banks.run_pipelined_banked``: one ring per bank,
+        one of these iterators per ring.
+        """
+        b = num_banks or self.config.num_banks
+        return [self.bank_source(i) for i in range(b)]
+
     def all_frames(self) -> np.ndarray:
         """(G, N, H, W) u16 — the buffered-acquisition view."""
         return np.stack(list(self.groups()))

@@ -18,6 +18,15 @@ batched/vectorized XLA program elsewhere (NOT the per-group reference
 scan — banks and pairs vectorize, subtract fuses into the reduction).
 ``repro.core.banks`` wraps these in ``shard_map`` so the same code runs
 one-bank-per-device, matching the paper's one-FPGA-per-bank topology.
+
+This module is the backend boundary: everything above it —
+``repro.core.denoise`` (config + streaming state), the executors in
+``repro.core.streaming`` (inline / ring-pipelined / buffered), and
+``repro.core.banks`` — dispatches through these entry points and never
+imports a kernel module directly. ``ALGORITHMS`` / ``BACKENDS`` enumerate
+the valid ``algorithm`` / ``backend`` strings accepted everywhere a
+``DenoiseConfig`` is consumed. See docs/ARCHITECTURE.md for the full
+layer map.
 """
 
 from __future__ import annotations
@@ -31,6 +40,8 @@ from repro.kernels import denoise_multibank, denoise_stream, denoise_tmpframe
 from repro.kernels.ref import ref_stream_finalize, ref_stream_init, ref_stream_step
 
 __all__ = [
+    "ALGORITHMS",
+    "BACKENDS",
     "subtract_average",
     "stream_init",
     "stream_step",

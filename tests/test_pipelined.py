@@ -1,0 +1,362 @@
+"""run_pipelined: bit-identity with run_inline at every ring depth
+(hypothesis-generated chunk shapes + the paper default config), consumer
+stage correctness, drop-oldest behaviour, per-stage report accounting, and
+the per-bank ring ingest."""
+
+import numpy as np
+import pytest
+
+from repro.core.denoise import DenoiseConfig
+from repro.core.ringbuf import RingBuffer
+from repro.core.streaming import (
+    DownloadConsumer,
+    StreamReport,
+    run_inline,
+    run_pipelined,
+)
+from repro.data.prism import PrismSource
+
+
+def _cfg(**kw):
+    base = dict(num_groups=4, frames_per_group=50, height=16, width=64)
+    base.update(kw)
+    return DenoiseConfig(**base)
+
+
+# ---------------------------------------------------------------------------
+# Bit-identity: depth and consumers change scheduling, never numerics.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("num_slots", [1, 2, 3, 5])
+def test_pipelined_bit_identical_to_inline(num_slots):
+    cfg = _cfg()
+    groups = list(PrismSource(cfg, seed=3).groups())
+    out_sync, _ = run_inline(cfg, iter(groups), prefetch=False)
+    out_pipe, rep = run_pipelined(cfg, iter(groups), num_slots=num_slots)
+    np.testing.assert_array_equal(np.asarray(out_pipe), np.asarray(out_sync))
+    assert rep.num_slots == num_slots
+    assert rep.frames == 200
+    assert rep.drops == 0
+
+
+def test_inline_prefetch_delegates_to_pipelined():
+    """run_inline(prefetch=True) IS run_pipelined(num_slots=2, consumer=None)."""
+    cfg = _cfg()
+    groups = list(PrismSource(cfg, seed=9).groups())
+    out_inline, rep_inline = run_inline(cfg, iter(groups), prefetch=True)
+    out_pipe, rep_pipe = run_pipelined(
+        cfg, iter(groups), num_slots=2, consumer=None
+    )
+    np.testing.assert_array_equal(np.asarray(out_inline), np.asarray(out_pipe))
+    assert rep_inline.num_slots == 2  # the delegated report carries ring fields
+    assert rep_pipe.num_slots == 2
+    # the serial path reports no ring
+    _, rep_sync = run_inline(cfg, iter(groups), prefetch=False)
+    assert rep_sync.num_slots == 0
+
+
+@pytest.mark.slow
+def test_pipelined_bit_identical_paper_default():
+    """Acceptance: bit-identity at the paper default G=8, N=1000, 80x256."""
+    cfg = DenoiseConfig(
+        num_groups=8, frames_per_group=1000, height=80, width=256, backend="xla"
+    )
+    groups = list(PrismSource(cfg, seed=0).groups())
+    out_inline, _ = run_inline(cfg, iter(groups), prefetch=True)
+    out_pipe, rep = run_pipelined(cfg, iter(groups), num_slots=2, consumer=None)
+    np.testing.assert_array_equal(np.asarray(out_inline), np.asarray(out_pipe))
+    assert rep.frames == 8000
+    assert out_pipe.shape == (500, 80, 256)
+
+
+def test_pipelined_banked_chunks():
+    cfg = _cfg(num_banks=2)
+    chunks = list(PrismSource(cfg, seed=5).banked_groups())
+    out_sync, _ = run_inline(cfg, iter(chunks), prefetch=False)
+    out_pipe, rep = run_pipelined(cfg, iter(chunks), num_slots=3)
+    np.testing.assert_array_equal(np.asarray(out_pipe), np.asarray(out_sync))
+    assert rep.frames == 2 * 4 * 50
+
+
+def test_pipelined_respects_config_defaults():
+    cfg = _cfg(num_slots=3, overflow_policy="block")
+    groups = list(PrismSource(cfg, seed=2).groups())
+    _, rep = run_pipelined(cfg, iter(groups))
+    assert rep.num_slots == 3
+
+
+def test_config_validates_ring_fields():
+    with pytest.raises(ValueError, match="num_slots"):
+        _cfg(num_slots=0)
+    with pytest.raises(ValueError, match="overflow_policy"):
+        _cfg(overflow_policy="spill")
+
+
+# ---------------------------------------------------------------------------
+# Consumer stage.
+# ---------------------------------------------------------------------------
+
+
+def test_consumer_receives_partials_and_final():
+    cfg = _cfg()
+    groups = list(PrismSource(cfg, seed=7).groups())
+    dl = DownloadConsumer()
+    out, rep = run_pipelined(cfg, iter(groups), num_slots=3, consumer=dl)
+    assert len(dl.partials) == cfg.num_groups
+    # the last partial average IS the final output, bit for bit
+    np.testing.assert_array_equal(np.asarray(out), dl.partials[-1])
+    # earlier partials average fewer groups: monotone refinement, not junk
+    assert dl.partials[0].shape == out.shape
+    assert rep.consume_s >= 0.0 and rep.consume_wait_s >= 0.0
+
+
+def test_consumer_divide_first_partials():
+    cfg = _cfg(algorithm="alg3_v2")
+    groups = list(PrismSource(cfg, seed=8).groups())
+    dl = DownloadConsumer()
+    out, _ = run_pipelined(cfg, iter(groups), consumer=dl)
+    np.testing.assert_array_equal(np.asarray(out), dl.partials[-1])
+
+
+def test_consumer_integer_divide_first_partials():
+    """Integer accumulators (the paper's u16-container emulation): the
+    G/(k+1) scale must be applied in widened arithmetic — in the container
+    dtype it truncates (or wraps) and corrupts every mid-stream partial."""
+    from repro.kernels.ref import ref_stream_init, ref_stream_step
+
+    cfg = _cfg(algorithm="alg3_v2", accum_dtype="uint16")
+    g = cfg.num_groups
+    groups = list(PrismSource(cfg, seed=10).groups())
+    dl = DownloadConsumer()
+    out, _ = run_pipelined(cfg, iter(groups), consumer=dl)
+    np.testing.assert_array_equal(np.asarray(out), dl.partials[-1])
+    # every partial equals the widened expectation over the prefix
+    state = np.asarray(
+        ref_stream_init(cfg.frames_per_group, cfg.height, cfg.width, np.uint16)
+    )
+    for k, chunk in enumerate(groups):
+        state = np.asarray(
+            ref_stream_step(
+                state, chunk, offset=cfg.offset,
+                variant="divide_first", num_groups=g,
+            )
+        )
+        expect = (state.astype(np.int64) * g // (k + 1)).astype(np.uint16)
+        np.testing.assert_array_equal(dl.partials[k], expect)
+
+
+def test_consumer_does_not_change_output():
+    cfg = _cfg()
+    groups = list(PrismSource(cfg, seed=4).groups())
+    out_plain, _ = run_pipelined(cfg, iter(groups))
+    out_cons, _ = run_pipelined(
+        cfg, iter(groups), consumer=DownloadConsumer()
+    )
+    np.testing.assert_array_equal(np.asarray(out_plain), np.asarray(out_cons))
+
+
+def test_consumer_error_propagates():
+    cfg = _cfg()
+    groups = list(PrismSource(cfg, seed=4).groups())
+
+    def bad_consumer(step, partial):
+        raise RuntimeError("downstream exploded")
+
+    with pytest.raises(RuntimeError, match="downstream exploded"):
+        run_pipelined(cfg, iter(groups), consumer=bad_consumer)
+
+
+def test_source_error_propagates():
+    cfg = _cfg()
+
+    def bad_source():
+        yield from PrismSource(cfg, seed=1).groups()
+        raise IOError("camera unplugged")
+
+    with pytest.raises(IOError, match="camera unplugged"):
+        run_pipelined(cfg, bad_source())
+
+
+# ---------------------------------------------------------------------------
+# Drop-oldest (real-time camera mode) inside the executor.
+# ---------------------------------------------------------------------------
+
+
+def test_pipelined_drop_oldest_accounts_for_loss():
+    """A stalled downstream forces the stage ring to shed oldest chunks;
+    the report says exactly how many frames were lost, and the output
+    averages the *surviving* groups (not sum/`num_groups`, which would
+    bias it low by drops/G)."""
+    import time
+
+    cfg = _cfg(num_groups=12, frames_per_group=10, height=8, width=32)
+    groups = list(PrismSource(cfg, seed=6).groups())
+    partials = []
+
+    def sleepy(step, partial):
+        partials.append(np.asarray(partial))
+        time.sleep(0.05)  # block the compute stage via the full out-ring
+
+    out, rep = run_pipelined(
+        cfg,
+        iter(groups),
+        num_slots=2,
+        policy="drop_oldest",
+        consumer=sleepy,
+        consumer_slots=1,
+    )
+    assert rep.drops > 0  # loss happened ...
+    assert rep.frames == (12 - rep.drops) * 10  # ... and is fully accounted
+    # survivor normalization: the last partial IS the final output
+    np.testing.assert_array_equal(np.asarray(out), partials[-1])
+    # sanity: survivors average near the lossless result, not drops/G low
+    lossless, _ = run_pipelined(cfg, iter(groups), policy="block")
+    assert np.abs(np.asarray(out) - np.asarray(lossless)).mean() < 0.05 * float(
+        np.asarray(lossless).mean()
+    )
+    # lossless policy on the same workload keeps every frame
+    _, rep_block = run_pipelined(
+        cfg,
+        iter(groups),
+        num_slots=2,
+        policy="block",
+        consumer=sleepy,
+        consumer_slots=1,
+    )
+    assert rep_block.drops == 0
+    assert rep_block.frames == 120
+    # the sleepy consumer throttles compute through the full out-ring;
+    # that time must be attributed to delivery, not to compute
+    assert rep_block.deliver_wait_s > 0.0
+    assert rep_block.compute_s < rep_block.elapsed_s - rep_block.deliver_wait_s + 1e-6
+
+
+# ---------------------------------------------------------------------------
+# Report fields + CSV round trip.
+# ---------------------------------------------------------------------------
+
+
+def test_report_row_carries_transfer_and_stage_fields():
+    header = StreamReport.header().split(",")
+    for field in (
+        "transfer_s",
+        "stall_s",
+        "overlap_frac",
+        "num_slots",
+        "produce_wait_s",
+        "consume_wait_s",
+        "deliver_wait_s",
+        "drops",
+        "ring_occupancy_mean",
+    ):
+        assert field in header, f"header lost {field}"
+    cfg = _cfg()
+    groups = list(PrismSource(cfg, seed=1).groups())
+    _, rep = run_pipelined(cfg, iter(groups), num_slots=3)
+    row = rep.row("x").split(",")
+    assert len(row) == len(header)
+    assert row[header.index("num_slots")] == "3"
+    assert rep.ring_occupancy_max <= 3
+    assert rep.stall_s == pytest.approx(rep.transfer_s - rep.overlap_s)
+
+
+# ---------------------------------------------------------------------------
+# Per-bank rings (one ring per bank shard).
+# ---------------------------------------------------------------------------
+
+
+def test_bank_source_matches_banked_groups_slice():
+    cfg = _cfg(num_banks=2)
+    src = PrismSource(cfg, seed=11)
+    stacked = list(src.banked_groups())
+    per_bank = [list(src.bank_source(b)) for b in range(2)]
+    for g in range(cfg.num_groups):
+        for b in range(2):
+            np.testing.assert_array_equal(stacked[g][b], per_bank[b][g])
+
+
+def test_run_pipelined_banked_single_device():
+    from repro.core.banks import make_bank_mesh, run_pipelined_banked
+
+    cfg = _cfg(num_banks=1)
+    mesh = make_bank_mesh(1)
+    src = PrismSource(cfg, seed=5)
+    out, rep = run_pipelined_banked(cfg, src.bank_sources(1), mesh, num_slots=3)
+    ref, _ = run_inline(cfg, iter(src.bank_source(0)), prefetch=False)
+    np.testing.assert_allclose(np.asarray(out[0]), np.asarray(ref), rtol=1e-6)
+    assert rep.frames == 200
+    assert rep.num_slots == 3
+    assert rep.drops == 0
+
+
+def test_run_pipelined_banked_source_count_mismatch():
+    from repro.core.banks import make_bank_mesh, run_pipelined_banked
+
+    cfg = _cfg(num_banks=1)
+    mesh = make_bank_mesh(1)
+    src = PrismSource(cfg, seed=5)
+    with pytest.raises(ValueError, match="sources"):
+        run_pipelined_banked(cfg, src.bank_sources(2), mesh)
+
+
+def test_run_pipelined_banked_rejects_drop_oldest():
+    from repro.core.banks import make_bank_mesh, run_pipelined_banked
+
+    cfg = _cfg(num_banks=1)
+    mesh = make_bank_mesh(1)
+    src = PrismSource(cfg, seed=5)
+    with pytest.raises(ValueError, match="block"):
+        run_pipelined_banked(cfg, src.bank_sources(1), mesh, policy="drop_oldest")
+    # ... including via the config default
+    cfg2 = _cfg(num_banks=1, overflow_policy="drop_oldest")
+    with pytest.raises(ValueError, match="block"):
+        run_pipelined_banked(cfg2, src.bank_sources(1), mesh)
+
+
+def test_run_pipelined_banked_multi_device():
+    """2 banks, 2 host devices: per-bank rings + sharded fold == reference;
+    unequal per-bank chunk counts are rejected, not silently averaged."""
+    import os
+    import subprocess
+    import sys
+    import textwrap
+
+    code = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+        import numpy as np
+        from repro.core.banks import make_bank_mesh, run_pipelined_banked
+        from repro.core.denoise import DenoiseConfig, StreamingDenoiser
+        from repro.data.prism import PrismSource
+
+        cfg = DenoiseConfig(num_groups=3, frames_per_group=8, height=8,
+                            width=32, num_banks=2)
+        src = PrismSource(cfg, seed=13)
+        mesh = make_bank_mesh(2)
+        out, rep = run_pipelined_banked(cfg, src.bank_sources(2), mesh,
+                                        num_slots=3)
+        den = StreamingDenoiser(cfg)
+        state = den.init()
+        for chunk in PrismSource(cfg, seed=13).banked_groups():
+            state = den.ingest_many(state, chunk)
+        ref = den.finalize(state)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-6)
+        assert rep.frames == 2 * 3 * 8
+
+        import itertools
+        src2 = PrismSource(cfg, seed=13)
+        lop = [src2.bank_source(0), itertools.islice(src2.bank_source(1), 2)]
+        try:
+            run_pipelined_banked(cfg, lop, mesh, num_slots=3)
+        except ValueError as e:
+            assert "unequal" in str(e)
+        else:
+            raise AssertionError("unequal chunk counts not rejected")
+        print("BANK_RINGS_OK")
+    """)
+    out = subprocess.run(
+        [sys.executable, "-c", code], capture_output=True, text=True,
+        env=dict(os.environ), timeout=600,
+    )
+    assert "BANK_RINGS_OK" in out.stdout, out.stderr[-2000:]

@@ -1,0 +1,38 @@
+"""Hypothesis property test: run_pipelined is bit-identical to the serial
+inline executor for every generated chunk shape x ring depth (acceptance
+criterion of the ring-pipeline PR; shapes cover the awkward corners the
+fixed-shape tests miss)."""
+
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="dev-only dependency (see requirements-dev.txt)"
+)
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core.denoise import DenoiseConfig
+from repro.core.streaming import run_inline, run_pipelined
+
+shapes = st.tuples(
+    st.integers(1, 4),                       # G
+    st.integers(1, 4).map(lambda p: 2 * p),  # N (even)
+    st.integers(1, 8),                       # H
+    st.integers(1, 32),                      # W
+)
+
+
+@settings(max_examples=15, deadline=None)
+@given(shape=shapes, num_slots=st.integers(1, 4), seed=st.integers(0, 2**31 - 1))
+def test_pipelined_identity_hypothesis(shape, num_slots, seed):
+    g, n, h, w = shape
+    cfg = DenoiseConfig(num_groups=g, frames_per_group=n, height=h, width=w)
+    rng = np.random.default_rng(seed)
+    groups = [
+        rng.integers(0, 4096, (n, h, w)).astype(np.uint16) for _ in range(g)
+    ]
+    out_sync, _ = run_inline(cfg, iter(groups), prefetch=False)
+    out_pipe, rep = run_pipelined(cfg, iter(groups), num_slots=num_slots)
+    np.testing.assert_array_equal(np.asarray(out_pipe), np.asarray(out_sync))
+    assert rep.frames == g * n
+    assert rep.drops == 0
