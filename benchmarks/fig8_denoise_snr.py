@@ -3,33 +3,47 @@
 The static LED cancels in the pairwise subtraction and shot noise averages
 down across groups — SNR of the averaged output should IMPROVE with G and
 be insensitive to the ambient term.
+
+Each measurement is also appended to ``BENCH_denoise.json`` as an ``snr``
+point (via ``benchmarks.common.bench_record``), so denoising efficacy is
+tracked across PRs alongside the throughput trajectories.
 """
 
 from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import bench_config, emit
+from benchmarks.common import bench_config, bench_record, emit
 from repro.core.denoise import StreamingDenoiser
 from repro.data.prism import PrismSource, snr_db
 
 
+def _snr_at(quick: bool, *, num_groups: int, ambient: bool, seed: int) -> float:
+    """SNR of the averaged output for one (G, ambient) cell."""
+    cfg = bench_config(quick, num_groups=num_groups, frames_per_group=50)
+    src = PrismSource(cfg, ambient_on=ambient, seed=seed)
+    den = StreamingDenoiser(cfg)
+    out = np.asarray(den.run(g.astype(np.float32) for g in src.groups()))
+    return snr_db(out, src.true_signal())
+
+
 def run(quick: bool = True) -> None:
     for ambient in (True, False):
-        cfg = bench_config(quick, num_groups=8, frames_per_group=50)
-        src = PrismSource(cfg, ambient_on=ambient, seed=1)
-        den = StreamingDenoiser(cfg)
-        out = np.asarray(den.run(g.astype(np.float32) for g in src.groups()))
-        snr = snr_db(out, src.true_signal())
+        snr = _snr_at(quick, num_groups=8, ambient=ambient, seed=1)
         # single-group (no averaging) comparison
-        cfg1 = bench_config(quick, num_groups=1, frames_per_group=50)
-        src1 = PrismSource(cfg1, ambient_on=ambient, seed=1)
-        den1 = StreamingDenoiser(cfg1)
-        out1 = np.asarray(den1.run(g.astype(np.float32) for g in src1.groups()))
-        snr1 = snr_db(out1, src1.true_signal())
+        snr1 = _snr_at(quick, num_groups=1, ambient=ambient, seed=1)
         tag = "ambient_led" if ambient else "no_ambient"
         emit(
             f"fig8/{tag}",
             snr,
             f"snr_db_G8={snr:.2f};snr_db_G1={snr1:.2f};gain={snr - snr1:.2f}dB",
         )
+        for groups, value in ((8, snr), (1, snr1)):
+            bench_record(
+                "snr",
+                figure="fig8",
+                config={"G": groups, "N": 50, "ambient": ambient},
+                filter="pair_average",
+                regime="none",
+                snr_db=round(float(value), 3),
+            )

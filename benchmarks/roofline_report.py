@@ -5,7 +5,6 @@ from __future__ import annotations
 
 import glob
 import json
-import os
 
 from benchmarks.common import emit
 from repro.core import latency_model as lm

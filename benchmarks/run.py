@@ -20,6 +20,7 @@ from benchmarks import (
     table7_cpu_baseline,
     table8_buffered_vs_inline,
     table9_ring_depth,
+    table10_filter_zoo,
 )
 
 MODULES = [
@@ -32,6 +33,7 @@ MODULES = [
     ("table7", table7_cpu_baseline),
     ("table8-10", table8_buffered_vs_inline),
     ("table9", table9_ring_depth),
+    ("table10-zoo", table10_filter_zoo),
     ("fig8", fig8_denoise_snr),
     ("roofline", roofline_report),
 ]

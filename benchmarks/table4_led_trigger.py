@@ -7,8 +7,6 @@ rate-limit the synthetic source and verify Alg 3 tracks the trigger rate.
 
 from __future__ import annotations
 
-import numpy as np
-
 from benchmarks.common import bench_config, emit
 from repro.core.streaming import run_inline
 from repro.data.prism import PrismSource

@@ -2,8 +2,6 @@
 
 from __future__ import annotations
 
-import numpy as np
-
 from benchmarks.common import bench_config, emit
 from repro.core.streaming import run_inline
 from repro.data.prism import PrismSource

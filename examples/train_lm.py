@@ -6,7 +6,6 @@ sane; pass --steps 300 --d-model 768 for the full-size run on real HW.
 """
 
 import argparse
-import dataclasses
 
 from repro.configs.base import ArchConfig
 from repro.configs import registry
@@ -38,7 +37,6 @@ def main():
         remat=False,
     )
     # register ad hoc so the driver can resolve it
-    mod = type(registry)("_adhoc")
     registry._MODULES["lm-100m"] = "_adhoc"
 
     import sys

@@ -19,8 +19,12 @@ Streaming ingest composes with the ring-buffer pipeline
 (``repro.core.ringbuf``): ``run_pipelined_banked`` gives every bank shard
 its own bounded ring, so each camera's acquisition thread stages
 independently with backpressure, and the compute step gathers one chunk
-per bank, lands the stack bank-sharded, and folds it with
-``banked_stream_step`` — the paper's one-DRAM-pipeline-per-FPGA topology.
+per bank, lands the stack bank-sharded, and folds it through the
+filter-generic ``banked_filter_step`` — the paper's
+one-DRAM-pipeline-per-FPGA topology, hosting any ``repro.denoise`` filter
+(``pair_average`` takes the fused multi-bank kernel path of
+``banked_stream_step``; other filters shard their own state pytrees via
+``StreamingFilter.state_pspec``).
 
 On this CPU container the mesh has a single device unless the caller brings
 a multi-device mesh (tests spawn subprocesses with
@@ -41,6 +45,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.core.denoise import DenoiseConfig
 from repro.core.ringbuf import RingBuffer, RingClosed
 from repro.core.streaming import StreamReport
+from repro.denoise import get_filter
 from repro.jax_compat import shard_map
 from repro.kernels import ops
 
@@ -48,6 +53,8 @@ __all__ = [
     "make_bank_mesh",
     "banked_subtract_average",
     "banked_stream_step",
+    "banked_filter_init",
+    "banked_filter_step",
     "run_pipelined_banked",
 ]
 
@@ -124,6 +131,66 @@ def banked_stream_step(
     return _step(sum_frames, group_frames)
 
 
+# ---------------------------------------------------------------------------
+# Filter-generic banked stepping (repro.denoise): the same shard_map
+# topology for ANY registered filter. The filter state is an opaque pytree;
+# each filter maps it to per-leaf PartitionSpecs via ``state_pspec`` ("bank"
+# on the bank axis), and the per-shard body runs the filter's own banked
+# ``step`` — ``pair_average`` hits the fused multi-bank ops path and is
+# bit-identical to ``banked_stream_step``.
+# ---------------------------------------------------------------------------
+
+
+def _chunk_spec():
+    return P("bank", None, None, None)
+
+
+def banked_filter_init(config: DenoiseConfig, mesh: Mesh):
+    """Create the filter's banked state, each leaf laid out bank-sharded.
+
+    Returns ``(filter, state)``; the state's bank axis matches
+    ``mesh.shape["bank"]``.
+    """
+    filt = get_filter(config.filter_name)(config)
+    state = filt.init(banks=mesh.shape["bank"])
+    specs = filt.state_pspec(state)
+    # PartitionSpec is tuple-like, so flatten the spec tree against the
+    # STATE's treedef (specs must never be flattened as containers)
+    leaves, treedef = jax.tree.flatten(state)
+    spec_leaves = treedef.flatten_up_to(specs)
+    placed = [
+        jax.device_put(leaf, NamedSharding(mesh, spec))
+        for leaf, spec in zip(leaves, spec_leaves)
+    ]
+    return filt, jax.tree.unflatten(treedef, placed)
+
+
+def banked_filter_step(
+    state,
+    group_frames,
+    mesh: Mesh,
+    *,
+    config: DenoiseConfig,
+    step_index: int,
+    filt=None,
+):
+    """One filter step, banks in parallel: state pytree and (B, N, H, W)
+    chunk both bank-sharded; returns the updated sharded state."""
+    filt = filt or get_filter(config.filter_name)(config)
+    specs = filt.state_pspec(state)
+
+    @functools.partial(
+        shard_map,
+        mesh=mesh,
+        in_specs=(specs, _chunk_spec()),
+        out_specs=specs,
+    )
+    def _step(local_state, local_chunk):
+        return filt.step(local_state, local_chunk, step_index=step_index)
+
+    return _step(state, group_frames)
+
+
 def run_pipelined_banked(
     config: DenoiseConfig,
     sources: Sequence[Iterator[np.ndarray]],
@@ -195,19 +262,14 @@ def run_pipelined_banked(
     for t in threads:
         t.start()
 
-    spec = P("bank", None, None, None)
-    sharding = NamedSharding(mesh, spec)
+    sharding = NamedSharding(mesh, _chunk_spec())
     c = config
     t_start = time.perf_counter()
-    state = jax.device_put(
-        ops.multibank_stream_init(
-            banks, c.frames_per_group, c.height, c.width, c.accum_dtype
-        ),
-        sharding,
-    )
+    filt, state = banked_filter_init(c, mesh)
     frames = 0
     transfer_s = 0.0
     stall_s = 0.0
+    step = 0
     try:
         while True:
             t_wait = time.perf_counter()
@@ -218,7 +280,10 @@ def run_pipelined_banked(
             stall_s += time.perf_counter() - t_wait
             transfer_s += sum(dt for _, dt in items)
             dev = jax.device_put(np.stack([chunk for chunk, _ in items]), sharding)
-            state = banked_stream_step(state, dev, mesh, config=config)
+            state = banked_filter_step(
+                state, dev, mesh, config=config, step_index=step, filt=filt
+            )
+            step += 1
             frames += banks * items[0][0].shape[0]
     finally:
         for ring in rings:
@@ -235,7 +300,7 @@ def run_pipelined_banked(
             "needs one chunk per bank per step"
         )
 
-    out = ops.stream_finalize(state, c.num_groups, variant=c.variant)
+    out = filt.finalize(state)
     jax.block_until_ready(out)
     elapsed = time.perf_counter() - t_start
     stats = [ring.stats for ring in rings]

@@ -1,16 +1,21 @@
 """StreamingDenoiser — the paper's preprocessing stage as a composable module.
 
-Wraps the subtract-and-average kernels (``repro.kernels``) with:
+Hosts any filter from the pluggable streaming-filter subsystem
+(``repro.denoise``): ``DenoiseConfig.filter_name`` selects the algorithm
+(default ``pair_average`` — the paper's subtract-and-average, bit-identical
+to the pre-registry path) and the denoiser drives the filter's
+``init / step / finalize`` contract with:
 
 * PRISM acquisition semantics: G groups × N alternating frames, mono12
   pixels in u16 containers, fixed pre-subtraction ``offset`` (removed by
   ``remove_offset`` host-side), divide-last (Alg 3) or divide-first
   (Alg 3 v2 — overflow-safe) accumulation;
-* a streaming interface (``init / ingest / finalize``) whose state is a
-  single running sumFrame, donated between steps — the Alg 3 dataflow;
+* a streaming interface (``init / ingest / finalize``) whose state is the
+  filter's (donated) pytree — a single running sumFrame for the default;
 * a one-shot interface (``__call__``) for offline/batch use;
 * integer-container emulation (``accum_dtype=jnp.uint16``) that reproduces
-  the paper's overflow at G > 8 bit-exactly, for validation.
+  the paper's overflow at G > 8 bit-exactly, for validation
+  (``pair_average`` only; the rank/EMA/spatial filters require floats).
 """
 
 from __future__ import annotations
@@ -20,6 +25,7 @@ from typing import Iterable
 
 import jax.numpy as jnp
 
+from repro.denoise import get_filter
 from repro.kernels import ops
 from repro.kernels.ref import ref_subtract_average
 
@@ -46,12 +52,22 @@ class DenoiseConfig:
     pair_tile: int | None = None  # Pallas frame-pairs/block override
     num_slots: int = 2           # ring depth for run_pipelined (2 = ping-pong)
     overflow_policy: str = "block"  # block (lossless) | drop_oldest (real-time)
+    # -- streaming-filter subsystem (repro.denoise) -------------------------
+    filter_name: str = "pair_average"  # any key of repro.denoise.FILTERS
+    median_window: int = 5       # temporal_median: sliding-window groups (K)
+    ema_alpha: float = 0.25      # ema_variance: EMA weight per group
+    ema_mask_sigma: float = 6.0  # ema_variance: variance-mask threshold
+    spatial_mode: str = "bilateral"  # spatial_box: box | bilateral
+    spatial_range_sigma: float = 60.0  # spatial_box: bilateral range sigma
 
     def __post_init__(self):
         if self.frames_per_group % 2:
             raise ValueError("frames_per_group (N) must be even")
         if self.algorithm not in ops.ALGORITHMS:
-            raise ValueError(f"unknown algorithm {self.algorithm}")
+            raise ValueError(
+                f"algorithm must be one of {ops.ALGORITHMS}, got "
+                f"{self.algorithm!r}"
+            )
         if self.num_banks < 1:
             raise ValueError("num_banks must be >= 1")
         if self.num_slots < 1:
@@ -61,6 +77,9 @@ class DenoiseConfig:
                 "overflow_policy must be 'block' or 'drop_oldest', got "
                 f"{self.overflow_policy!r}"
             )
+        # raises ValueError listing repro.denoise.FILTERS for unknown names,
+        # then lets the filter reject unusable parameter combinations
+        get_filter(self.filter_name).validate(self)
 
     @property
     def pairs_per_group(self) -> int:
@@ -89,95 +108,97 @@ class DenoiseConfig:
 
 
 class StreamingDenoiser:
-    """The paper's preprocessing stage, streaming one group at a time."""
+    """The paper's preprocessing stage, streaming one group at a time.
+
+    Drives ``repro.denoise.get_filter(config.filter_name)``. The state
+    threaded through ``init / ingest / finalize`` is the filter's opaque
+    pytree (a bare running-sum array for the default ``pair_average``).
+    Executors pass an explicit ``step`` index; direct callers may omit it
+    and an internal counter (reset by ``init``) tracks the group number.
+    """
 
     def __init__(self, config: DenoiseConfig):
         self.config = config
         self._accum = jnp.dtype(config.accum_dtype)
+        self.filter = get_filter(config.filter_name)(config)
+        self._step = 0
 
-    # -- streaming interface (Alg 3 dataflow) ------------------------------
-    def init(self) -> jnp.ndarray:
+    # -- streaming interface (filter init/step/finalize) --------------------
+    def init(self):
         c = self.config
-        if c.num_banks > 1:
-            return ops.multibank_stream_init(
-                c.num_banks, c.frames_per_group, c.height, c.width, self._accum
-            )
-        return ops.stream_init(c.frames_per_group, c.height, c.width, self._accum)
+        self._step = 0
+        return self.filter.init(banks=c.num_banks if c.num_banks > 1 else None)
 
-    def ingest(self, sum_frame: jnp.ndarray, group_frames: jnp.ndarray) -> jnp.ndarray:
-        """Fold one group into the running sum. Donates sum_frame.
+    def _next_step(self, step: int | None) -> int:
+        if step is None:
+            step = self._step
+        self._step = step + 1
+        return step
+
+    def ingest(self, state, group_frames: jnp.ndarray, step: int | None = None):
+        """Fold one group into the filter state (state buffers donated).
 
         Shapes: (N, H, W) single-bank, (B, N, H, W) banked — banked input
-        routes through the fused multi-bank step automatically.
+        routes through ``ingest_many`` automatically.
         """
+        c = self.config
         if group_frames.ndim == 4:
-            if sum_frame.ndim == 3:
+            if c.num_banks == 1 and not self.filter.is_banked(state):
                 # single-bank state fed a banked chunk: accept B=1 by
                 # squeezing (keeps donation; no silent broadcast), reject else
                 if group_frames.shape[0] != 1:
                     raise ValueError(
-                        f"state is single-bank {sum_frame.shape} but chunk "
-                        f"has {group_frames.shape[0]} banks"
+                        f"state is single-bank but chunk has "
+                        f"{group_frames.shape[0]} banks"
                     )
                 group_frames = group_frames[0]
             else:
-                return self.ingest_many(sum_frame, group_frames)
-        c = self.config
-        if c.num_banks > 1:
-            # without this, (N, H, W) would broadcast into every bank slot of
-            # the (B, N/2, H, W) state — plausibly shaped but wrong output
+                return self.ingest_many(state, group_frames, step=step)
+        elif c.num_banks > 1:
+            # without this, (N, H, W) could broadcast into every bank slot
+            # of the banked state — plausibly shaped but wrong output
             raise ValueError(
                 f"config has num_banks={c.num_banks}: ingest expects banked "
                 f"(B, N, H, W) chunks, got shape {group_frames.shape}"
             )
-        return ops.stream_step(
-            sum_frame,
-            group_frames,
-            num_groups=c.num_groups,
-            offset=c.offset,
-            variant=c.variant,
-            backend=c.backend,
-            row_tile=c.row_tile,
-            pair_tile=c.pair_tile,
+        return self.filter.step(
+            state, group_frames, step_index=self._next_step(step)
         )
 
-    def ingest_many(
-        self, sum_frames: jnp.ndarray, group_frames: jnp.ndarray
-    ) -> jnp.ndarray:
-        """Fold one group per bank (B, N, H, W) into donated (B, N/2, H, W)."""
-        if sum_frames.ndim != 4:
+    def ingest_many(self, state, group_frames: jnp.ndarray, step: int | None = None):
+        """Fold one group per bank (B, N, H, W) into the banked state."""
+        if not self.filter.is_banked(state):
             raise ValueError(
-                f"ingest_many needs banked (B, N/2, H, W) state, got "
-                f"{sum_frames.shape}; init() returns one when num_banks > 1"
+                "ingest_many needs banked state; init() returns one when "
+                "num_banks > 1"
             )
-        if group_frames.shape[0] != sum_frames.shape[0]:
+        banks = max(self.config.num_banks, 1)
+        if group_frames.ndim != 4 or group_frames.shape[0] != banks:
             raise ValueError(
-                f"chunk has {group_frames.shape[0]} banks, state has "
-                f"{sum_frames.shape[0]}"
+                f"chunk shape {group_frames.shape} does not match "
+                f"{banks} banks"
             )
-        c = self.config
-        return ops.multibank_stream_step(
-            sum_frames,
-            group_frames,
-            num_groups=c.num_groups,
-            offset=c.offset,
-            variant=c.variant,
-            backend=c.backend,
-            row_tile=c.row_tile,
-            pair_tile=c.pair_tile,
+        return self.filter.step(
+            state, group_frames, step_index=self._next_step(step)
         )
 
-    def finalize(self, sum_frame: jnp.ndarray) -> jnp.ndarray:
-        return ops.stream_finalize(
-            sum_frame, self.config.num_groups, variant=self.config.variant
-        )
+    def finalize(self, state, *, steps: int | None = None):
+        """Final denoised frames; ``steps`` < G averages only the groups
+        that survived (the ``drop_oldest`` executor path)."""
+        return self.filter.finalize(state, steps=steps)
+
+    def partial(self, state, step: int):
+        """Estimate after groups ``0..step`` without consuming the state
+        (the consumer-stage hook); at the last step it equals
+        ``finalize`` bit-for-bit."""
+        return self.filter.partial(state, step_index=step)
 
     def run(self, groups: Iterable[jnp.ndarray]) -> jnp.ndarray:
         """Drive the full stream: groups yields G arrays of (N, H, W)."""
         state = self.init()
         count = 0
         for group in groups:
-            state = self.ingest(state, group)
+            state = self.ingest(state, group, step=count)
             count += 1
         if count != self.config.num_groups:
             raise ValueError(
@@ -189,6 +210,14 @@ class StreamingDenoiser:
     def __call__(self, frames: jnp.ndarray) -> jnp.ndarray:
         """(G, N, H, W) -> (N/2, H, W); (B, G, N, H, W) -> (B, N/2, H, W)."""
         c = self.config
+        if c.filter_name != "pair_average":
+            # generic filters replay the stream; same calls, same results
+            banks = frames.shape[0] if frames.ndim == 5 else None
+            state = self.filter.init(banks=banks)
+            for g in range(frames.shape[1] if banks else frames.shape[0]):
+                chunk = frames[:, g] if banks else frames[g]
+                state = self.filter.step(state, chunk, step_index=g)
+            return self.filter.finalize(state)
         if frames.ndim == 5:
             return ops.multibank_subtract_average(
                 frames,

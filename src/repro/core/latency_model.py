@@ -67,7 +67,6 @@ def frame_latencies_us(algorithm: str, c: PaperConstants = PaperConstants()):
       even_last      — final group (read/average phase)
     """
     p = c.packets_per_frame  # 2560
-    u = c.us_per_cycle       # 0.002
     odd = p * 2 / 1000.0     # 5.12 us: subtract/avg ops only
 
     if algorithm == "alg1":

@@ -14,8 +14,11 @@ Three executors over the same synthetic camera source:
   depth (2 = the paper's ping-pong pair; deeper absorbs rate jitter),
   ``policy`` the overflow behaviour (``"block"`` = lossless backpressure,
   ``"drop_oldest"`` = real-time camera mode), and ``consumer`` an optional
-  per-step stage fed the running partial average (e.g. averaging-reduction
-  download to host, SNR accumulation) on its own thread.
+  per-step stage fed the filter's running partial estimate (e.g.
+  averaging-reduction download to host, SNR accumulation) on its own
+  thread. The denoise stage hosts whichever ``repro.denoise`` filter
+  ``config.filter_name`` selects; output is bit-identical across executors
+  for every filter.
 * ``run_inline`` — the two-stage special case. ``prefetch=True`` (default)
   delegates to ``run_pipelined(num_slots=2, consumer=None)``: chunk *k+1*
   is acquired and landed on device while chunk *k* computes, the software
@@ -42,7 +45,7 @@ from __future__ import annotations
 import dataclasses
 import threading
 import time
-from typing import Any, Callable, Iterator
+from typing import Callable, Iterator
 
 import jax
 import jax.numpy as jnp
@@ -178,30 +181,6 @@ class DownloadConsumer:
         self.partials.append(np.asarray(partial))
 
 
-def _partial_average(state: jnp.ndarray, step: int, config: DenoiseConfig):
-    """Denoised estimate averaging the ``step + 1`` groups ingested so far
-    (fresh array, never aliases the donated running sum).
-
-    divide_last keeps a raw running sum, so the estimate is ``sum/(k+1)``;
-    divide_first pre-divides every diff by G, so it is ``sum * G/(k+1)`` —
-    computed widened to int32 for integer accumulators (ample for the
-    paper's u16 containers), where scaling in the container dtype would
-    truncate the factor (or wrap the product) and corrupt every
-    mid-stream partial. At ``step == G-1`` both variants
-    match ``StreamingDenoiser.finalize`` bit-for-bit (the last scale is
-    the same division / an exact unit factor).
-    """
-    g = step + 1
-    if config.variant == "divide_first":
-        if jnp.issubdtype(state.dtype, jnp.integer):
-            wide = state.astype(jnp.int32) * config.num_groups // g
-            return wide.astype(state.dtype)
-        return state * jnp.asarray(config.num_groups / g, state.dtype)
-    if jnp.issubdtype(state.dtype, jnp.integer):
-        return state // g
-    return state / g
-
-
 def run_pipelined(
     config: DenoiseConfig,
     source: Iterator[np.ndarray],
@@ -301,11 +280,11 @@ def run_pipelined(
             except RingClosed:
                 break
             transfer_s += dt
-            state = den.ingest(state, dev)
+            state = den.ingest(state, dev, step=step)
             frames += int(np.prod(dev.shape[:-2]))
             if out_ring is not None:
                 try:
-                    out_ring.put((step, _partial_average(state, step, config)))
+                    out_ring.put((step, den.partial(state, step)))
                 except RingClosed:
                     break  # consumer died; its error surfaces below
             step += 1
@@ -322,11 +301,11 @@ def run_pipelined(
         raise errors[0]
 
     if policy == "drop_oldest" and step:
-        # average over the groups that actually survived: finalize would
-        # divide the surviving sum by the configured G, biasing the output
-        # low by drops/G. This is also what keeps the consumer's last
-        # partial identical to the final output under loss.
-        out = _partial_average(state, step - 1, config)
+        # average over the groups that actually survived: finalize over the
+        # configured G would bias the output low by drops/G. This is also
+        # what keeps the consumer's last partial identical to the final
+        # output under loss.
+        out = den.finalize(state, steps=step)
     else:
         out = den.finalize(state)
     jax.block_until_ready(out)
@@ -391,6 +370,7 @@ def run_inline(
     frames = 0
     transfer_s = 0.0
     stall_s = 0.0
+    step = 0
     while True:
         t_wait = time.perf_counter()
         item = _stage_next(source)
@@ -402,7 +382,8 @@ def run_inline(
         transfer_s += dt
         # no per-step block: async dispatch is the pre-PR behaviour the
         # sync mode preserves — only the staging runs on-thread here
-        state = den.ingest(state, dev)
+        state = den.ingest(state, dev, step=step)
+        step += 1
         frames += int(np.prod(dev.shape[:-2]))
 
     out = den.finalize(state)

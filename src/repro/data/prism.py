@@ -6,8 +6,25 @@ screen pattern lit by two LEDs — one sine-modulated (the transient
 alternate control/excitation exactly as PRISM scans do, in mono12-in-u16
 containers, streamed group by group.
 
+Beyond the paper's rig, ``noise_regime`` adds sensor-defect models so the
+SNR harness (``benchmarks/table10_filter_zoo.py``) can show where each
+streaming filter wins:
+
+* ``"none"``     — the paper's rig exactly (default; byte-identical to the
+  pre-regime generator — the regime machinery draws no RNG in this mode).
+* ``"hot_pixels"`` — a fixed, seed-deterministic set of stuck-high pixels
+  (wrong in *every* frame: only spatial filtering repairs them).
+* ``"impulse"``  — per-frame cosmic-ray/salt spikes at random pixels
+  (one-group transients: rank filtering rejects them, averaging smears).
+* ``"drift"``    — slow sinusoidal sensor-baseline drift across the whole
+  acquisition (recency weighting tracks it, the flat mean averages
+  against it).
+
 The generator is deterministic given a seed, pure numpy (host-side, like a
-frame grabber), and cheap enough to run at benchmark rates.
+frame grabber), and cheap enough to run at benchmark rates. Regime
+corruption uses dedicated RNG streams (offset from ``seed``), so the base
+frame stream is identical across regimes and per-bank iterators stay
+consistent with ``banked_groups`` slices.
 """
 
 from __future__ import annotations
@@ -19,7 +36,14 @@ import numpy as np
 
 from repro.core.denoise import MONO12_MAX, DenoiseConfig
 
-__all__ = ["PrismSource", "snr_db"]
+__all__ = ["PrismSource", "NOISE_REGIMES", "snr_db"]
+
+NOISE_REGIMES = ("none", "hot_pixels", "impulse", "drift")
+
+# seed offsets for the dedicated regime RNG streams (keeps the base frame
+# stream byte-identical across regimes, and bank b's streams disjoint)
+_REGIME_SEED = 7_000_003
+_HOT_SEED = 9_000_017
 
 
 @dataclasses.dataclass
@@ -32,6 +56,21 @@ class PrismSource:
     ambient_on: bool = True
     shot_noise_std: float = 25.0
     baseline: float = 800.0
+    # -- sensor-defect regimes (see module docstring) -----------------------
+    noise_regime: str = "none"
+    hot_pixel_fraction: float = 0.002   # share of stuck-high pixels
+    hot_pixel_level: float = float(MONO12_MAX)
+    impulse_rate: float = 0.002         # spike prob per pixel per frame
+    impulse_amplitude: float = 1800.0
+    drift_amplitude: float = 150.0      # slow baseline wander (DN)
+    drift_period_frames: float = 3000.0
+
+    def __post_init__(self):
+        if self.noise_regime not in NOISE_REGIMES:
+            raise ValueError(
+                f"noise_regime must be one of {NOISE_REGIMES}, got "
+                f"{self.noise_regime!r}"
+            )
 
     def _pattern(self) -> np.ndarray:
         """Fixed screen pattern (checkerboard + gradient, like a test chart)."""
@@ -56,7 +95,13 @@ class PrismSource:
             + self.signal_amplitude * phase[:, None, None] * pat[None, :, :]
         )
 
-    def _group(self, rng: np.random.Generator) -> np.ndarray:
+    def _group(
+        self,
+        rng: np.random.Generator,
+        regime_rng: np.random.Generator | None = None,
+        start_frame: int = 0,
+        hot_mask: np.ndarray | None = None,
+    ) -> np.ndarray:
         """Synthesize one (N, H, W) group, fully vectorized.
 
         Per-frame luminance is (base + amplitude·|sin|)·pattern — an outer
@@ -65,6 +110,11 @@ class PrismSource:
         mono12 quantization makes f64 noise indistinguishable). The old
         per-frame Python loop cost ~1.2 s/group at paper scale and
         serialized the acquisition path this PR overlaps with compute.
+
+        Regime corruption (``regime_rng``/``start_frame``/``hot_mask``) is
+        applied to the float frames before quantization; with the default
+        ``noise_regime="none"`` this path is never entered and the output
+        is byte-identical to the pre-regime generator.
         """
         c = self.config
         i = np.arange(c.frames_per_group, dtype=np.float32)
@@ -77,26 +127,61 @@ class PrismSource:
         ).astype(np.float32)
         frames = level[:, None, None] * self._pattern().astype(np.float32)
         frames += rng.standard_normal(frames.shape, np.float32) * self.shot_noise_std
+        if self.noise_regime == "impulse":
+            spikes = regime_rng.random(frames.shape, dtype=np.float32)
+            frames += np.where(
+                spikes < self.impulse_rate, self.impulse_amplitude, 0.0
+            ).astype(np.float32)
+        elif self.noise_regime == "drift":
+            t = start_frame + i
+            frames += (
+                self.drift_amplitude
+                * np.sin(2 * np.pi * t / self.drift_period_frames)
+            ).astype(np.float32)[:, None, None]
+        elif self.noise_regime == "hot_pixels":
+            frames[:, hot_mask] = self.hot_pixel_level
         return np.clip(np.round(frames), 0, MONO12_MAX).astype(np.uint16)
+
+    def _regime_state(self, bank: int):
+        """Dedicated RNG stream + stuck-pixel mask for one bank's iterator."""
+        if self.noise_regime == "none":
+            return None, None
+        regime_rng = np.random.default_rng(self.seed + bank + _REGIME_SEED)
+        hot_mask = None
+        if self.noise_regime == "hot_pixels":
+            c = self.config
+            hot_rng = np.random.default_rng(self.seed + bank + _HOT_SEED)
+            hot_mask = hot_rng.random((c.height, c.width)) < self.hot_pixel_fraction
+        return regime_rng, hot_mask
 
     def groups(self) -> Iterator[np.ndarray]:
         """Yield G arrays of (N, H, W) u16 frames."""
         rng = np.random.default_rng(self.seed)
-        for _ in range(self.config.num_groups):
-            yield self._group(rng)
+        regime_rng, hot_mask = self._regime_state(0)
+        n = self.config.frames_per_group
+        for g in range(self.config.num_groups):
+            yield self._group(rng, regime_rng, g * n, hot_mask)
 
     def banked_groups(self, num_banks: int | None = None) -> Iterator[np.ndarray]:
         """Yield G arrays of (B, N, H, W) u16 frames — one bank per camera.
 
         Bank b draws from an independent stream seeded ``seed + b`` (the
         paper's banks are disjoint pixel regions of one sensor; independent
-        noise per bank is the matching statistical model).
+        noise per bank is the matching statistical model). Regime streams
+        are per bank too, so slices match ``bank_source``.
         """
         c = self.config
         b = num_banks or c.num_banks
         rngs = [np.random.default_rng(self.seed + i) for i in range(b)]
-        for _ in range(c.num_groups):
-            yield np.stack([self._group(r) for r in rngs])
+        regimes = [self._regime_state(i) for i in range(b)]
+        n = c.frames_per_group
+        for g in range(c.num_groups):
+            yield np.stack(
+                [
+                    self._group(r, rr, g * n, hm)
+                    for r, (rr, hm) in zip(rngs, regimes)
+                ]
+            )
 
     def bank_source(self, bank: int) -> Iterator[np.ndarray]:
         """Yield bank ``bank``'s G groups of (N, H, W) frames, standalone.
@@ -107,8 +192,10 @@ class PrismSource:
         slice of ``banked_groups`` — one camera pulled independently.
         """
         rng = np.random.default_rng(self.seed + bank)
-        for _ in range(self.config.num_groups):
-            yield self._group(rng)
+        regime_rng, hot_mask = self._regime_state(bank)
+        n = self.config.frames_per_group
+        for g in range(self.config.num_groups):
+            yield self._group(rng, regime_rng, g * n, hot_mask)
 
     def bank_sources(self, num_banks: int | None = None) -> list[Iterator[np.ndarray]]:
         """One independent per-bank iterator per camera (see ``bank_source``).

@@ -1,0 +1,46 @@
+"""Pluggable streaming-filter subsystem.
+
+The paper's pipeline hard-codes one preprocessing operation — pairwise
+subtract + group average. This package turns that single algorithm into a
+registry of streaming filters sharing one ``init / step / finalize`` state
+contract (``base.StreamingFilter``), so every executor in
+``repro.core.streaming`` / ``repro.core.banks`` can host any filter:
+
+* ``pair_average`` — the paper's subtract-and-average path, ported onto
+  the contract bit-identically (the default).
+* ``temporal_median`` — sliding-window median of pair diffs
+  (impulse / cosmic-ray rejection).
+* ``ema_variance`` — exponential moving average with Welford
+  running-variance shot-noise masking (drift tracking).
+* ``spatial_box`` — pair-average plus a post-average 3×3 box /
+  bilateral-lite spatial stage (hot-pixel repair).
+
+Importing this package populates the registry (each filter module
+registers itself via ``@register_filter``). All device work dispatches
+through ``repro.kernels.ops`` — a Pallas kernel per filter with a
+dataflow-faithful XLA fallback — never a kernel module directly. See
+docs/ARCHITECTURE.md for the contract and the filter-selection matrix.
+"""
+
+from repro.denoise.base import StreamingFilter
+from repro.denoise.registry import FILTERS, get_filter, register_filter
+from repro.denoise import ema_variance, pair_average, spatial_box, temporal_median
+from repro.denoise.ema_variance import EmaVarianceFilter
+from repro.denoise.pair_average import PairAverageFilter
+from repro.denoise.spatial_box import SpatialBoxFilter
+from repro.denoise.temporal_median import TemporalMedianFilter
+
+__all__ = [
+    "FILTERS",
+    "get_filter",
+    "register_filter",
+    "StreamingFilter",
+    "PairAverageFilter",
+    "TemporalMedianFilter",
+    "EmaVarianceFilter",
+    "SpatialBoxFilter",
+    "ema_variance",
+    "pair_average",
+    "spatial_box",
+    "temporal_median",
+]

@@ -1,0 +1,88 @@
+"""The streaming-filter state contract every registered filter implements.
+
+A filter is instantiated with a ``DenoiseConfig``-shaped object (duck
+typed — this package never imports ``repro.core``) and exposes a
+functional ``init / step / finalize`` cycle over per-group chunks, exactly
+the shape of the executors' ingest loop:
+
+    state = f.init()                       # or init(banks=B) for banked
+    for k, group in enumerate(groups):     # group: (N, H, W) u16/float
+        state = f.step(state, group, step_index=k)
+    out = f.finalize(state, steps=G)       # (N/2, H, W)
+
+Contract rules the executors rely on:
+
+* **State is an opaque pytree.** Executors thread it through without
+  inspecting it; only the filter knows the layout. ``step`` may donate
+  state buffers (all shipped filters do).
+* **Banked states.** ``init(banks=B)`` returns a state whose leaves carry
+  a bank axis; ``step`` then takes (B, N, H, W) chunks. ``state_pspec``
+  maps the state to per-leaf ``PartitionSpec``s ("bank" on the bank axis)
+  so ``repro.core.banks`` can shard it with ``shard_map``.
+* **Determinism.** ``step`` must be a pure function of (state, chunk,
+  step_index): the same chunk sequence gives bit-identical output under
+  the serial, ring-pipelined (any depth, ``block`` policy) and banked
+  executors.
+* **Partial estimates.** ``partial(state, step_index=k)`` returns the
+  denoised estimate after groups ``0..k`` *without* consuming the state
+  (the consumer-stage hook); ``partial`` at the final step must equal
+  ``finalize`` bit-for-bit. ``finalize(steps=s)`` with ``s < G`` averages
+  only the ``s`` surviving groups (the ``drop_oldest`` executor path).
+* **Backend dispatch.** All device math goes through
+  ``repro.kernels.ops`` (``config.backend`` selects pallas/xla/auto);
+  filters never import kernel modules.
+"""
+
+from __future__ import annotations
+
+from typing import Any, ClassVar
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+__all__ = ["StreamingFilter"]
+
+
+class StreamingFilter:
+    """Base class; see the module docstring for the contract."""
+
+    #: registry key, set by ``@register_filter``
+    name: ClassVar[str] = ""
+
+    def __init__(self, config: Any):
+        self.config = config
+
+    @classmethod
+    def validate(cls, config: Any) -> None:
+        """Raise ``ValueError`` for config combinations the filter cannot
+        honour (called from ``DenoiseConfig.__post_init__``)."""
+
+    # -- state lifecycle ----------------------------------------------------
+    def init(self, *, banks: int | None = None):
+        raise NotImplementedError
+
+    def step(self, state, group_frames, *, step_index: int):
+        raise NotImplementedError
+
+    def finalize(self, state, *, steps: int | None = None):
+        raise NotImplementedError
+
+    def partial(self, state, *, step_index: int):
+        """Estimate after groups ``0..step_index``; never consumes state."""
+        return self.finalize(state, steps=step_index + 1)
+
+    # -- banked support -----------------------------------------------------
+    def is_banked(self, state) -> bool:
+        """Whether ``state`` came from ``init(banks=...)``."""
+        raise NotImplementedError
+
+    def state_pspec(self, state):
+        """Per-leaf ``PartitionSpec`` pytree for a *banked* state.
+
+        Default: every leaf carries the bank axis first. Filters with a
+        different layout (e.g. ``temporal_median``'s window keeps its
+        slot axis leading) override this.
+        """
+        return jax.tree.map(
+            lambda leaf: P("bank", *([None] * (leaf.ndim - 1))), state
+        )

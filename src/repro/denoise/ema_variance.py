@@ -1,0 +1,124 @@
+"""EMA + running-variance filter: recency-weighted average with shot-noise
+masking.
+
+Two coupled accumulators per step (one fused ``ops.ema_welford_step``):
+
+* an **exponential moving average** of the pair diffs —
+  ``ema' = (1-alpha)*ema + alpha*diff`` per (pair, pixel) — the
+  recency-weighted alternative to the paper's flat group mean, so slow
+  sensor drift is tracked instead of averaged against;
+* a **Welford/Chan running variance** per *pixel*, pooled over every diff
+  sample seen (all pairs × groups): O(H·W) state.
+
+``finalize`` bias-corrects the EMA (``ema / (1 - (1-alpha)^steps)`` — the
+zero init otherwise drags early-group estimates toward 0) and then masks
+shot-noise-dominated pixels: where the temporal variance exceeds
+``ema_mask_sigma^2 ×`` the sensor-typical (median) variance, the pixel is
+noise, not signal, and is shrunk to its pooled long-run mean — the
+deepest average the stream offers.
+
+State: ``{"ema": (N/2,H,W), "wmean": (H,W), "wm2": (H,W)}``; banked, each
+leaf gains a leading bank axis and steps loop over the (small, static)
+local bank count — variance pooling must not cross banks, and under
+``shard_map`` each device sees one bank anyway.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.denoise.base import StreamingFilter
+from repro.denoise.registry import register_filter
+from repro.kernels import ops
+
+__all__ = ["EmaVarianceFilter"]
+
+
+@register_filter("ema_variance")
+class EmaVarianceFilter(StreamingFilter):
+    """Bias-corrected EMA of pair diffs + Welford variance masking."""
+
+    @classmethod
+    def validate(cls, config) -> None:
+        if not 0.0 < config.ema_alpha <= 1.0:
+            raise ValueError(
+                f"ema_alpha must be in (0, 1], got {config.ema_alpha}"
+            )
+        if config.ema_mask_sigma <= 0.0:
+            raise ValueError(
+                f"ema_mask_sigma must be > 0, got {config.ema_mask_sigma}"
+            )
+        if not jnp.issubdtype(jnp.dtype(config.accum_dtype), jnp.floating):
+            raise ValueError(
+                "ema_variance needs a floating accum_dtype (EMA and variance "
+                f"arithmetic), got {config.accum_dtype!r}"
+            )
+
+    def init(self, *, banks: int | None = None):
+        c = self.config
+        acc = jnp.dtype(c.accum_dtype)
+        lead = () if banks is None else (banks,)
+        return {
+            "ema": jnp.zeros(lead + (c.pairs_per_group, c.height, c.width), acc),
+            "wmean": jnp.zeros(lead + (c.height, c.width), acc),
+            "wm2": jnp.zeros(lead + (c.height, c.width), acc),
+        }
+
+    def _step_one(self, ema, wmean, wm2, group_frames, step_index: int):
+        c = self.config
+        return ops.ema_welford_step(
+            ema,
+            wmean,
+            wm2,
+            group_frames,
+            alpha=c.ema_alpha,
+            offset=c.offset,
+            prior_count=step_index * c.pairs_per_group,
+            backend=c.backend,
+            row_tile=c.row_tile,
+            pair_tile=c.pair_tile,
+        )
+
+    def step(self, state, group_frames, *, step_index: int):
+        if group_frames.ndim == 3:
+            ema, wmean, wm2 = self._step_one(
+                state["ema"], state["wmean"], state["wm2"], group_frames, step_index
+            )
+            return {"ema": ema, "wmean": wmean, "wm2": wm2}
+        # banked: variance pooling is per bank, so loop the (static, small)
+        # local bank count rather than flattening banks into the pair axis
+        outs = [
+            self._step_one(
+                state["ema"][b],
+                state["wmean"][b],
+                state["wm2"][b],
+                group_frames[b],
+                step_index,
+            )
+            for b in range(group_frames.shape[0])
+        ]
+        return {
+            "ema": jnp.stack([o[0] for o in outs]),
+            "wmean": jnp.stack([o[1] for o in outs]),
+            "wm2": jnp.stack([o[2] for o in outs]),
+        }
+
+    def finalize(self, state, *, steps: int | None = None):
+        c = self.config
+        steps = c.num_groups if steps is None else steps
+        ema, wmean, wm2 = state["ema"], state["wmean"], state["wm2"]
+        acc = ema.dtype
+        corr = 1.0 - (1.0 - c.ema_alpha) ** max(steps, 1)
+        est = ema / jnp.asarray(corr, acc)
+        samples = steps * c.pairs_per_group
+        if samples < 2:
+            return est
+        var = wm2 / jnp.asarray(samples - 1, acc)
+        # sensor-typical level per bank: median over the pixel axes
+        typical = jnp.median(var, axis=(-2, -1), keepdims=True)
+        mask = var > jnp.asarray(c.ema_mask_sigma**2, acc) * typical
+        # broadcast the (H, W) mask/mean over the pair axis (axis -3)
+        return jnp.where(mask[..., None, :, :], wmean[..., None, :, :], est)
+
+    def is_banked(self, state) -> bool:
+        return state["ema"].ndim == 4

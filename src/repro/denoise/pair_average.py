@@ -1,0 +1,85 @@
+"""The paper's subtract-and-average path as the default registered filter.
+
+This is a port, not a reimplementation: ``init/step/finalize`` call the
+exact ``ops.stream_*`` / ``ops.multibank_stream_*`` entry points the
+pre-registry ``StreamingDenoiser`` called with the same arguments, so the
+output is bit-identical to the pre-subsystem pipeline (asserted by
+``tests/test_filters.py``). State is the single running sumFrame of
+paper Alg 3 — (N/2, H, W), or (B, N/2, H, W) banked — donated per step.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.denoise.base import StreamingFilter
+from repro.denoise.registry import register_filter
+from repro.kernels import ops
+
+__all__ = ["PairAverageFilter"]
+
+
+@register_filter("pair_average")
+class PairAverageFilter(StreamingFilter):
+    """Running-sum subtract-and-average (paper Alg 3 / Alg 3 v2)."""
+
+    def init(self, *, banks: int | None = None):
+        c = self.config
+        acc = jnp.dtype(c.accum_dtype)
+        if banks is not None:
+            return ops.multibank_stream_init(
+                banks, c.frames_per_group, c.height, c.width, acc
+            )
+        return ops.stream_init(c.frames_per_group, c.height, c.width, acc)
+
+    def step(self, state, group_frames, *, step_index: int):
+        c = self.config
+        kw = dict(
+            num_groups=c.num_groups,
+            offset=c.offset,
+            variant=c.variant,
+            backend=c.backend,
+            row_tile=c.row_tile,
+            pair_tile=c.pair_tile,
+        )
+        if group_frames.ndim == 4:
+            return ops.multibank_stream_step(state, group_frames, **kw)
+        return ops.stream_step(state, group_frames, **kw)
+
+    def finalize(self, state, *, steps: int | None = None):
+        c = self.config
+        if steps is None or steps == c.num_groups:
+            return ops.stream_finalize(state, c.num_groups, variant=c.variant)
+        # drop_oldest executor path: average only the surviving groups
+        # (finalize's /G would bias the output low by drops/G).
+        return self._scaled(state, steps)
+
+    def partial(self, state, *, step_index: int):
+        return self._scaled(state, step_index + 1)
+
+    def is_banked(self, state) -> bool:
+        return state.ndim == 4
+
+    def _scaled(self, state, groups_seen: int):
+        """Estimate averaging ``groups_seen`` groups (fresh array, never
+        aliases the donated running sum).
+
+        divide_last keeps a raw running sum, so the estimate is
+        ``sum/k``; divide_first pre-divides every diff by G, so it is
+        ``sum * G/k`` — widened to int32 for integer accumulators (ample
+        for the paper's u16 containers), where scaling in the container
+        dtype would truncate the factor (or wrap the product) and corrupt
+        every mid-stream partial. At ``groups_seen == G`` both variants
+        match ``finalize`` bit-for-bit (the last scale is the same
+        division / an exact unit factor).
+        """
+        c = self.config
+        k = groups_seen
+        if c.variant == "divide_first":
+            if jnp.issubdtype(state.dtype, jnp.integer):
+                wide = state.astype(jnp.int32) * c.num_groups // k
+                return wide.astype(state.dtype)
+            return state * jnp.asarray(c.num_groups / k, state.dtype)
+        if jnp.issubdtype(state.dtype, jnp.integer):
+            return state // k
+        return state / k

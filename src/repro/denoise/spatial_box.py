@@ -1,0 +1,75 @@
+"""Spatial box / bilateral-lite filter: pair-average plus a 3×3 stage.
+
+Temporal filters cannot repair a defect that is wrong in *every* frame —
+a stuck/hot pixel has no good temporal samples, only good spatial
+neighbors. This filter reuses the default ``pair_average`` accumulation
+verbatim (same running sum, same donated ``ops.stream_step``) and applies
+a row-tiled 3×3 spatial stage (``ops.spatial_filter``) to the averaged
+output:
+
+* ``spatial_mode="box"`` — plain 3×3 mean;
+* ``spatial_mode="bilateral"`` — bilateral-lite, a Gaussian *range*
+  kernel on uniform spatial support (``spatial_range_sigma`` in pixel
+  units), so edges survive while isolated outliers are pulled to their
+  neighbors.
+
+The spatial stage is per-frame independent, so banked outputs flatten the
+bank axis into the pair axis for the kernel call — no per-bank loop.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.denoise.pair_average import PairAverageFilter
+from repro.denoise.registry import register_filter
+from repro.kernels import ops
+
+__all__ = ["SpatialBoxFilter"]
+
+
+@register_filter("spatial_box")
+class SpatialBoxFilter(PairAverageFilter):
+    """Pair-average accumulation with a post-average 3×3 spatial stage."""
+
+    @classmethod
+    def validate(cls, config) -> None:
+        if config.spatial_mode not in ops.SPATIAL_MODES:
+            raise ValueError(
+                f"spatial_mode must be one of {ops.SPATIAL_MODES}, got "
+                f"{config.spatial_mode!r}"
+            )
+        if config.spatial_range_sigma <= 0.0:
+            raise ValueError(
+                f"spatial_range_sigma must be > 0, got "
+                f"{config.spatial_range_sigma}"
+            )
+        if not jnp.issubdtype(jnp.dtype(config.accum_dtype), jnp.floating):
+            raise ValueError(
+                "spatial_box needs a floating accum_dtype (box/bilateral "
+                f"weights), got {config.accum_dtype!r}"
+            )
+
+    def _smooth(self, averaged):
+        c = self.config
+        banked = averaged.ndim == 4
+        if banked:
+            b, p, h, w = averaged.shape
+            averaged = averaged.reshape(b * p, h, w)
+        out = ops.spatial_filter(
+            averaged,
+            mode=c.spatial_mode,
+            range_sigma=c.spatial_range_sigma,
+            backend=c.backend,
+            row_tile=c.row_tile,
+            pair_tile=c.pair_tile,
+        )
+        if banked:
+            out = out.reshape(b, p, h, w)
+        return out
+
+    def finalize(self, state, *, steps: int | None = None):
+        return self._smooth(super().finalize(state, steps=steps))
+
+    def partial(self, state, *, step_index: int):
+        return self._smooth(super().partial(state, step_index=step_index))

@@ -1,0 +1,101 @@
+"""Temporal-median filter: sliding-window rank statistic over pair diffs.
+
+Impulse / cosmic-ray rejection: a transient spike corrupts one group's
+diff frame, lands in one window slot, and is discarded by the per-pixel
+median, where the default ``pair_average`` smears it over the output at
+1/G amplitude. The window covers the last ``config.median_window`` groups
+(K >= G makes it a full median over the acquisition).
+
+State: a (K, N/2, H, W) ring of past diff frames — banked:
+(K, B, N/2, H, W), the slot axis kept leading so the banked array
+reshapes to the single-bank kernel layout for free (``state_pspec`` puts
+"bank" on axis 1). Steps donate the window through
+``ops.median_window_insert``; ``finalize`` runs ``ops.median_combine``
+over the filled prefix.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.denoise.base import StreamingFilter
+from repro.denoise.registry import register_filter
+from repro.kernels import ops
+
+from jax.sharding import PartitionSpec as P
+
+__all__ = ["TemporalMedianFilter"]
+
+
+@register_filter("temporal_median")
+class TemporalMedianFilter(StreamingFilter):
+    """Per-pixel median over a sliding window of pair-difference frames."""
+
+    @classmethod
+    def validate(cls, config) -> None:
+        if config.median_window < 1:
+            raise ValueError(
+                f"median_window must be >= 1, got {config.median_window}"
+            )
+        if not jnp.issubdtype(jnp.dtype(config.accum_dtype), jnp.floating):
+            raise ValueError(
+                "temporal_median needs a floating accum_dtype (even window "
+                f"prefixes average the two middle ranks), got "
+                f"{config.accum_dtype!r}"
+            )
+
+    def init(self, *, banks: int | None = None):
+        c = self.config
+        k = c.median_window
+        acc = jnp.dtype(c.accum_dtype)
+        shape = (k, c.pairs_per_group, c.height, c.width)
+        if banks is not None:
+            shape = (k, banks) + shape[1:]
+        return jnp.zeros(shape, acc)
+
+    def step(self, state, group_frames, *, step_index: int):
+        c = self.config
+        slot = step_index % c.median_window
+        banked = group_frames.ndim == 4
+        if banked:
+            k, b, p, h, w = state.shape
+            # bank-major flatten: (K, B, P, H, W) -> (K, B*P, H, W) pairs up
+            # exactly with the (B*N, H, W) flatten of the chunk.
+            state = state.reshape(k, b * p, h, w)
+            group_frames = group_frames.reshape(-1, h, w)
+        out = ops.median_window_insert(
+            state,
+            group_frames,
+            slot=slot,
+            offset=c.offset,
+            backend=c.backend,
+            row_tile=c.row_tile,
+            pair_tile=c.pair_tile,
+        )
+        if banked:
+            out = out.reshape(k, b, p, h, w)
+        return out
+
+    def finalize(self, state, *, steps: int | None = None):
+        c = self.config
+        steps = c.num_groups if steps is None else steps
+        count = min(max(steps, 1), c.median_window)
+        banked = state.ndim == 5
+        if banked:
+            k, b, p, h, w = state.shape
+            state = state.reshape(k, b * p, h, w)
+        out = ops.median_combine(
+            state[:count],
+            backend=c.backend,
+            row_tile=c.row_tile,
+            pair_tile=c.pair_tile,
+        )
+        if banked:
+            out = out.reshape(b, p, h, w)
+        return out
+
+    def is_banked(self, state) -> bool:
+        return state.ndim == 5
+
+    def state_pspec(self, state):
+        return P(None, "bank", None, None, None)

@@ -36,12 +36,20 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import denoise_multibank, denoise_stream, denoise_tmpframe
+from repro.kernels import (
+    denoise_ema,
+    denoise_median,
+    denoise_multibank,
+    denoise_spatial,
+    denoise_stream,
+    denoise_tmpframe,
+)
 from repro.kernels.ref import ref_stream_finalize, ref_stream_init, ref_stream_step
 
 __all__ = [
     "ALGORITHMS",
     "BACKENDS",
+    "SPATIAL_MODES",
     "subtract_average",
     "stream_init",
     "stream_step",
@@ -49,10 +57,16 @@ __all__ = [
     "multibank_subtract_average",
     "multibank_stream_init",
     "multibank_stream_step",
+    "pair_diff",
+    "median_window_insert",
+    "median_combine",
+    "ema_welford_step",
+    "spatial_filter",
 ]
 
 ALGORITHMS = ("alg1", "alg2", "alg3", "alg3_v2")
 BACKENDS = ("auto", "pallas", "xla")
+SPATIAL_MODES = ("box", "bilateral")
 
 
 def _on_tpu() -> bool:
@@ -391,3 +405,207 @@ def multibank_stream_step(
         variant=variant,
         num_groups=num_groups,
     )
+
+
+# ---------------------------------------------------------------------------
+# Streaming-filter kernels (repro.denoise): each entry point pairs a Pallas
+# kernel with a dataflow-faithful XLA fallback, dispatched exactly like the
+# subtract-average paths above. The filter subsystem never imports a kernel
+# module directly — this is its backend boundary too.
+# ---------------------------------------------------------------------------
+
+
+def pair_diff(group_frames: jnp.ndarray, *, offset: float, accum_dtype) -> jnp.ndarray:
+    """(..., N, H, W) -> (..., N/2, H, W): exc - ctl + offset (pure XLA).
+
+    The shared subtraction step of every filter's XLA fallback; the Pallas
+    paths fuse this into their kernels instead.
+    """
+    acc = jnp.dtype(accum_dtype)
+    shape = group_frames.shape
+    pairs = group_frames.reshape(shape[:-3] + (shape[-3] // 2, 2) + shape[-2:])
+    return (
+        pairs[..., 1, :, :].astype(acc)
+        - pairs[..., 0, :, :].astype(acc)
+        + jnp.asarray(offset, acc)
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("slot", "offset", "backend", "interpret", "row_tile", "pair_tile"),
+    donate_argnums=(0,),
+)
+def median_window_insert(
+    window: jnp.ndarray,
+    group_frames: jnp.ndarray,
+    *,
+    slot: int,
+    offset: float = 0.0,
+    backend: str = "auto",
+    interpret: bool | None = None,
+    row_tile: int | None = None,
+    pair_tile: int | None = None,
+) -> jnp.ndarray:
+    """Fold one group's diffs into slot ``slot`` of the (K, N/2, H, W) window."""
+    backend = _resolve(backend)
+    if backend == "pallas":
+        interp = (not _on_tpu()) if interpret is None else interpret
+        return denoise_median.median_window_insert(
+            window,
+            group_frames,
+            slot=slot,
+            offset=offset,
+            row_tile=row_tile,
+            pair_tile=pair_tile,
+            interpret=interp,
+        )
+    diff = pair_diff(group_frames, offset=offset, accum_dtype=window.dtype)
+    return window.at[slot].set(diff)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("backend", "interpret", "row_tile", "pair_tile"),
+)
+def median_combine(
+    window: jnp.ndarray,
+    *,
+    backend: str = "auto",
+    interpret: bool | None = None,
+    row_tile: int | None = None,
+    pair_tile: int | None = None,
+) -> jnp.ndarray:
+    """(K, N/2, H, W) -> (N/2, H, W): per-pixel median over the window axis.
+
+    Callers slice the window to its filled prefix first. Even window
+    lengths average the two middle ranks on both backends.
+    """
+    backend = _resolve(backend)
+    if backend == "pallas":
+        interp = (not _on_tpu()) if interpret is None else interpret
+        return denoise_median.median_combine(
+            window, row_tile=row_tile, pair_tile=pair_tile, interpret=interp
+        )
+    k = window.shape[0]
+    srt = jnp.sort(window, axis=0)
+    if k % 2:
+        return srt[k // 2]
+    return (srt[k // 2 - 1] + srt[k // 2]) / jnp.asarray(2, window.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "alpha",
+        "offset",
+        "backend",
+        "interpret",
+        "row_tile",
+        "pair_tile",
+    ),
+    donate_argnums=(0, 1, 2),
+)
+def ema_welford_step(
+    ema: jnp.ndarray,
+    wmean: jnp.ndarray,
+    wm2: jnp.ndarray,
+    group_frames: jnp.ndarray,
+    *,
+    alpha: float,
+    offset: float = 0.0,
+    prior_count=0,
+    backend: str = "auto",
+    interpret: bool | None = None,
+    row_tile: int | None = None,
+    pair_tile: int | None = None,
+):
+    """One fused EMA + Welford/Chan update; (ema, wmean, wm2) donated.
+
+    ema: (N/2, H, W); wmean/wm2: (H, W) pooled over pairs × groups;
+    ``prior_count`` = diff samples already folded in (steps * N/2) — a
+    traced scalar, so the per-step value never retraces the jit (one
+    compile serves the whole stream).
+    """
+    backend = _resolve(backend)
+    if backend == "pallas":
+        interp = (not _on_tpu()) if interpret is None else interpret
+        return denoise_ema.ema_welford_step(
+            ema,
+            wmean,
+            wm2,
+            group_frames,
+            alpha=alpha,
+            offset=offset,
+            prior_count=prior_count,
+            row_tile=row_tile,
+            pair_tile=pair_tile,
+            interpret=interp,
+        )
+    acc = ema.dtype
+    diff = pair_diff(group_frames, offset=offset, accum_dtype=acc)
+    a = jnp.asarray(alpha, acc)
+    new_ema = ema * (1 - a) + a * diff
+    # Chan chunk merge with the whole group's N/2 samples per pixel at once
+    # (the one-pass form; the Pallas kernel merges pair_tile at a time).
+    m = jnp.asarray(diff.shape[0], acc)
+    n = jnp.asarray(prior_count, acc)
+    chunk_mean = diff.mean(axis=0)
+    chunk_m2 = ((diff - chunk_mean[None]) ** 2).sum(axis=0)
+    delta = chunk_mean - wmean
+    tot = n + m
+    new_mean = wmean + delta * (m / tot)
+    new_m2 = wm2 + chunk_m2 + delta * delta * (n * m / tot)
+    return new_ema, new_mean, new_m2
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "mode",
+        "range_sigma",
+        "backend",
+        "interpret",
+        "row_tile",
+        "pair_tile",
+    ),
+)
+def spatial_filter(
+    frames: jnp.ndarray,
+    *,
+    mode: str = "box",
+    range_sigma: float = 50.0,
+    backend: str = "auto",
+    interpret: bool | None = None,
+    row_tile: int | None = None,
+    pair_tile: int | None = None,
+) -> jnp.ndarray:
+    """(P, H, W) -> (P, H, W): 3×3 box or bilateral-lite smoothing."""
+    if mode not in SPATIAL_MODES:
+        raise ValueError(f"mode must be one of {SPATIAL_MODES}, got {mode}")
+    backend = _resolve(backend)
+    if backend == "pallas":
+        interp = (not _on_tpu()) if interpret is None else interpret
+        return denoise_spatial.spatial_filter_3x3(
+            frames,
+            mode=mode,
+            range_sigma=range_sigma,
+            row_tile=row_tile,
+            pair_tile=pair_tile,
+            interpret=interp,
+        )
+    p, h, w = frames.shape
+    pad = jnp.pad(frames, ((0, 0), (1, 1), (1, 1)), mode="edge")
+    neighbors = [
+        pad[:, r : r + h, c : c + w] for r in range(3) for c in range(3)
+    ]
+    if mode == "box":
+        return sum(neighbors) / jnp.asarray(9, frames.dtype)
+    inv2s2 = jnp.asarray(1.0 / (2.0 * range_sigma * range_sigma), frames.dtype)
+    acc = jnp.zeros_like(frames)
+    wsum = jnp.zeros_like(frames)
+    for nb in neighbors:
+        wgt = jnp.exp(-((nb - frames) ** 2) * inv2s2)
+        acc += wgt * nb
+        wsum += wgt
+    return acc / wsum

@@ -11,7 +11,6 @@ the 32B-class train_4k cells fit a 16 GB/chip pod.
 from __future__ import annotations
 
 import functools
-from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -174,7 +173,6 @@ def jit_prefill_step(model, mesh, rules, *, batch: int, seq: int):
     if cfg.family == "audio":
         # audio prefill returns only the (static) cross K/V cache
         cache_sh = {"cross": cache_sh["cross"]}
-    rep = NamedSharding(mesh, P())
     logits_sh = sh.logical_sharding((batch, cfg.vocab_size), ("batch", "vocab"),
                                     mesh, rules)
     jitted = jax.jit(

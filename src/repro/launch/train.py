@@ -26,13 +26,11 @@ import argparse
 import time
 
 import jax
-import numpy as np
 
 from repro.checkpoint import CheckpointManager
 from repro.configs import ARCH_IDS, get_config
 from repro.distributed import sharding as sh
 from repro.launch import steps
-from repro.launch.inputs import make_train_batch
 from repro.launch.mesh import make_mesh
 from repro.models import build_model
 from repro.optim import AdamW, cosine_schedule

@@ -21,14 +21,13 @@ coexist across segments. The scan body is remat-wrapped when cfg.remat.
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any
 
 import jax
 import jax.numpy as jnp
 
 from repro.distributed.context import constrain
-from repro.distributed.sharding import ParamSpec, stack_spec
+from repro.distributed.sharding import stack_spec
 from repro.models import attention as A
 from repro.models import layers as L
 from repro.models import mla as M

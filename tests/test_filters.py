@@ -1,0 +1,397 @@
+"""Streaming-filter subsystem: registry contract, bit-identity of the
+default ``pair_average`` port, per-filter numerics against numpy oracles,
+pallas/xla backend agreement, and executor-identity (serial / prefetch /
+ring depths 1-3 / banked) for every registered filter."""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core.banks import make_bank_mesh, run_pipelined_banked
+from repro.core.denoise import DenoiseConfig, StreamingDenoiser
+from repro.core.streaming import DownloadConsumer, run_inline, run_pipelined
+from repro.data.prism import PrismSource
+from repro.denoise import FILTERS, StreamingFilter, get_filter, register_filter
+from repro.kernels import ops
+
+ALL_FILTERS = sorted(FILTERS)
+
+
+def _cfg(**kw):
+    base = dict(num_groups=4, frames_per_group=20, height=16, width=64,
+                backend="xla")
+    base.update(kw)
+    return DenoiseConfig(**base)
+
+
+def _groups(cfg, seed=3):
+    return [g.astype(np.float32) for g in PrismSource(cfg, seed=seed).groups()]
+
+
+def _np_diffs(groups, offset):
+    """(G, N/2, H, W) float64->float32 pair diffs: exc - ctl + offset."""
+    out = []
+    for g in groups:
+        pairs = np.asarray(g, np.float32).reshape(g.shape[0] // 2, 2, *g.shape[1:])
+        out.append(pairs[:, 1] - pairs[:, 0] + np.float32(offset))
+    return np.stack(out)
+
+
+# ---------------------------------------------------------------------------
+# Registry contract.
+# ---------------------------------------------------------------------------
+
+
+def test_registry_exposes_all_filters():
+    assert {"pair_average", "temporal_median", "ema_variance",
+            "spatial_box"} <= set(FILTERS)
+    assert len(FILTERS) >= 4
+    for name, cls in FILTERS.items():
+        assert issubclass(cls, StreamingFilter)
+        assert cls.name == name
+        assert get_filter(name) is cls
+
+
+def test_get_filter_unknown_lists_options():
+    with pytest.raises(ValueError) as exc:
+        get_filter("nope")
+    for name in FILTERS:
+        assert name in str(exc.value)
+
+
+def test_register_filter_rejects_duplicates():
+    with pytest.raises(ValueError, match="already registered"):
+
+        @register_filter("pair_average")
+        class Clash(StreamingFilter):
+            pass
+
+    assert FILTERS["pair_average"].__name__ == "PairAverageFilter"
+
+
+def test_custom_filter_registration_roundtrip():
+    @register_filter("_test_identity")
+    class IdentityFilter(StreamingFilter):
+        def init(self, *, banks=None):
+            return jnp.zeros(())
+
+        def step(self, state, group_frames, *, step_index):
+            return state
+
+        def finalize(self, state, *, steps=None):
+            return state
+
+    try:
+        assert get_filter("_test_identity") is IdentityFilter
+        cfg = _cfg(filter_name="_test_identity")
+        assert StreamingDenoiser(cfg).filter.name == "_test_identity"
+    finally:
+        del FILTERS["_test_identity"]
+
+
+# ---------------------------------------------------------------------------
+# Default filter: bit-identical port of the pre-registry path.
+# ---------------------------------------------------------------------------
+
+
+def test_pair_average_bit_identical_to_ops_stream_path():
+    cfg = _cfg()
+    groups = _groups(cfg)
+    state = ops.stream_init(cfg.frames_per_group, cfg.height, cfg.width,
+                            jnp.float32)
+    for g in groups:
+        state = ops.stream_step(
+            state, jnp.asarray(g), num_groups=cfg.num_groups,
+            offset=cfg.offset, variant=cfg.variant, backend="xla",
+        )
+    ref = ops.stream_finalize(state, cfg.num_groups, variant=cfg.variant)
+    out = StreamingDenoiser(cfg).run(iter(groups))
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+def test_pair_average_one_shot_bit_identical_to_subtract_average():
+    cfg = _cfg()
+    frames = jnp.asarray(np.stack(_groups(cfg)))
+    ref = ops.subtract_average(frames, offset=cfg.offset,
+                               algorithm=cfg.algorithm, backend="xla")
+    np.testing.assert_array_equal(
+        np.asarray(StreamingDenoiser(cfg)(frames)), np.asarray(ref)
+    )
+
+
+# ---------------------------------------------------------------------------
+# Filter numerics against independent numpy oracles (xla backend).
+# ---------------------------------------------------------------------------
+
+
+def test_temporal_median_matches_numpy_oracle():
+    cfg = _cfg(filter_name="temporal_median", median_window=3, num_groups=5)
+    groups = _groups(cfg)
+    out = np.asarray(StreamingDenoiser(cfg).run(iter(groups)))
+    diffs = _np_diffs(groups, cfg.offset)
+    # window of 3 holds the LAST 3 groups' diffs
+    ref = np.median(diffs[-3:], axis=0)
+    np.testing.assert_allclose(out, ref, rtol=1e-6)
+
+
+def test_temporal_median_window_larger_than_stream():
+    cfg = _cfg(filter_name="temporal_median", median_window=8, num_groups=4)
+    groups = _groups(cfg)
+    out = np.asarray(StreamingDenoiser(cfg).run(iter(groups)))
+    ref = np.median(_np_diffs(groups, cfg.offset), axis=0)
+    np.testing.assert_allclose(out, ref, rtol=1e-6)
+
+
+def test_temporal_median_rejects_impulse_outlier():
+    """One corrupted group must not move the median output at all."""
+    cfg = _cfg(filter_name="temporal_median", median_window=5, num_groups=5,
+               offset=0.0)
+    rng = np.random.default_rng(0)
+    base = rng.normal(500.0, 5.0, (5, 20, 16, 64)).astype(np.float32)
+    spiked = base.copy()
+    spiked[2, 3] += 4000.0  # cosmic ray hits group 2, frame 3
+    out_med = np.asarray(StreamingDenoiser(cfg)(jnp.asarray(spiked)))
+    clean_med = np.asarray(StreamingDenoiser(cfg)(jnp.asarray(base)))
+    assert np.abs(out_med - clean_med).max() < 50.0  # median: barely moves
+    cfg_mean = _cfg(num_groups=5, offset=0.0)
+    out_mean = np.asarray(StreamingDenoiser(cfg_mean)(jnp.asarray(spiked)))
+    clean_mean = np.asarray(StreamingDenoiser(cfg_mean)(jnp.asarray(base)))
+    assert np.abs(out_mean - clean_mean).max() > 500.0  # mean: smeared spike
+
+
+def test_ema_variance_matches_numpy_oracle():
+    cfg = _cfg(filter_name="ema_variance", ema_alpha=0.4,
+               ema_mask_sigma=1e6)  # mask off: pure bias-corrected EMA
+    groups = _groups(cfg)
+    out = np.asarray(StreamingDenoiser(cfg).run(iter(groups)))
+    diffs = _np_diffs(groups, cfg.offset)
+    ema = np.zeros_like(diffs[0])
+    for d in diffs:
+        ema = 0.6 * ema + 0.4 * d
+    ref = ema / (1.0 - 0.6 ** len(diffs))
+    np.testing.assert_allclose(out, ref, rtol=1e-5)
+
+
+def test_ema_variance_masks_flickering_pixels():
+    """A pixel with huge temporal variance is replaced by its pooled mean."""
+    cfg = _cfg(filter_name="ema_variance", ema_alpha=0.5, ema_mask_sigma=4.0,
+               offset=0.0, num_groups=6)
+    rng = np.random.default_rng(1)
+    frames = rng.normal(500.0, 2.0, (6, 20, 16, 64)).astype(np.float32)
+    # pixel (4, 7) flickers wildly between groups in the excitation frames
+    frames[:, 1::2, 4, 7] += rng.choice([-2000.0, 2000.0], size=(6, 10))
+    out = np.asarray(StreamingDenoiser(cfg)(jnp.asarray(frames)))
+    diffs = _np_diffs(list(frames), 0.0)
+    pooled_mean = diffs.reshape(-1, 16, 64).mean(axis=0)
+    # masked pixel pinned to the pooled mean, for every pair
+    np.testing.assert_allclose(out[:, 4, 7], pooled_mean[4, 7], rtol=1e-4)
+    # a quiet pixel is NOT masked (it keeps per-pair structure)
+    assert np.abs(out[:, 2, 3] - pooled_mean[2, 3]).max() >= 0.0
+
+
+def test_spatial_box_matches_numpy_oracle():
+    cfg = _cfg(filter_name="spatial_box", spatial_mode="box")
+    groups = _groups(cfg)
+    out = np.asarray(StreamingDenoiser(cfg).run(iter(groups)))
+    base = np.asarray(StreamingDenoiser(_cfg()).run(iter(groups)))
+    pad = np.pad(base, ((0, 0), (1, 1), (1, 1)), mode="edge")
+    h, w = base.shape[1:]
+    ref = sum(
+        pad[:, r : r + h, c : c + w] for r in range(3) for c in range(3)
+    ) / np.float32(9)
+    np.testing.assert_allclose(out, ref, rtol=1e-5)
+
+
+def test_spatial_bilateral_preserves_edges_more_than_box():
+    """The range kernel must keep a sharp step sharper than the plain box."""
+    step_img = np.zeros((1, 2, 16, 64), np.float32)
+    step_img[:, 1, :, 32:] = 1000.0  # excitation frame: hard vertical edge
+    kw = dict(num_groups=1, frames_per_group=2, height=16, width=64,
+              backend="xla", offset=0.0, filter_name="spatial_box")
+    box = np.asarray(
+        StreamingDenoiser(DenoiseConfig(**kw, spatial_mode="box"))(
+            jnp.asarray(step_img)
+        )
+    )
+    bil = np.asarray(
+        StreamingDenoiser(
+            DenoiseConfig(**kw, spatial_mode="bilateral",
+                          spatial_range_sigma=30.0)
+        )(jnp.asarray(step_img))
+    )
+    edge_col = 31  # last column before the step
+    assert box[0, 4, edge_col] > 100.0        # box bleeds the step leftward
+    assert bil[0, 4, edge_col] < 10.0         # bilateral stops at the edge
+
+
+# ---------------------------------------------------------------------------
+# Backend agreement: pallas (interpret on CPU) == xla per filter.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", ALL_FILTERS)
+def test_pallas_matches_xla(name):
+    kw = dict(num_groups=3, frames_per_group=8, height=8, width=32,
+              filter_name=name, median_window=2)
+    groups = _groups(DenoiseConfig(**kw, backend="xla"), seed=7)
+    ox = StreamingDenoiser(DenoiseConfig(**kw, backend="xla")).run(iter(groups))
+    op = StreamingDenoiser(DenoiseConfig(**kw, backend="pallas")).run(
+        iter(groups)
+    )
+    np.testing.assert_allclose(
+        np.asarray(ox), np.asarray(op), rtol=1e-5, atol=1e-2
+    )
+
+
+# ---------------------------------------------------------------------------
+# Executor identity: every filter, every executor, same stream, same bits.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", ALL_FILTERS)
+def test_filter_identical_across_executors(name):
+    cfg = _cfg(filter_name=name)
+    groups = _groups(cfg)
+    out_sync, _ = run_inline(cfg, iter(groups), prefetch=False)
+    out_pre, _ = run_inline(cfg, iter(groups), prefetch=True)
+    np.testing.assert_array_equal(np.asarray(out_sync), np.asarray(out_pre))
+    for depth in (1, 2, 3):
+        out_pipe, rep = run_pipelined(cfg, iter(groups), num_slots=depth)
+        np.testing.assert_array_equal(np.asarray(out_sync), np.asarray(out_pipe))
+        assert rep.drops == 0
+    # one-shot replay of the same stream
+    out_call = StreamingDenoiser(cfg)(jnp.asarray(np.stack(groups)))
+    np.testing.assert_array_equal(np.asarray(out_sync), np.asarray(out_call))
+
+
+@pytest.mark.parametrize("name", ALL_FILTERS)
+def test_filter_identical_under_banked_executor(name):
+    cfg = _cfg(filter_name=name, num_banks=1)
+    mesh = make_bank_mesh(1)
+    src = PrismSource(cfg, seed=5)
+    out, rep = run_pipelined_banked(cfg, src.bank_sources(1), mesh, num_slots=3)
+    ref, _ = run_inline(
+        _cfg(filter_name=name), iter(src.bank_source(0)), prefetch=False
+    )
+    np.testing.assert_allclose(
+        np.asarray(out[0]), np.asarray(ref), rtol=1e-6
+    )
+    assert rep.frames == cfg.num_groups * cfg.frames_per_group
+    assert rep.drops == 0
+
+
+@pytest.mark.parametrize("name", ALL_FILTERS)
+def test_filter_banked_chunks_match_per_bank_runs(name):
+    """(B, N, H, W) chunks through run_pipelined == per-bank single runs."""
+    cfg = _cfg(filter_name=name, num_banks=2)
+    chunks = [c.astype(np.float32)
+              for c in PrismSource(cfg, seed=5).banked_groups()]
+    out, _ = run_pipelined(cfg, iter(chunks), num_slots=2)
+    single = _cfg(filter_name=name)
+    per_bank = np.stack([
+        np.asarray(
+            StreamingDenoiser(single).run(
+                g.astype(np.float32)
+                for g in PrismSource(cfg, seed=5).bank_source(b)
+            )
+        )
+        for b in range(2)
+    ])
+    np.testing.assert_allclose(np.asarray(out), per_bank, rtol=1e-6)
+
+
+def test_filter_banked_multi_device():
+    """temporal_median across 2 host devices: sharded window state (slot
+    axis leading, banks on axis 1) folds identically to the host run."""
+    import os
+    import subprocess
+    import sys
+    import textwrap
+
+    code = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+        import numpy as np
+        from repro.core.banks import make_bank_mesh, run_pipelined_banked
+        from repro.core.denoise import DenoiseConfig, StreamingDenoiser
+        from repro.data.prism import PrismSource
+
+        cfg = DenoiseConfig(num_groups=3, frames_per_group=8, height=8,
+                            width=32, num_banks=2, backend="xla",
+                            filter_name="temporal_median", median_window=2)
+        src = PrismSource(cfg, seed=13)
+        mesh = make_bank_mesh(2)
+        out, rep = run_pipelined_banked(cfg, src.bank_sources(2), mesh,
+                                        num_slots=2)
+        single = DenoiseConfig(num_groups=3, frames_per_group=8, height=8,
+                               width=32, backend="xla",
+                               filter_name="temporal_median", median_window=2)
+        ref = np.stack([
+            np.asarray(StreamingDenoiser(single).run(
+                iter(PrismSource(cfg, seed=13).bank_source(b))))
+            for b in range(2)
+        ])
+        np.testing.assert_allclose(np.asarray(out), ref, rtol=1e-6)
+        assert rep.frames == 2 * 3 * 8
+        print("FILTER_BANKS_OK")
+    """)
+    res = subprocess.run(
+        [sys.executable, "-c", code], capture_output=True, text=True,
+        env=dict(os.environ), timeout=600,
+    )
+    assert "FILTER_BANKS_OK" in res.stdout, res.stderr[-2000:]
+
+
+# ---------------------------------------------------------------------------
+# Consumer partials and drop_oldest across filters.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", ALL_FILTERS)
+def test_consumer_last_partial_equals_final(name):
+    cfg = _cfg(filter_name=name)
+    groups = _groups(cfg, seed=7)
+    dl = DownloadConsumer()
+    out, _ = run_pipelined(cfg, iter(groups), num_slots=3, consumer=dl)
+    assert len(dl.partials) == cfg.num_groups
+    np.testing.assert_array_equal(np.asarray(out), dl.partials[-1])
+    assert dl.partials[0].shape == out.shape
+
+
+@pytest.mark.parametrize("name", ALL_FILTERS)
+def test_finalize_steps_matches_truncated_stream(name):
+    """finalize(steps=s) == running only the first s groups (the
+    drop_oldest survivor-normalization path, filter-generically)."""
+    cfg = _cfg(filter_name=name)
+    groups = _groups(cfg, seed=9)
+    den = StreamingDenoiser(cfg)
+    state = den.init()
+    for k, g in enumerate(groups[:3]):
+        state = den.ingest(state, jnp.asarray(g), step=k)
+    got = np.asarray(den.finalize(state, steps=3))
+    want = np.asarray(den.partial(state, 2))
+    np.testing.assert_array_equal(got, want)
+
+
+# ---------------------------------------------------------------------------
+# Config-level filter parameter validation.
+# ---------------------------------------------------------------------------
+
+
+def test_filter_param_validation():
+    with pytest.raises(ValueError, match="median_window"):
+        _cfg(filter_name="temporal_median", median_window=0)
+    with pytest.raises(ValueError, match="ema_alpha"):
+        _cfg(filter_name="ema_variance", ema_alpha=0.0)
+    with pytest.raises(ValueError, match="ema_mask_sigma"):
+        _cfg(filter_name="ema_variance", ema_mask_sigma=-1.0)
+    with pytest.raises(ValueError, match="spatial_mode"):
+        _cfg(filter_name="spatial_box", spatial_mode="gaussian")
+    with pytest.raises(ValueError, match="spatial_range_sigma"):
+        _cfg(filter_name="spatial_box", spatial_range_sigma=0.0)
+    for name in ("temporal_median", "ema_variance", "spatial_box"):
+        with pytest.raises(ValueError, match="accum_dtype"):
+            _cfg(filter_name=name, accum_dtype="uint16")
+    # the default filter still supports the paper's u16-container emulation
+    assert _cfg(accum_dtype="uint16").filter_name == "pair_average"

@@ -7,7 +7,6 @@ import numpy as np
 import pytest
 
 from repro.core.denoise import DenoiseConfig
-from repro.core.ringbuf import RingBuffer
 from repro.core.streaming import (
     DownloadConsumer,
     StreamReport,

@@ -1,0 +1,138 @@
+"""PrismSource noise regimes: the default must be byte-identical to the
+pre-regime generator (verified against a frozen copy of it), every regime
+must be deterministic and bank-consistent, and each defect model must
+behave as documented."""
+
+import numpy as np
+import pytest
+
+from repro.core.denoise import MONO12_MAX, DenoiseConfig
+from repro.data.prism import NOISE_REGIMES, PrismSource
+
+
+def _cfg(**kw):
+    base = dict(num_groups=3, frames_per_group=20, height=16, width=64)
+    base.update(kw)
+    return DenoiseConfig(**base)
+
+
+def _frozen_pre_regime_groups(src: PrismSource):
+    """Byte-exact copy of the generator as it was before noise regimes
+    existed (PR 1's vectorized form). Guards the default path: regime
+    machinery must draw no RNG and touch no frame when regime == none."""
+    c = src.config
+    rng = np.random.default_rng(src.seed)
+    y = np.linspace(0.0, 1.0, c.height)[:, None]
+    x = np.linspace(0.0, 1.0, c.width)[None, :]
+    checker = ((np.floor(y * 8) + np.floor(x * 16)) % 2).astype(np.float64)
+    pattern = 0.5 + 0.35 * checker + 0.15 * x
+    for _ in range(c.num_groups):
+        i = np.arange(c.frames_per_group, dtype=np.float32)
+        level = np.full(c.frames_per_group, src.baseline, np.float32)
+        if src.ambient_on:
+            level += src.ambient_level
+        phase = np.abs(np.sin(2 * np.pi * i / src.signal_period_frames))
+        level += np.where(
+            i % 2 == 1, src.signal_amplitude * phase, 0.0
+        ).astype(np.float32)
+        frames = level[:, None, None] * pattern.astype(np.float32)
+        frames += (
+            rng.standard_normal(frames.shape, np.float32) * src.shot_noise_std
+        )
+        yield np.clip(np.round(frames), 0, MONO12_MAX).astype(np.uint16)
+
+
+def test_default_regime_byte_identical_to_pre_regime_generator():
+    src = PrismSource(_cfg(), seed=11)
+    for got, want in zip(src.groups(), _frozen_pre_regime_groups(src)):
+        np.testing.assert_array_equal(got, want)
+
+
+def test_default_regime_is_none():
+    assert PrismSource(_cfg()).noise_regime == "none"
+
+
+@pytest.mark.parametrize("regime", NOISE_REGIMES)
+def test_regimes_deterministic(regime):
+    a = list(PrismSource(_cfg(), seed=4, noise_regime=regime).groups())
+    b = list(PrismSource(_cfg(), seed=4, noise_regime=regime).groups())
+    for ga, gb in zip(a, b):
+        np.testing.assert_array_equal(ga, gb)
+
+
+@pytest.mark.parametrize("regime", [r for r in NOISE_REGIMES if r != "none"])
+def test_regimes_change_frames(regime):
+    clean = list(PrismSource(_cfg(), seed=4).groups())
+    dirty = list(PrismSource(_cfg(), seed=4, noise_regime=regime).groups())
+    assert any((c != d).any() for c, d in zip(clean, dirty))
+
+
+@pytest.mark.parametrize("regime", NOISE_REGIMES)
+def test_bank_source_matches_banked_groups_slice_under_regime(regime):
+    cfg = _cfg(num_banks=2)
+    src = PrismSource(cfg, seed=6, noise_regime=regime)
+    stacked = list(src.banked_groups())
+    per_bank = [list(src.bank_source(b)) for b in range(2)]
+    for g in range(cfg.num_groups):
+        for b in range(2):
+            np.testing.assert_array_equal(stacked[g][b], per_bank[b][g])
+
+
+def test_hot_pixels_are_fixed_and_stuck():
+    src = PrismSource(_cfg(), seed=2, noise_regime="hot_pixels",
+                      hot_pixel_fraction=0.01)
+    groups = list(src.groups())
+    clean = list(PrismSource(_cfg(), seed=2).groups())
+    mask0 = groups[0][0] != clean[0][0]
+    assert 0 < mask0.sum() < mask0.size * 0.05
+    level = np.uint16(src.hot_pixel_level)
+    for g in groups:
+        # the same pixels, stuck at the same level, in every frame
+        assert (g[:, mask0] == level).all()
+    # banks have independent stuck sets
+    cfg2 = _cfg(num_banks=2)
+    src2 = PrismSource(cfg2, seed=2, noise_regime="hot_pixels",
+                       hot_pixel_fraction=0.01)
+    chunk = next(src2.banked_groups())
+    assert (chunk[0] != chunk[1]).any()
+
+
+def test_impulse_spikes_are_sparse_transients():
+    cfg = _cfg()
+    src = PrismSource(cfg, seed=3, noise_regime="impulse", impulse_rate=0.002)
+    clean = list(PrismSource(cfg, seed=3).groups())
+    dirty = list(src.groups())
+    changed = np.concatenate(
+        [(c != d).reshape(c.shape[0], -1) for c, d in zip(clean, dirty)]
+    )
+    rate = changed.mean()
+    assert 0.0005 < rate < 0.01  # sparse, near the configured rate
+    # spikes are transient: a pixel hit in one frame is clean in most others
+    per_pixel = changed.mean(axis=0)
+    assert per_pixel.max() < 0.5
+
+
+def test_drift_is_slow_and_frame_dependent():
+    cfg = _cfg(num_groups=2, frames_per_group=40)
+    clean = np.stack(list(PrismSource(cfg, seed=5).groups())).astype(np.int32)
+    drift = np.stack(
+        list(
+            PrismSource(
+                cfg, seed=5, noise_regime="drift",
+                drift_amplitude=200.0, drift_period_frames=160.0,
+            ).groups()
+        )
+    ).astype(np.int32)
+    delta = (drift - clean).mean(axis=(2, 3))  # (G, N) mean shift per frame
+    # monotone-ish rise over the first quarter period, and group 2 sits
+    # further along the sinusoid than group 1
+    assert delta[0, 0] < delta[0, -1]
+    assert abs(delta[1].mean()) > abs(delta[0].mean()) * 0.5
+    assert np.abs(np.diff(delta.reshape(-1))).max() < 20  # slow: small steps
+
+
+def test_true_signal_is_regime_independent():
+    cfg = _cfg()
+    a = PrismSource(cfg, seed=1).true_signal()
+    b = PrismSource(cfg, seed=1, noise_regime="impulse").true_signal()
+    np.testing.assert_array_equal(a, b)

@@ -2,7 +2,6 @@
 the exact continuation (the fault-tolerance contract on a real model)."""
 
 import numpy as np
-import pytest
 
 from repro.launch import train as T
 
