@@ -15,6 +15,7 @@ from __future__ import annotations
 import json
 import os
 import pathlib
+import tempfile
 import time
 
 import jax
@@ -47,6 +48,14 @@ def bench_record(name: str, **fields) -> None:
     Each point is ``{"name", "timestamp", **fields}``; speedup entries use
     ``baseline_s`` / ``candidate_s`` / ``speedup`` plus a ``config`` dict.
     The file is a flat JSON list, append-only across runs.
+
+    The append is crash- and concurrency-safe: the new list is written to
+    a temp file in the same directory and ``os.replace``\\ d over the
+    target (atomic on POSIX), so a benchmark process dying mid-write — or
+    two overlapping benchmark runs — can never leave a truncated/corrupt
+    file. Concurrent writers may still lose each other's *latest* point
+    (last replace wins; there is deliberately no cross-process lock), but
+    every reader always sees valid JSON.
     """
     path = pathlib.Path(os.environ.get("BENCH_DENOISE_PATH", _BENCH_PATH))
     records = []
@@ -58,7 +67,20 @@ def bench_record(name: str, **fields) -> None:
         if not isinstance(records, list):
             records = []
     records.append({"name": name, "timestamp": time.time(), **fields})
-    path.write_text(json.dumps(records, indent=2) + "\n")
+    fd, tmp = tempfile.mkstemp(
+        dir=path.parent, prefix=f".{path.name}.", suffix=".tmp"
+    )
+    try:
+        with os.fdopen(fd, "w") as f:
+            f.write(json.dumps(records, indent=2) + "\n")
+        os.replace(tmp, path)
+    except BaseException:
+        # never leave temp droppings next to the target on a failed write
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
+        raise
 
 
 def bench_config(quick: bool, **kw) -> DenoiseConfig:
@@ -78,22 +100,25 @@ def emit(name: str, us_per_call: float, derived: str = "") -> None:
     print(f"{name},{us_per_call:.1f},{derived}")
 
 
-_report_header_printed = False
+_report_headers_printed: set[str] = set()
 
 
 def emit_report(name: str, report: StreamReport) -> None:
-    """Print one full ``StreamReport`` CSV row (header once per process).
+    """Print one full report CSV row (header once per report class).
 
-    Carries every field ``StreamReport.row`` produces — elapsed/buffering/
+    Carries every field ``report.row`` produces — elapsed/buffering/
     compute plus transfer_s, stall_s, overlap_frac and the ring-pipeline
     stage breakdown — so executor benchmarks never lose the overlap data
-    to a truncated row again. Rows are prefixed ``report/`` to keep them
-    distinguishable from the 3-column ``emit`` rows in mixed output.
+    to a truncated row again. The header comes from ``type(report)``, so
+    subclasses with extra columns (``repro.serve.SessionReport``) emit
+    *their* header rather than desyncing rows against the base one.
+    Rows are prefixed ``report/`` to keep them distinguishable from the
+    3-column ``emit`` rows in mixed output.
     """
-    global _report_header_printed
-    if not _report_header_printed:
-        print(f"# {StreamReport.header()}")
-        _report_header_printed = True
+    cls = type(report)
+    if cls.__qualname__ not in _report_headers_printed:
+        print(f"# {cls.header()}")
+        _report_headers_printed.add(cls.__qualname__)
     print(f"report/{report.row(name)}")
 
 

@@ -1,5 +1,8 @@
 """Benchmark harness: one module per paper table. Prints
-``name,us_per_call,derived`` CSV. ``--full`` uses paper-scale N=1000."""
+``name,us_per_call,derived`` CSV. ``--full`` uses paper-scale N=1000;
+``--list`` prints the registry; an unknown ``--only`` raises a
+``ValueError`` listing the valid module names (the repo's
+dispatch-validation convention)."""
 
 from __future__ import annotations
 
@@ -7,6 +10,7 @@ import argparse
 import sys
 import time
 import traceback
+from typing import Sequence
 
 from benchmarks import (
     fig8_denoise_snr,
@@ -21,6 +25,7 @@ from benchmarks import (
     table8_buffered_vs_inline,
     table9_ring_depth,
     table10_filter_zoo,
+    table11_multitenant,
 )
 
 MODULES = [
@@ -34,21 +39,49 @@ MODULES = [
     ("table8-10", table8_buffered_vs_inline),
     ("table9", table9_ring_depth),
     ("table10-zoo", table10_filter_zoo),
+    ("table11-multitenant", table11_multitenant),
     ("fig8", fig8_denoise_snr),
     ("roofline", roofline_report),
 ]
 
 
-def main() -> None:
+def select(only: str | None) -> list:
+    """Modules whose registry name contains ``only`` (all when None).
+
+    Raises ``ValueError`` listing the valid names when nothing matches —
+    same contract as the ``ops``/filter dispatch errors, so a typo'd
+    ``--only`` fails loudly instead of silently running nothing.
+    """
+    if only is None:
+        return MODULES
+    picked = [(name, mod) for name, mod in MODULES if only in name]
+    if not picked:
+        names = tuple(name for name, _ in MODULES)
+        raise ValueError(
+            f"--only must match one of {names}, got {only!r}"
+        )
+    return picked
+
+
+def main(argv: Sequence[str] | None = None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true", help="paper-scale N=1000")
     ap.add_argument("--only", default=None)
-    args = ap.parse_args()
+    ap.add_argument(
+        "--list",
+        action="store_true",
+        help="print the registered module names and exit",
+    )
+    args = ap.parse_args(argv)
+    if args.list:
+        for name, mod in MODULES:
+            doc = (mod.__doc__ or "").strip()
+            print(name, "-", doc.splitlines()[0] if doc else "(no description)")
+        return
+    picked = select(args.only)
     print("name,us_per_call,derived")
     failures = 0
-    for name, mod in MODULES:
-        if args.only and args.only not in name:
-            continue
+    for name, mod in picked:
         t0 = time.time()
         try:
             mod.run(quick=not args.full)

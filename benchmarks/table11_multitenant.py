@@ -1,0 +1,227 @@
+"""Table 11 (framework extension): multi-tenant session scheduling.
+
+The deployments measured so far serve one stream per executor. This table
+measures what the ``repro.serve`` session service buys when many tenants
+share the device: sessions × scheduler (QoS) policy × filter mix, each
+session replaying pre-synthesized device-resident chunks through the
+table9 bursty-readout model (every ``BURST_EVERY``-th chunk's readout
+stalls ~``BURST_COMPUTE_MULT`` compute-intervals — camera readout the
+device must ride out).
+
+* **baseline** — today's deployment: the same sessions run back-to-back,
+  one ``run_pipelined`` each (every run still overlaps its own staging
+  with its own compute; the sequence just cannot overlap tenants).
+* **candidate** — one ``SessionScheduler`` hosting all sessions
+  concurrently: tenant readout stalls overlap each other, and compatible
+  sessions fold through ONE banked device step per group (stacked along
+  the filter state's bank/slot axis).
+
+Appended to ``BENCH_denoise.json`` as ``multitenant`` points: aggregate
+fps, speedup vs sequential (block cells), per-session p99 service
+latency, Jain fairness over per-session throughput, drop/deadline-miss
+accounting (real-time cells). Acceptance on this host: >= 1.5x aggregate
+throughput at 4 uniform block-mode sessions vs 4 sequential runs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import (
+    PAPER_H,
+    PAPER_W,
+    bench_config,
+    bench_record,
+    emit,
+    emit_report,
+)
+from benchmarks.table9_ring_depth import bursty
+from repro.core.streaming import run_pipelined
+from repro.data.prism import PrismSource
+from repro.serve import Session, SessionScheduler
+
+SESSION_COUNTS = (1, 2, 4)
+BURST_EVERY = 2      # every 2nd chunk pays a readout stall ...
+# ... of ~10 compute-intervals: readout-dominated tenants, the case a
+# shared scheduler exists for (sequential runs serialize the stalls;
+# co-scheduled sessions ride them out under each other's compute). Sized
+# so the per-session stream stays readout-bound even when 4 sessions
+# share this host's cores — smaller multiples turn the 4-session cell
+# compute-bound and measure XLA core contention instead of scheduling,
+# and leave the headline at the mercy of host-load drift.
+BURST_COMPUTE_MULT = 10.0
+RING_SLOTS = 3       # per-session staging depth (rides one burst)
+REPEATS = 2          # block cells: candidate/baseline round-robined and
+                     # pooled, so transient host load lands on both sides
+
+
+def _jain(xs: list[float]) -> float:
+    """Jain fairness index over per-session throughput: 1.0 = perfectly
+    even, 1/n = one session starved the rest. All-zero throughput is
+    degenerate evenness -> 1.0 (and must not divide by zero)."""
+    denom = len(xs) * sum(x * x for x in xs)
+    if not denom:
+        return 1.0
+    return (sum(xs) ** 2) / denom
+
+
+def _mix_configs(cfg, mix: str, n: int):
+    """Per-session configs for a cell. ``uniform`` co-batches everything
+    on one executor; ``mixed`` alternates filters, exercising the
+    stream_key split across the executor pool."""
+    if mix == "uniform":
+        return [cfg] * n
+    return [
+        cfg
+        if i % 2 == 0
+        else dataclasses.replace(cfg, filter_name="ema_variance")
+        for i in range(n)
+    ]
+
+
+def _measure_cell(configs, chunks, burst_s, policy, deadline_ms):
+    """One scheduler run hosting ``len(configs)`` sessions; returns
+    (wall_s, reports)."""
+    n = len(configs)
+    uniform = len({c.filter_name for c in configs}) == 1
+    sched = SessionScheduler(
+        slots_per_executor=n if uniform else max(2, (n + 1) // 2),
+        max_executors=1 if uniform else 2,
+        max_sessions=n,
+    )
+    try:
+        t0 = time.perf_counter()
+        handles = [
+            sched.submit(
+                Session(
+                    config=c,
+                    source=bursty(chunks, burst_s, every=BURST_EVERY),
+                    name=f"t{i}",
+                    mode=policy,
+                    deadline_ms=deadline_ms,
+                    num_slots=RING_SLOTS,
+                )
+            )
+            for i, c in enumerate(configs)
+        ]
+        reports = [h.result(timeout=600)[1] for h in handles]
+        wall = time.perf_counter() - t0
+    finally:
+        sched.shutdown()
+    return wall, reports
+
+
+def run(quick: bool = True) -> None:
+    cfg = bench_config(
+        quick,
+        num_groups=12,  # 6 bursts per replay: averages burst noise
+        frames_per_group=240 if quick else 600,
+        height=PAPER_H,
+        width=PAPER_W,
+    )
+    ema_cfg = dataclasses.replace(cfg, filter_name="ema_variance")
+    chunks = [jax.device_put(np.asarray(c)) for c in PrismSource(cfg).groups()]
+    jax.block_until_ready(chunks)
+
+    # warm every jit path the cells hit (single-bank step for both
+    # filters, plus the batched cohort shapes), then calibrate the burst
+    # against this host's current per-chunk compute, like table9
+    run_pipelined(cfg, iter(chunks[:2]), num_slots=1)
+    run_pipelined(ema_cfg, iter(chunks[:2]), num_slots=1)
+    for n in SESSION_COUNTS:
+        _measure_cell([cfg] * n, chunks[:3], 0.0, "block", None)
+    t0 = time.perf_counter()
+    run_pipelined(cfg, iter(chunks), num_slots=1)
+    per_chunk_s = (time.perf_counter() - t0) / len(chunks)
+    burst_s = max(BURST_COMPUTE_MULT * per_chunk_s, 0.004)
+
+    def sequential_baseline(configs):
+        t0 = time.perf_counter()
+        for c in configs:
+            run_pipelined(
+                c,
+                bursty(chunks, burst_s, every=BURST_EVERY),
+                num_slots=RING_SLOTS,
+                policy="block",
+            )
+        return time.perf_counter() - t0
+
+    cells = [("uniform", "block", n) for n in SESSION_COUNTS]
+    cells += [("uniform", "drop_oldest", max(SESSION_COUNTS))]
+    cells += [("mixed", "block", max(SESSION_COUNTS))]
+
+    for mix, policy, n in cells:
+        configs = _mix_configs(cfg, mix, n)
+        deadline_ms = (
+            max(1.0, burst_s * 1e3) if policy == "drop_oldest" else None
+        )
+        # round-robin candidate/baseline and pool sums (table9's recipe):
+        # back-to-back repeats hand transient host load to one side only.
+        # Latency/fairness/drop stats pool over EVERY repeat's reports —
+        # a spike must land in the same statistics as the wall time it
+        # inflated, or the point mixes pooled and single-repeat numbers.
+        tag = f"table11/{mix}/{policy}/n{n}"
+        wall = base_s = 0.0
+        frames_total = 0
+        pooled = []
+        for rep_i in range(REPEATS if policy == "block" else 1):
+            w, reports = _measure_cell(
+                configs, chunks, burst_s, policy, deadline_ms
+            )
+            wall += w
+            frames_total += sum(r.frames for r in reports)
+            pooled.extend(reports)
+            for r in reports:
+                emit_report(f"{tag}/r{rep_i}/{r.session}", r)
+            if policy == "block":
+                base_s += sequential_baseline(configs)
+        agg_fps = frames_total / wall
+        per_fps = [r.frames / max(r.elapsed_s, 1e-9) for r in pooled]
+        fairness = _jain(per_fps)
+        p99 = max(r.latency_p99_ms for r in pooled)
+        drops = sum(r.drops for r in pooled)
+        misses = sum(r.deadline_misses for r in pooled)
+
+        point = dict(
+            config={
+                "G": cfg.num_groups,
+                "N": cfg.frames_per_group,
+                "H": cfg.height,
+                "W": cfg.width,
+                "backend": cfg.backend,
+                "sessions": n,
+                "policy": policy,
+                "mix": mix,
+                "ring_slots": RING_SLOTS,
+                "burst_every": BURST_EVERY,
+                "burst_compute_mult": BURST_COMPUTE_MULT,
+            },
+            candidate=f"SessionScheduler, {n} concurrent sessions",
+            candidate_s=round(wall, 4),
+            aggregate_fps=round(agg_fps, 1),
+            session_p99_ms=round(p99, 3),
+            fairness=round(fairness, 3),
+            drops=drops,
+            deadline_misses=misses,
+        )
+        derived = (
+            f"agg_fps={agg_fps:.0f};p99_ms={p99:.1f};"
+            f"fairness={fairness:.2f};drops={drops}"
+        )
+        if policy == "block":
+            speedup = base_s / max(wall, 1e-9)
+            point.update(
+                baseline=(
+                    f"{n} sequential run_pipelined runs "
+                    f"(pooled over {REPEATS} repeats)"
+                ),
+                baseline_s=round(base_s, 4),
+                speedup=round(speedup, 3),
+            )
+            derived += f";speedup_vs_sequential={speedup:.2f}x"
+        emit(tag, wall * 1e6 / max(frames_total, 1), derived)
+        bench_record("multitenant", **point)

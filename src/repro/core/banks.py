@@ -43,7 +43,7 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.denoise import DenoiseConfig
-from repro.core.ringbuf import RingBuffer, RingClosed
+from repro.core.ringbuf import RingBuffer, RingClosed, nearest_rank_s
 from repro.core.streaming import StreamReport
 from repro.denoise import get_filter
 from repro.jax_compat import shard_map
@@ -145,13 +145,27 @@ def _chunk_spec():
     return P("bank", None, None, None)
 
 
-def banked_filter_init(config: DenoiseConfig, mesh: Mesh):
+def banked_filter_init(
+    config: DenoiseConfig, mesh: Mesh | None = None, *, banks: int | None = None
+):
     """Create the filter's banked state, each leaf laid out bank-sharded.
 
-    Returns ``(filter, state)``; the state's bank axis matches
-    ``mesh.shape["bank"]``.
+    Returns ``(filter, state)``. With a ``mesh``, the state's bank axis
+    matches ``mesh.shape["bank"]`` and every leaf is placed bank-sharded.
+    With ``mesh=None`` (the session-scheduler topology: many slots, one
+    shared device) ``banks`` sets the bank-axis length and the state stays
+    wherever JAX puts it — same pytree, no sharding.
     """
     filt = get_filter(config.filter_name)(config)
+    if mesh is None:
+        if banks is None:
+            raise ValueError("banked_filter_init needs a mesh or banks=")
+        return filt, filt.init(banks=banks)
+    if banks is not None and banks != mesh.shape["bank"]:
+        raise ValueError(
+            f"banks={banks} does not match mesh bank axis "
+            f"{mesh.shape['bank']}"
+        )
     state = filt.init(banks=mesh.shape["bank"])
     specs = filt.state_pspec(state)
     # PartitionSpec is tuple-like, so flatten the spec tree against the
@@ -168,15 +182,22 @@ def banked_filter_init(config: DenoiseConfig, mesh: Mesh):
 def banked_filter_step(
     state,
     group_frames,
-    mesh: Mesh,
+    mesh: Mesh | None = None,
     *,
     config: DenoiseConfig,
     step_index: int,
     filt=None,
 ):
     """One filter step, banks in parallel: state pytree and (B, N, H, W)
-    chunk both bank-sharded; returns the updated sharded state."""
+    chunk both bank-sharded; returns the updated sharded state.
+
+    With ``mesh=None`` the step runs the filter's banked path directly on
+    the current device (the batched session-scheduler step) — same
+    numerics, no ``shard_map``.
+    """
     filt = filt or get_filter(config.filter_name)(config)
+    if mesh is None:
+        return filt.step(state, group_frames, step_index=step_index)
     specs = filt.state_pspec(state)
 
     @functools.partial(
@@ -304,6 +325,7 @@ def run_pipelined_banked(
     jax.block_until_ready(out)
     elapsed = time.perf_counter() - t_start
     stats = [ring.stats for ring in rings]
+    dwell_all = [d for s in stats for d in s.dwell_samples]
     return out, StreamReport(
         elapsed_s=elapsed,
         buffering_s=0.0,
@@ -317,4 +339,9 @@ def run_pipelined_banked(
         drops=sum(s.drops for s in stats),
         ring_occupancy_mean=sum(s.occupancy_mean for s in stats) / banks,
         ring_occupancy_max=max(s.occupancy_max for s in stats),
+        # stage-queue latency pooled across the per-bank rings (each
+        # chunk's wait from staged to the gather barrier picking it up)
+        latency_p50_ms=nearest_rank_s(dwell_all, 50) * 1e3,
+        latency_p95_ms=nearest_rank_s(dwell_all, 95) * 1e3,
+        latency_p99_ms=nearest_rank_s(dwell_all, 99) * 1e3,
     )

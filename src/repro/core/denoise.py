@@ -81,6 +81,30 @@ class DenoiseConfig:
         # then lets the filter reject unusable parameter combinations
         get_filter(self.filter_name).validate(self)
 
+    # scheduling-only knobs: they shape wall-clock behaviour (ring depth,
+    # loss mode, device topology) but never the numeric stream, so the
+    # session scheduler must NOT split otherwise-identical sessions over
+    # them. num_banks is excluded because sessions are single-bank streams
+    # (the scheduler owns the bank axis as its slot axis).
+    _SCHEDULING_FIELDS = ("num_slots", "overflow_policy", "num_banks")
+
+    def stream_key(self) -> tuple:
+        """Hashable identity of the numeric stream this config defines.
+
+        Two configs with equal ``stream_key()`` run the same filter with
+        the same shapes and parameters, so their sessions can share one
+        batched device step (stacked along the bank/slot axis) in
+        ``repro.serve.SessionScheduler``. Scheduling-only fields
+        (``num_slots``, ``overflow_policy``, ``num_banks``) are excluded;
+        every other field — including ones added later — is part of the
+        key by default, so new knobs fail safe (no co-batching) rather
+        than silently mixing incompatible sessions.
+        """
+        d = dataclasses.asdict(self)
+        return tuple(
+            (k, d[k]) for k in sorted(d) if k not in self._SCHEDULING_FIELDS
+        )
+
     @property
     def pairs_per_group(self) -> int:
         return self.frames_per_group // 2

@@ -29,7 +29,18 @@ per-bank rings in ``repro.core.banks``):
   producer time blocked on a full ring (backpressure engaged),
   ``stats.get_wait_s`` consumer time blocked on an empty ring (starvation),
   ``stats.dwell_s`` total put→get slot residency, and the occupancy
-  counters sample queue depth at each ``put``.
+  counters sample queue depth at each ``put``. Per-item dwell times are
+  additionally kept in the bounded ``stats.dwell_samples`` (the newest
+  ``MAX_DWELL_SAMPLES`` items, round-robin) so per-stream latency
+  *percentiles* — the p50/p95/p99 columns of ``StreamReport`` and the
+  per-session QoS accounting in ``repro.serve`` — can be computed without
+  unbounded memory; ``stats.dwell_percentile_s(q)`` is the nearest-rank
+  helper (dependency-free, like the rest of this module).
+* **notify hook**: an optional zero-arg ``notify_hook`` callable fires
+  after every successful ``put`` and after ``close()`` — *outside* the
+  ring lock, so the hook may take other locks freely. The session
+  scheduler uses it to wake one executor multiplexing many rings without
+  polling; single-ring executors leave it unset.
 
 The ring stores whatever the producer puts — ``run_pipelined`` puts
 device-committed ``jax.Array`` chunks so that, like the paper's DRAM banks,
@@ -39,13 +50,24 @@ the slots hold data already resident where the kernel can read it.
 from __future__ import annotations
 
 import dataclasses
+import math
 import threading
 import time
-from typing import Any, Iterator
+from typing import Any, Callable, Iterator
 
-__all__ = ["RingBuffer", "RingStats", "RingClosed", "POLICIES"]
+__all__ = [
+    "RingBuffer",
+    "RingStats",
+    "RingClosed",
+    "POLICIES",
+    "MAX_DWELL_SAMPLES",
+    "nearest_rank_s",
+]
 
 POLICIES = ("block", "drop_oldest")
+
+#: bound on per-ring dwell-sample retention (oldest overwritten first)
+MAX_DWELL_SAMPLES = 4096
 
 
 class RingClosed(Exception):
@@ -64,6 +86,8 @@ class RingStats:
     dwell_s: float = 0.0     # total put->get residency of delivered items
     occupancy_sum: int = 0   # depth sampled just after each put ...
     occupancy_max: int = 0   # ... and its running maximum
+    #: per-item dwell times, newest MAX_DWELL_SAMPLES kept (round-robin)
+    dwell_samples: list[float] = dataclasses.field(default_factory=list)
 
     @property
     def occupancy_mean(self) -> float:
@@ -74,6 +98,25 @@ class RingStats:
     def dwell_mean_s(self) -> float:
         return self.dwell_s / self.gets if self.gets else 0.0
 
+    def dwell_percentile_s(self, q: float) -> float:
+        """Nearest-rank percentile of the retained dwell samples.
+
+        ``q`` in [0, 100]; 0.0 with no samples yet. Dependency-free (this
+        module deliberately imports neither numpy nor JAX), which is why
+        nearest-rank, not interpolation — ample for the p50/p95/p99
+        telemetry columns.
+        """
+        return nearest_rank_s(self.dwell_samples, q)
+
+
+def nearest_rank_s(samples: list[float], q: float) -> float:
+    """Nearest-rank percentile over raw (unsorted) seconds samples."""
+    if not samples:
+        return 0.0
+    ordered = sorted(samples)
+    rank = min(len(ordered), max(1, math.ceil(q / 100.0 * len(ordered))))
+    return ordered[rank - 1]
+
 
 class RingBuffer:
     """Bounded FIFO of ``num_slots`` slots with blocking backpressure.
@@ -82,7 +125,13 @@ class RingBuffer:
     one of each per ring). See the module docstring for the contract.
     """
 
-    def __init__(self, num_slots: int, *, policy: str = "block"):
+    def __init__(
+        self,
+        num_slots: int,
+        *,
+        policy: str = "block",
+        notify_hook: Callable[[], None] | None = None,
+    ):
         if num_slots < 1:
             raise ValueError(f"num_slots must be >= 1, got {num_slots}")
         if policy not in POLICIES:
@@ -94,6 +143,7 @@ class RingBuffer:
         self._policy = policy
         self._closed = False
         self._cond = threading.Condition()
+        self._notify_hook = notify_hook
         self.stats = RingStats()
 
     # -- introspection ------------------------------------------------------
@@ -163,6 +213,10 @@ class RingBuffer:
             self.stats.occupancy_sum += depth
             self.stats.occupancy_max = max(self.stats.occupancy_max, depth)
             self._cond.notify_all()
+        # outside the ring lock: the hook may take the caller's own lock
+        # (executor wake-up) without nesting against this ring's
+        if self._notify_hook is not None:
+            self._notify_hook()
 
     # -- consumer side ------------------------------------------------------
     def get(self, timeout: float | None = None) -> Any:
@@ -190,7 +244,12 @@ class RingBuffer:
             slot = self._head % n
             item = self._slots[slot]
             self._slots[slot] = None  # drop the reference: slot is free DRAM
-            self.stats.dwell_s += time.perf_counter() - self._t_put[slot]
+            dwell = time.perf_counter() - self._t_put[slot]
+            self.stats.dwell_s += dwell
+            if len(self.stats.dwell_samples) < MAX_DWELL_SAMPLES:
+                self.stats.dwell_samples.append(dwell)
+            else:  # overwrite oldest: gets counts delivered items so far
+                self.stats.dwell_samples[self.stats.gets % MAX_DWELL_SAMPLES] = dwell
             self._head += 1
             self.stats.gets += 1
             self._cond.notify_all()
@@ -205,6 +264,8 @@ class RingBuffer:
         with self._cond:
             self._closed = True
             self._cond.notify_all()
+        if self._notify_hook is not None:
+            self._notify_hook()
 
     def __iter__(self) -> Iterator[Any]:
         """Drain the ring until it is closed and empty."""

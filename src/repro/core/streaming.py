@@ -90,6 +90,14 @@ class StreamReport:
     drops: int = 0               # chunks lost to the drop_oldest policy
     ring_occupancy_mean: float = 0.0  # staged-chunk queue depth, mean ...
     ring_occupancy_max: int = 0       # ... and max (<= num_slots)
+    # -- per-group latency percentiles (nearest-rank, milliseconds) ---------
+    # run_pipelined fills them from the stage ring's dwell samples (time a
+    # staged chunk waited before the compute stage picked it up); the
+    # session service (repro.serve) fills them with full staged->step-done
+    # service latency per group. 0.0 where the executor does not track them.
+    latency_p50_ms: float = 0.0
+    latency_p95_ms: float = 0.0
+    latency_p99_ms: float = 0.0
 
     @property
     def overlap_s(self) -> float:
@@ -114,7 +122,8 @@ class StreamReport:
         return (
             "name,elapsed_s,buffering_s,compute_s,fps,mb_per_s,"
             "transfer_s,stall_s,overlap_frac,num_slots,produce_wait_s,"
-            "consume_wait_s,deliver_wait_s,drops,ring_occupancy_mean"
+            "consume_wait_s,deliver_wait_s,drops,ring_occupancy_mean,"
+            "latency_p50_ms,latency_p95_ms,latency_p99_ms"
         )
 
     def row(self, name: str) -> str:
@@ -126,7 +135,9 @@ class StreamReport:
             f"{self.overlap_frac:.3f},{self.num_slots},"
             f"{self.produce_wait_s:.4f},{self.consume_wait_s:.4f},"
             f"{self.deliver_wait_s:.4f},"
-            f"{self.drops},{self.ring_occupancy_mean:.2f}"
+            f"{self.drops},{self.ring_occupancy_mean:.2f},"
+            f"{self.latency_p50_ms:.3f},{self.latency_p95_ms:.3f},"
+            f"{self.latency_p99_ms:.3f}"
         )
 
 
@@ -332,6 +343,12 @@ def run_pipelined(
         drops=stage_ring.stats.drops,
         ring_occupancy_mean=stage_ring.stats.occupancy_mean,
         ring_occupancy_max=stage_ring.stats.occupancy_max,
+        # stage-queue latency: how long each staged chunk waited in the
+        # ring before ingest picked it up (compute dispatch is async here,
+        # so pickup — not completion — is the observable per-group latency)
+        latency_p50_ms=stage_ring.stats.dwell_percentile_s(50) * 1e3,
+        latency_p95_ms=stage_ring.stats.dwell_percentile_s(95) * 1e3,
+        latency_p99_ms=stage_ring.stats.dwell_percentile_s(99) * 1e3,
     )
 
 

@@ -31,6 +31,15 @@ Contract rules the executors rely on:
 * **Backend dispatch.** All device math goes through
   ``repro.kernels.ops`` (``config.backend`` selects pallas/xla/auto);
   filters never import kernel modules.
+* **Slot surgery.** A banked state is a *slot array*: the session
+  service (``repro.serve``) hosts one independent stream per bank slot
+  and joins/leaves streams mid-run. ``slot_insert`` / ``slot_extract`` /
+  ``slot_gather`` / ``slot_scatter`` move single-bank states in and out
+  of a banked state's bank axis (located per leaf via ``state_pspec``)
+  *without changing the banked state's shapes* — so the jitted banked
+  ``step`` never retraces on join/leave. ``phase_invariant`` declares
+  that ``step`` ignores ``step_index``, letting the scheduler co-batch
+  slots whose streams are at different group indices.
 """
 
 from __future__ import annotations
@@ -38,6 +47,7 @@ from __future__ import annotations
 from typing import Any, ClassVar
 
 import jax
+import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 __all__ = ["StreamingFilter"]
@@ -48,6 +58,14 @@ class StreamingFilter:
 
     #: registry key, set by ``@register_filter``
     name: ClassVar[str] = ""
+
+    #: True when ``step`` is independent of ``step_index`` (the update is
+    #: the same at every group). The session scheduler may then stack
+    #: slots whose streams sit at *different* group indices into one
+    #: banked step. Filters whose update depends on the index (window
+    #: slot rotation, prior sample counts) keep the default False and are
+    #: only co-batched with phase-aligned slots.
+    phase_invariant: ClassVar[bool] = False
 
     def __init__(self, config: Any):
         self.config = config
@@ -86,3 +104,66 @@ class StreamingFilter:
         return jax.tree.map(
             lambda leaf: P("bank", *([None] * (leaf.ndim - 1))), state
         )
+
+    # -- slot surgery (repro.serve session hosting) -------------------------
+    # All four default implementations locate each leaf's bank axis from
+    # ``state_pspec`` (the one place a filter already declares its banked
+    # layout), so filters get join/leave support for free. None of them
+    # changes the banked state's shapes: the jitted banked ``step`` keyed
+    # on those shapes never retraces across session churn.
+
+    def _flat_with_bank_axes(self, state):
+        """Flatten a banked state alongside each leaf's bank-axis index."""
+        specs = self.state_pspec(state)
+        leaves, treedef = jax.tree.flatten(state)
+        # specs must be flattened against the STATE's treedef:
+        # PartitionSpec is tuple-like and would flatten as a container
+        spec_leaves = treedef.flatten_up_to(specs)
+        axes = [tuple(spec).index("bank") for spec in spec_leaves]
+        return leaves, treedef, axes
+
+    def slot_extract(self, state, index: int):
+        """Read bank slot ``index`` out as a single-bank state.
+
+        Non-destructive (the banked state is unchanged); the copy can be
+        stepped/finalized exactly as an ``init()`` (bankless) state.
+        """
+        leaves, treedef, axes = self._flat_with_bank_axes(state)
+        return treedef.unflatten(
+            [jnp.take(leaf, index, axis=ax) for leaf, ax in zip(leaves, axes)]
+        )
+
+    def slot_insert(self, state, slot_state, index: int):
+        """Write a single-bank ``slot_state`` into bank slot ``index``.
+
+        Returns the updated banked state (same shapes — no retrace of the
+        banked ``step``). The mid-stream *join* hook: inserting a fresh
+        ``init()`` state starts a new stream in that slot; *evict* is
+        simply ``slot_extract`` plus forgetting the slot.
+        """
+        leaves, treedef, axes = self._flat_with_bank_axes(state)
+        slot_leaves = treedef.flatten_up_to(slot_state)
+        out = [
+            leaf.at[(slice(None),) * ax + (index,)].set(slot_leaf)
+            for leaf, slot_leaf, ax in zip(leaves, slot_leaves, axes)
+        ]
+        return treedef.unflatten(out)
+
+    def slot_gather(self, state, indices):
+        """Banked sub-state holding slots ``indices`` (in that order)."""
+        leaves, treedef, axes = self._flat_with_bank_axes(state)
+        idx = jnp.asarray(list(indices))
+        return treedef.unflatten(
+            [jnp.take(leaf, idx, axis=ax) for leaf, ax in zip(leaves, axes)]
+        )
+
+    def slot_scatter(self, state, sub_state, indices):
+        """Write a ``slot_gather``-shaped sub-state back into ``indices``."""
+        leaves, treedef, axes = self._flat_with_bank_axes(state)
+        sub_leaves = treedef.flatten_up_to(sub_state)
+        idx = jnp.asarray(list(indices))
+        out = [
+            leaf.at[(slice(None),) * ax + (idx,)].set(sub_leaf)
+            for leaf, sub_leaf, ax in zip(leaves, sub_leaves, axes)
+        ]
+        return treedef.unflatten(out)

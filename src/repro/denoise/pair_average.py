@@ -23,6 +23,11 @@ __all__ = ["PairAverageFilter"]
 class PairAverageFilter(StreamingFilter):
     """Running-sum subtract-and-average (paper Alg 3 / Alg 3 v2)."""
 
+    # the running-sum update is the same at every group index, so the
+    # session scheduler may co-batch slots at different stream phases
+    # (inherited by spatial_box, whose step IS this step)
+    phase_invariant = True
+
     def init(self, *, banks: int | None = None):
         c = self.config
         acc = jnp.dtype(c.accum_dtype)

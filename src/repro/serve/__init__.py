@@ -1,0 +1,30 @@
+"""Multi-tenant streaming session service.
+
+Schedules many concurrent PRISM streams over a shared pool of device
+executors: each :class:`Session` brings its own source, config/filter,
+staging ring and QoS class; the :class:`SessionScheduler` co-batches
+compatible sessions through one banked device step per group (stacking
+them along the filter state's bank axis), with admission control and
+per-session latency/drop telemetry (:class:`SessionReport`).
+
+A 1-session run is bit-identical to ``repro.core.streaming.run_pipelined``
+for every registered filter. Not to be confused with
+``repro.launch.serve`` — the LM inference server of the model substrate;
+this package serves imaging streams. See docs/ARCHITECTURE.md.
+"""
+
+from repro.serve.scheduler import SessionScheduler
+from repro.serve.session import (
+    AdmissionError,
+    Session,
+    SessionHandle,
+    SessionReport,
+)
+
+__all__ = [
+    "AdmissionError",
+    "Session",
+    "SessionHandle",
+    "SessionReport",
+    "SessionScheduler",
+]

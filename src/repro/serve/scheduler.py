@@ -1,0 +1,761 @@
+"""SessionScheduler: multiplex many PRISM sessions over shared executors.
+
+The executors in ``repro.core`` serve exactly one stream per call. This
+module turns them into a *service*: N tenants submit :class:`Session`\\ s
+and a shared pool of slot executors co-schedules them on the device.
+
+Topology (one ``_SlotExecutor`` shown; the scheduler pools several)::
+
+    tenant sources (one acquisition thread each)
+      s0 ──RingBuffer(block)───────┐
+      s1 ──RingBuffer(drop_oldest)─┤        batched banked filter state
+      s2 ──RingBuffer(block)───────┼──▶  ┌─────────────────────────────┐
+      s3 ──(slot vacant: join q)───┘     │ slot0 slot1 slot2 slot3     │
+                                         │  one filter state per slot  │
+             executor thread: gather ──▶ │  stacked along the bank axis│
+             ready chunks, one banked    └─────────────────────────────┘
+             ``filt.step`` per cohort            │ leave: slot_extract
+                                                 ▼        + finalize
+                                         (output, SessionReport)
+
+* **Slot hosting.** Each executor owns one *banked* filter state of
+  fixed ``capacity`` slots (``banks.banked_filter_init(config, mesh=None,
+  banks=capacity)``) — the same pytree the multi-device bank executor
+  shards, reused as a *session-slot array*. Joining inserts a fresh
+  single-bank ``init()`` state into a vacant slot
+  (``StreamingFilter.slot_insert``); leaving extracts the slot
+  (``slot_extract``) and finalizes it. Shapes never change, so the jitted
+  banked step **never retraces on join/leave**.
+* **Cohort stepping.** Each round the executor folds every slot with a
+  staged chunk: a lone ready slot takes the *single-bank* step path
+  (bit-identical to ``run_pipelined`` — this is why a 1-session run
+  equals the single-stream executor exactly, for every filter); several
+  ready slots are stacked along the bank axis into ONE device step
+  (``slot_gather`` → banked ``step`` → ``slot_scatter``, or stepped
+  in place when the whole capacity is ready). Phase-sensitive filters
+  (``phase_invariant = False``) are cohorted by group index; the
+  pair-average family batches slots at any phase. A bounded coalescing
+  window (``coalesce_ms``, default 5) lets co-pacing tenants form *full*
+  cohorts, which skip the gather/scatter entirely: the resident state
+  steps in place with donated buffers, and chunks land in a persistent
+  staging buffer via donated slice writes (``_write_slot``) instead of a
+  fresh ``jnp.stack`` per group.
+* **Compatibility.** Sessions share an executor iff their configs'
+  ``DenoiseConfig.stream_key()`` match (same filter, shapes, parameters —
+  scheduling-only fields excluded). Unlike keys get their own executor
+  from the pool.
+* **Admission control.** ``max_sessions`` caps in-flight sessions
+  (queued + active); a matching executor whose join queue is already
+  ``max_waiting`` deep rejects too. Both raise :class:`AdmissionError`.
+* **QoS.** Per session: ``block`` (lossless backpressure) vs
+  ``drop_oldest`` (real-time, freshest window, drops counted) staging
+  rings, plus a soft ``deadline_ms`` per group (misses counted in the
+  report). Per-group service latency (staged → step done) feeds the
+  p50/p95/p99 columns of :class:`SessionReport`.
+* **Multi-device.** Pass a ``bank`` mesh and each executor's slot array
+  is laid out bank-sharded via ``shard_map`` (one session per device
+  slot). Mesh executors gang-schedule: a step waits until every occupied
+  slot has a chunk (the per-group gather barrier of
+  ``run_pipelined_banked``); vacant slots ride along on a dummy chunk and
+  are re-initialized at join.
+
+``launch/serve.py`` is unrelated: that is the LM inference server of the
+model-substrate side of this repo; this module serves *imaging streams*.
+"""
+
+from __future__ import annotations
+
+import collections
+import functools
+import threading
+import time
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core.banks import banked_filter_init, banked_filter_step
+from repro.core.denoise import DenoiseConfig
+from repro.core.ringbuf import (
+    MAX_DWELL_SAMPLES,
+    RingBuffer,
+    RingClosed,
+    nearest_rank_s,
+)
+from repro.serve.session import (
+    AdmissionError,
+    Session,
+    SessionHandle,
+    SessionReport,
+)
+
+__all__ = ["SessionScheduler"]
+
+
+@functools.partial(jax.jit, donate_argnums=(0,), static_argnames=("slot", "axis"))
+def _write_slot(buf, val, slot: int, axis: int = 0):
+    """Donated single-slot write: ``buf[..., slot, ...] = val`` in place.
+
+    The executor's hot path. The eager ``at[].set`` the generic
+    ``slot_insert`` hook uses copies the whole slot array per write; with
+    the array donated, XLA updates just the slice — the difference between
+    O(slot) and O(capacity) bytes per staged chunk, which dominates the
+    cohort cost on a bandwidth-poor host.
+    """
+    return jax.lax.dynamic_update_index_in_dim(buf, val, slot, axis)
+
+
+class _Active:
+    """One submitted session's scheduler-side bookkeeping."""
+
+    def __init__(self, handle: SessionHandle, seq: int, notify_hook):
+        self.handle = handle
+        self.session = handle.session
+        self.seq = seq
+        self.ring = RingBuffer(
+            self.session.ring_slots,
+            policy=self.session.qos_mode,
+            notify_hook=notify_hook,
+        )
+        self.slot: int | None = None
+        self.steps = 0           # groups folded so far (this session's phase)
+        self.frames = 0
+        self.transfer_s = 0.0
+        self.compute_s = 0.0     # share of batched step time
+        # per-group service latency samples (staged -> step done), bounded
+        # like the ring's dwell samples so endless streams stay O(1)
+        self.latencies: list[float] = []
+        self._lat_next = 0
+        self.deadline_misses = 0
+        self.discarded = 0       # staged chunks dropped by leave()
+        self.error: BaseException | None = None
+        self.t_submit = time.perf_counter()
+        self.t_joined: float | None = None
+        self.producer = threading.Thread(
+            target=self._produce,
+            name=f"serve-src-{self.name}",
+            daemon=True,
+        )
+
+    @property
+    def name(self) -> str:
+        return self.session.name or f"s{self.seq}"
+
+    def _produce(self) -> None:
+        """Acquisition thread: pull + land chunks on device, stage them.
+
+        Runs from submit time — a queued session prefills its ring while
+        waiting for a slot (under its own overflow policy, so a queued
+        real-time session sheds stale groups exactly like a running one).
+        """
+        src = self.session.chunks()
+        try:
+            while True:
+                t0 = time.perf_counter()
+                try:
+                    chunk = next(src)
+                except StopIteration:
+                    break
+                dev = jax.device_put(jnp.asarray(chunk))
+                jax.block_until_ready(dev)
+                # staged-time bookkeeping lives in the ring itself (its
+                # per-slot put timestamps are taken post-backpressure), so
+                # the item carries only the transfer cost
+                self.ring.put((dev, time.perf_counter() - t0))
+        except RingClosed:
+            pass  # executor detached us (leave/shutdown/error)
+        except BaseException as e:  # source failure -> fail the session
+            self.error = e
+        finally:
+            self.ring.close()
+
+    def record_latency(self, lat: float) -> None:
+        if len(self.latencies) < MAX_DWELL_SAMPLES:
+            self.latencies.append(lat)
+        else:  # overwrite oldest round-robin
+            self.latencies[self._lat_next % MAX_DWELL_SAMPLES] = lat
+        self._lat_next += 1
+
+    def finished_stream(self) -> bool:
+        return self.ring.closed and len(self.ring) == 0
+
+
+class _SlotExecutor:
+    """One batched filter state of ``capacity`` slots + its step thread."""
+
+    def __init__(
+        self, key, config: DenoiseConfig, capacity, mesh, name, on_done,
+        coalesce_s: float = 0.005,
+    ):
+        self.key = key
+        self.config = config
+        self.capacity = capacity
+        self.mesh = mesh
+        self.name = name
+        self.coalesce_s = coalesce_s
+        self.on_done = on_done  # scheduler callback, called lock-free
+        self.filt, self.state = banked_filter_init(config, mesh, banks=capacity)
+        self._chunk_buf = None  # persistent staging buffer, filled in place
+        self.slots: list[_Active | None] = [None] * capacity
+        self.pending: collections.deque[_Active] = collections.deque()
+        self.cond = threading.Condition()
+        self.failed: BaseException | None = None
+        self._shutdown = False
+        self._abort = False
+        self.cohort_steps = 0  # device steps issued (cohorts, not groups)
+        self.thread = threading.Thread(
+            target=self._loop, name=f"serve-{name}", daemon=True
+        )
+        self.thread.start()
+
+    @property
+    def alive(self) -> bool:
+        return self.failed is None and not self._shutdown
+
+    def notify(self) -> None:
+        with self.cond:
+            self.cond.notify_all()
+
+    # -- scheduler side ------------------------------------------------------
+    def enqueue(self, act: _Active) -> None:
+        with self.cond:
+            self.pending.append(act)
+            self.cond.notify_all()
+
+    def has_room(self) -> bool:
+        """A vacant slot not already promised to a queued session."""
+        with self.cond:
+            free = sum(a is None for a in self.slots)
+            return len(self.pending) < free
+
+    def queue_depth(self) -> int:
+        """Sessions that cannot be seated even once the executor catches
+        up on joins — the depth admission control limits. Queued sessions
+        that a vacant slot is already waiting for don't count (otherwise
+        admission would depend on executor-thread timing)."""
+        with self.cond:
+            free = sum(a is None for a in self.slots)
+            return max(0, len(self.pending) - free)
+
+    def session_count(self) -> int:
+        with self.cond:
+            return len(self.pending) + sum(a is not None for a in self.slots)
+
+    def stop(self, abort: bool = False) -> None:
+        with self.cond:
+            self._shutdown = True
+            self._abort = self._abort or abort
+            self.cond.notify_all()
+
+    # -- executor thread -----------------------------------------------------
+    def _wake_needed(self) -> bool:
+        if self._shutdown or self.pending:
+            return True
+        return any(
+            a is not None
+            and (
+                len(a.ring) > 0
+                or a.finished_stream()
+                or a.handle._leave.is_set()
+                or a.error is not None
+            )
+            for a in self.slots
+        )
+
+    def _loop(self) -> None:
+        while True:
+            with self.cond:
+                # hooks (ring put/close, enqueue, leave) wake us; the
+                # timeout is a safety net against a lost edge, not a poll
+                self.cond.wait_for(self._wake_needed, timeout=0.05)
+                if self._abort:
+                    break
+                if self._shutdown and not self.pending and not any(self.slots):
+                    break
+            try:
+                self._admit()
+                self._retire()
+                self._step_ready()
+            except BaseException as e:
+                self.failed = e
+                break
+        self._drain_failed()
+
+    def _drain_failed(self) -> None:
+        """Terminal cleanup: fail whatever is still attached."""
+        err = self.failed or RuntimeError(f"executor {self.name} shut down")
+        done = []
+        with self.cond:
+            for idx, act in enumerate(self.slots):
+                if act is not None:
+                    self.slots[idx] = None
+                    done.append(act)
+            while self.pending:
+                done.append(self.pending.popleft())
+        for act in done:
+            act.ring.close()
+            act.handle._fail(act.error or err)
+            self.on_done(act)
+
+    def _can_join(self) -> bool:
+        """Mesh executors gang-schedule, so a phase-sensitive filter can
+        only accept a (phase-0) newcomer while every occupied slot is
+        still at phase 0; single-device executors cohort by phase and
+        accept joins at any group boundary."""
+        if self.mesh is None or self.filt.phase_invariant:
+            return True
+        return all(a is None or a.steps == 0 for a in self.slots)
+
+    def _admit(self) -> None:
+        joins = []
+        with self.cond:
+            while self.pending and None in self.slots and self._can_join():
+                act = self.pending.popleft()
+                idx = self.slots.index(None)
+                act.slot = idx
+                self.slots[idx] = act
+                joins.append((idx, act))
+        for idx, act in joins:
+            # fresh single-bank state into the vacant slot: same banked
+            # shapes, so the batched step is NOT retraced by the join
+            self.state = self._insert_slot(self.state, self.filt.init(), idx)
+            act.t_joined = time.perf_counter()
+            act.handle.status = "active"
+
+    def _insert_slot(self, state, slot_state, index: int):
+        """Donating variant of ``StreamingFilter.slot_insert``: the
+        executor owns ``state`` exclusively, so each leaf can be updated
+        in place instead of copied (see ``_write_slot``). Mesh-sharded
+        states keep the generic copying hook — donation across shardings
+        is not worth the special-casing on the gang path."""
+        if self.mesh is not None:
+            return self.filt.slot_insert(state, slot_state, index)
+        leaves, treedef, axes = self.filt._flat_with_bank_axes(state)
+        slot_leaves = treedef.flatten_up_to(slot_state)
+        return treedef.unflatten(
+            [
+                _write_slot(leaf, sl, slot=index, axis=ax)
+                for leaf, sl, ax in zip(leaves, slot_leaves, axes)
+            ]
+        )
+
+    def _retire(self) -> None:
+        for idx, act in enumerate(self.slots):
+            if act is None:
+                continue
+            if act.error is not None:
+                act.ring.close()
+                with self.cond:
+                    self.slots[idx] = None
+                act.handle._fail(act.error)
+                self.on_done(act)
+                continue
+            leaving = act.handle._leave.is_set()
+            if leaving and not act.finished_stream():
+                act.ring.close()
+                while len(act.ring):  # staged but never folded -> drops
+                    try:
+                        act.ring.get(timeout=0)
+                    except (RingClosed, TimeoutError):
+                        break
+                    act.discarded += 1
+            if not act.finished_stream():
+                continue
+            sub = self.filt.slot_extract(self.state, idx)
+            if (act.session.qos_mode == "drop_oldest" or leaving) and act.steps:
+                # average only the surviving groups — mirrors
+                # run_pipelined's drop_oldest finalize exactly
+                out = self.filt.finalize(sub, steps=act.steps)
+            else:
+                out = self.filt.finalize(sub)
+            jax.block_until_ready(out)
+            report = self._report(act)
+            with self.cond:
+                self.slots[idx] = None
+            act.handle._finish(out, report)
+            self.on_done(act)
+
+    def _steppable(self) -> list[tuple[int, _Active]]:
+        """Slots that can still produce work: occupied, healthy, not
+        leaving, and their stream not yet exhausted."""
+        return [
+            (i, a)
+            for i, a in enumerate(self.slots)
+            if a is not None
+            and a.error is None
+            and not a.handle._leave.is_set()
+            and not a.finished_stream()
+        ]
+
+    def _ready(self, active):
+        return [(i, a) for i, a in active if len(a.ring) > 0]
+
+    def _coalesce(self, active, ready):
+        """Briefly wait for straggler slots before stepping a partial
+        cohort. A full cohort steps the resident state in place (donated
+        buffers, no copies); a partial cohort pays a gather + scatter of
+        the whole slot array — worth a few ms of batching window when the
+        co-tenants are pacing together. Bounded: after ``coalesce_s`` the
+        partial cohort goes ahead, so one stalled tenant can only add the
+        window, never block the others."""
+        if len(ready) == len(active) or self.coalesce_s <= 0:
+            return ready
+        deadline = time.perf_counter() + self.coalesce_s
+        with self.cond:
+            while True:
+                left = deadline - time.perf_counter()
+                active = self._steppable()  # a stream may end mid-window
+                ready = self._ready(active)
+                if len(ready) == len(active) or left <= 0 or self._shutdown:
+                    return ready
+                self.cond.wait(left)
+
+    def _step_ready(self) -> None:
+        active = self._steppable()
+        ready = self._ready(active)
+        if not ready:
+            return
+        if self.mesh is not None:
+            # gang scheduling: the sharded step needs every occupied slot
+            # (the per-group gather barrier of run_pipelined_banked)
+            if len(ready) != len(active):
+                return
+            self._fold_cohort(ready, gang=True)
+            return
+        ready = self._coalesce(active, ready)
+        if not ready:
+            return
+        if self.filt.phase_invariant:
+            self._fold_cohort(ready)
+            return
+        cohorts: dict[int, list[tuple[int, _Active]]] = {}
+        for i, a in ready:
+            cohorts.setdefault(a.steps, []).append((i, a))
+        for phase in sorted(cohorts):
+            self._fold_cohort(cohorts[phase])
+
+    def _stage_chunks(self, idxs, items):
+        """Assemble a full cohort's (capacity, N, H, W) chunk batch.
+
+        ``jnp.stack`` re-materializes the whole batch every group; the
+        persistent ``_chunk_buf`` instead takes one donated slice write
+        per chunk (O(chunk) bytes each). Falls back to a plain stack if
+        the sessions' chunk dtypes/shapes disagree (possible: chunk dtype
+        comes from the source, not the config)."""
+        first = items[0][0]
+        if any(
+            it[0].dtype != first.dtype or it[0].shape != first.shape
+            for it in items[1:]
+        ):
+            return jnp.stack([it[0] for it in items])
+        buf = self._chunk_buf
+        self._chunk_buf = None  # sole reference: safe to donate
+        shape = (self.capacity,) + first.shape
+        if buf is None or buf.dtype != first.dtype or buf.shape != shape:
+            buf = jnp.zeros(shape, first.dtype)
+        for i, (dev, _, _) in zip(idxs, items):
+            buf = _write_slot(buf, dev, slot=i, axis=0)
+        self._chunk_buf = buf
+        return buf
+
+    def _fold_cohort(self, group: Sequence[tuple[int, _Active]], gang=False) -> None:
+        """One device step folding one staged chunk per cohort member."""
+        items = []  # (dev, transfer_dt, dwell_s): len>0 held, never blocks
+        for _, a in group:
+            dwell0 = a.ring.stats.dwell_s
+            dev, dt = a.ring.get()
+            # this item's staged->pickup wait, from the ring's own put
+            # timestamp (taken post-backpressure, i.e. actual insertion) —
+            # exact because this thread is the ring's only consumer
+            items.append((dev, dt, a.ring.stats.dwell_s - dwell0))
+        t_fetch = time.perf_counter()
+        idxs = [i for i, _ in group]
+        phase = group[0][1].steps
+        if not self.filt.phase_invariant and any(
+            a.steps != phase for _, a in group
+        ):
+            raise RuntimeError("phase-mixed cohort for a phase-sensitive filter")
+        t0 = time.perf_counter()
+        if len(group) == 1 and not gang:
+            # lone slot: the SINGLE-BANK step path — a 1-session scheduler
+            # run makes exactly the calls run_pipelined makes, which is
+            # what keeps it bit-identical for every filter
+            i = idxs[0]
+            sub = self.filt.slot_extract(self.state, i)
+            new = self.filt.step(sub, items[0][0], step_index=phase)
+            self.state = self._insert_slot(self.state, new, i)
+        elif gang:
+            # full-capacity sharded step; vacant slots ride along on a
+            # dummy chunk (their junk state is re-initialized at join)
+            by_slot = dict(zip(idxs, items))
+            dummy = items[0][0]
+            stacked = jnp.stack(
+                [by_slot[i][0] if i in by_slot else dummy for i in range(self.capacity)]
+            )
+            if self.mesh is not None:
+                stacked = jax.device_put(
+                    stacked, NamedSharding(self.mesh, P("bank", None, None, None))
+                )
+            self.state = banked_filter_step(
+                self.state,
+                stacked,
+                self.mesh,
+                config=self.config,
+                step_index=phase,
+                filt=self.filt,
+            )
+        elif len(group) == self.capacity:
+            # whole slot array ready: fill the persistent staging buffer
+            # with donated slice writes and step the resident state in
+            # place — zero whole-array copies on the full-cohort fast path
+            self.state = banked_filter_step(
+                self.state,
+                self._stage_chunks(idxs, items),
+                None,
+                config=self.config,
+                step_index=phase,
+                filt=self.filt,
+            )
+        else:
+            sub = self.filt.slot_gather(self.state, idxs)
+            stacked = jnp.stack([it[0] for it in items])
+            new = self.filt.step(sub, stacked, step_index=phase)
+            self.state = self.filt.slot_scatter(self.state, new, idxs)
+        # block per cohort: per-group service latency must be the time the
+        # result actually exists, not async-dispatch time
+        jax.block_until_ready(self.state)
+        t_done = time.perf_counter()
+        share = (t_done - t0) / len(group)
+        self.cohort_steps += 1
+        for (i, act), (dev, dt, dwell) in zip(group, items):
+            act.steps += 1
+            act.frames += int(np.prod(dev.shape[:-2]))
+            act.transfer_s += dt
+            act.compute_s += share
+            # service latency: in-ring wait (from actual insertion) plus
+            # this cohort's fetch-to-step-done span
+            lat = dwell + (t_done - t_fetch)
+            act.record_latency(lat)
+            d = act.session.deadline_ms
+            if d is not None and lat * 1e3 > d:
+                act.deadline_misses += 1
+            if act.session.consumer is not None:
+                try:
+                    partial = self.filt.partial(
+                        self.filt.slot_extract(self.state, i),
+                        step_index=act.steps - 1,
+                    )
+                    act.session.consumer(act.steps - 1, partial)
+                except BaseException as e:  # consumer failure fails the session
+                    act.error = e
+
+    def _report(self, act: _Active) -> SessionReport:
+        now = time.perf_counter()
+        s = act.ring.stats
+        c = act.session.config
+        lat = act.latencies
+        return SessionReport(
+            elapsed_s=now - (act.t_joined or now),
+            buffering_s=0.0,
+            compute_s=act.compute_s,
+            frames=act.frames,
+            bytes_in=act.frames * c.frame_pixels * 2,
+            transfer_s=act.transfer_s,
+            stall_s=s.get_wait_s,
+            num_slots=act.session.ring_slots,
+            produce_wait_s=s.put_wait_s,
+            drops=s.drops + act.discarded,
+            ring_occupancy_mean=s.occupancy_mean,
+            ring_occupancy_max=s.occupancy_max,
+            latency_p50_ms=nearest_rank_s(lat, 50) * 1e3,
+            latency_p95_ms=nearest_rank_s(lat, 95) * 1e3,
+            latency_p99_ms=nearest_rank_s(lat, 99) * 1e3,
+            session=act.name,
+            mode=act.session.qos_mode,
+            deadline_ms=act.session.deadline_ms or 0.0,
+            deadline_misses=act.deadline_misses,
+            queue_wait_s=(act.t_joined - act.t_submit) if act.t_joined else 0.0,
+            groups=act.steps,
+        )
+
+
+class SessionScheduler:
+    """Admission control + executor pool for concurrent PRISM sessions.
+
+    See the module docstring for the architecture. Typical use::
+
+        with SessionScheduler(slots_per_executor=4) as sched:
+            handles = [sched.submit(Session(cfg, src)) for src in sources]
+            results = [h.result(timeout=300) for h in handles]
+
+    ``slots_per_executor`` is each executor's fixed slot capacity (with a
+    ``mesh`` it is pinned to the mesh's bank axis), ``max_executors`` the
+    pool size, ``max_sessions``/``max_waiting`` the admission limits, and
+    ``coalesce_ms`` the bounded wait for straggler slots before a partial
+    cohort steps (0 disables batching windows entirely).
+    """
+
+    def __init__(
+        self,
+        *,
+        slots_per_executor: int | None = None,
+        max_executors: int = 2,
+        max_sessions: int | None = None,
+        max_waiting: int = 4,
+        mesh=None,
+        coalesce_ms: float = 5.0,
+    ):
+        if mesh is not None:
+            banks = mesh.shape["bank"]
+            if slots_per_executor is not None and slots_per_executor != banks:
+                raise ValueError(
+                    f"slots_per_executor={slots_per_executor} conflicts with "
+                    f"the mesh bank axis ({banks}); omit it when passing a mesh"
+                )
+            slots_per_executor = banks
+        elif slots_per_executor is None:
+            slots_per_executor = 2
+        if slots_per_executor < 1:
+            raise ValueError(
+                f"slots_per_executor must be >= 1, got {slots_per_executor}"
+            )
+        if max_executors < 1:
+            raise ValueError(f"max_executors must be >= 1, got {max_executors}")
+        if max_waiting < 0:
+            raise ValueError(f"max_waiting must be >= 0, got {max_waiting}")
+        if coalesce_ms < 0:
+            raise ValueError(f"coalesce_ms must be >= 0, got {coalesce_ms}")
+        self.coalesce_ms = coalesce_ms
+        self.slots_per_executor = slots_per_executor
+        self.max_executors = max_executors
+        self.max_waiting = max_waiting
+        self.max_sessions = (
+            max_sessions
+            if max_sessions is not None
+            else slots_per_executor * max_executors + max_waiting
+        )
+        if self.max_sessions < 1:
+            raise ValueError(f"max_sessions must be >= 1, got {self.max_sessions}")
+        self.mesh = mesh
+        self._executors: list[_SlotExecutor] = []
+        self._lock = threading.Condition()
+        self._inflight = 0
+        self._completed = 0
+        self._seq = 0
+        self._closed = False
+
+    # -- public API ----------------------------------------------------------
+    def submit(self, session: Session) -> SessionHandle:
+        """Admit a session (or raise :class:`AdmissionError`) and start
+        its acquisition immediately; returns the future-like handle."""
+        handle = SessionHandle(session)
+        key = session.config.stream_key()
+        with self._lock:
+            if self._closed:
+                raise RuntimeError("scheduler is shut down")
+            if self._inflight >= self.max_sessions:
+                raise AdmissionError(
+                    f"{self._inflight} sessions in flight >= "
+                    f"max_sessions={self.max_sessions}"
+                )
+            ex = self._place(key, session.config)
+            # enqueue under the scheduler lock: placement decided against
+            # pending counts that a concurrent submit cannot invalidate
+            # (the executor thread only ever *drains* pending, which moves
+            # admission in the permissive direction)
+            act = _Active(handle, self._seq, notify_hook=ex.notify)
+            handle._leave_hook = ex.notify
+            self._seq += 1
+            self._inflight += 1
+            ex.enqueue(act)
+        act.producer.start()
+        return handle
+
+    def stats(self) -> dict:
+        """Live telemetry snapshot (sessions in flight, per-executor load)."""
+        with self._lock:
+            executors = list(self._executors)
+            snap = {
+                "in_flight": self._inflight,
+                "completed": self._completed,
+                "max_sessions": self.max_sessions,
+            }
+        snap["executors"] = [
+            {
+                "name": ex.name,
+                "filter": ex.config.filter_name,
+                "capacity": ex.capacity,
+                "sessions": ex.session_count(),
+                "waiting": ex.queue_depth(),
+                "cohort_steps": ex.cohort_steps,
+                "alive": ex.alive,
+            }
+            for ex in executors
+        ]
+        return snap
+
+    def shutdown(self, wait: bool = True, timeout: float | None = None) -> None:
+        """Stop the service. ``wait=True`` drains every in-flight session
+        first; ``wait=False`` aborts them (their handles fail)."""
+        with self._lock:
+            self._closed = True
+            if wait:
+                if not self._lock.wait_for(
+                    lambda: self._inflight == 0, timeout
+                ):
+                    raise TimeoutError(
+                        f"{self._inflight} sessions still in flight after "
+                        f"{timeout}s"
+                    )
+            executors = list(self._executors)
+        for ex in executors:
+            ex.stop(abort=not wait)
+        for ex in executors:
+            ex.thread.join(timeout=60)
+
+    def __enter__(self) -> "SessionScheduler":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        self.shutdown(wait=exc_type is None)
+
+    # -- placement (under self._lock) ----------------------------------------
+    def _place(self, key, config: DenoiseConfig) -> _SlotExecutor:
+        alive = [ex for ex in self._executors if ex.alive]
+        matching = [ex for ex in alive if ex.key == key]
+        for ex in matching:
+            if ex.has_room():
+                return ex
+        if len(alive) < self.max_executors:
+            ex = _SlotExecutor(
+                key,
+                config,
+                capacity=self.slots_per_executor,
+                mesh=self.mesh,
+                name=f"ex{len(self._executors)}",
+                on_done=self._session_done,
+                coalesce_s=self.coalesce_ms * 1e-3,
+            )
+            self._executors.append(ex)
+            return ex
+        if not matching:
+            raise AdmissionError(
+                f"executor pool is full ({len(alive)}/{self.max_executors}) "
+                "and none matches this session's stream_key"
+            )
+        ex = min(matching, key=lambda e: e.queue_depth())
+        depth = ex.queue_depth()
+        if depth >= self.max_waiting:
+            raise AdmissionError(
+                f"join queue depth {depth} >= max_waiting={self.max_waiting} "
+                f"on executor {ex.name}"
+            )
+        return ex
+
+    def _session_done(self, act: _Active) -> None:
+        with self._lock:
+            self._inflight -= 1
+            self._completed += 1
+            self._lock.notify_all()

@@ -1,0 +1,116 @@
+"""Benchmark harness satellites: ``--list`` / ``--only`` validation in
+``benchmarks.run`` and the crash/concurrency-safe ``bench_record``."""
+
+import json
+import threading
+
+import pytest
+
+from benchmarks import common, run as bench_run
+
+
+# ---------------------------------------------------------------------------
+# benchmarks.run registry + flags.
+# ---------------------------------------------------------------------------
+
+
+def test_list_prints_every_module(capsys):
+    bench_run.main(["--list"])
+    out = capsys.readouterr().out
+    for name, _ in bench_run.MODULES:
+        assert name in out
+    assert "table11-multitenant" in out
+    # --list must not start the CSV stream (it exits before running)
+    assert "us_per_call" not in out
+
+
+def test_unknown_only_raises_listing_names():
+    with pytest.raises(ValueError) as exc:
+        bench_run.select("tableXX")
+    msg = str(exc.value)
+    for name, _ in bench_run.MODULES:
+        assert name in msg
+    assert "tableXX" in msg
+
+
+def test_unknown_only_raises_through_main():
+    with pytest.raises(ValueError, match="table11-multitenant"):
+        bench_run.main(["--only", "nope"])
+
+
+def test_select_substring_matches():
+    assert [n for n, _ in bench_run.select("table11")] == ["table11-multitenant"]
+    assert [n for n, _ in bench_run.select("table1")] == [
+        "table1",
+        "table10-zoo",
+        "table11-multitenant",
+    ]
+    assert bench_run.select(None) == bench_run.MODULES
+
+
+# ---------------------------------------------------------------------------
+# bench_record: atomic append (temp file + os.replace).
+# ---------------------------------------------------------------------------
+
+
+def _with_path(tmp_path, monkeypatch, name="bench.json"):
+    path = tmp_path / name
+    monkeypatch.setenv("BENCH_DENOISE_PATH", str(path))
+    return path
+
+
+def test_bench_record_appends(tmp_path, monkeypatch):
+    path = _with_path(tmp_path, monkeypatch)
+    common.bench_record("first", speedup=2.0)
+    common.bench_record("second", config={"G": 8}, speedup=3.0)
+    records = json.loads(path.read_text())
+    assert [r["name"] for r in records] == ["first", "second"]
+    assert records[1]["config"] == {"G": 8}
+    assert all("timestamp" in r for r in records)
+
+
+def test_bench_record_replaces_corrupt_file(tmp_path, monkeypatch):
+    path = _with_path(tmp_path, monkeypatch)
+    path.write_text('[{"name": "truncated-by-a-crash"')  # invalid JSON
+    common.bench_record("fresh")
+    records = json.loads(path.read_text())
+    assert [r["name"] for r in records] == ["fresh"]
+
+
+def test_bench_record_leaves_no_temp_droppings(tmp_path, monkeypatch):
+    path = _with_path(tmp_path, monkeypatch)
+    for i in range(5):
+        common.bench_record(f"p{i}")
+    leftovers = [p for p in tmp_path.iterdir() if p != path]
+    assert leftovers == []
+
+
+def test_bench_record_concurrent_writers_never_corrupt(tmp_path, monkeypatch):
+    """Hammer one file from several threads: with in-place writes this
+    interleaving produced truncated JSON; with the atomic replace every
+    intermediate and final state is a valid JSON list. (Last-replace-wins
+    may drop points — the guarantee is integrity, not lossless merge.)"""
+    path = _with_path(tmp_path, monkeypatch)
+    errors = []
+
+    def writer(tag):
+        try:
+            for i in range(20):
+                common.bench_record(f"{tag}-{i}")
+                if path.exists():  # every observable state parses
+                    parsed = json.loads(path.read_text())
+                    assert isinstance(parsed, list)
+        except BaseException as e:
+            errors.append(e)
+
+    threads = [
+        threading.Thread(target=writer, args=(f"w{t}",)) for t in range(4)
+    ]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors
+    final = json.loads(path.read_text())
+    assert isinstance(final, list) and 1 <= len(final) <= 80
+    assert all(isinstance(r, dict) and "name" in r for r in final)

@@ -1,0 +1,137 @@
+"""Column-sync regression tests for the CSV report emitters.
+
+``StreamReport.header()`` / ``.row()`` (and the ``SessionReport``
+extension) are maintained by hand; a field added to one but not the other
+silently desyncs every executor CSV. These tests parse a row against its
+header and pin field count, order, and the placement of the extension
+columns, so new columns (like the latency percentiles) cannot drift."""
+
+import dataclasses
+
+from repro.core.streaming import StreamReport
+from repro.serve import SessionReport
+
+
+def _stream_report(**kw):
+    base = dict(
+        elapsed_s=1.25,
+        buffering_s=0.5,
+        compute_s=0.75,
+        frames=100,
+        bytes_in=4096,
+        transfer_s=0.25,
+        stall_s=0.125,
+        num_slots=3,
+        produce_wait_s=0.01,
+        consume_wait_s=0.02,
+        consume_s=0.03,
+        deliver_wait_s=0.04,
+        drops=2,
+        ring_occupancy_mean=1.5,
+        ring_occupancy_max=3,
+        latency_p50_ms=1.0,
+        latency_p95_ms=2.0,
+        latency_p99_ms=3.0,
+    )
+    base.update(kw)
+    return StreamReport(**base)
+
+
+def test_stream_report_row_matches_header():
+    rep = _stream_report()
+    header = StreamReport.header().split(",")
+    row = rep.row("table/case").split(",")
+    assert len(header) == len(row)
+    assert header[0] == "name" and row[0] == "table/case"
+    cols = dict(zip(header, row))
+    # spot-check that values land under the right column names
+    assert float(cols["elapsed_s"]) == 1.25
+    assert int(cols["num_slots"]) == 3
+    assert int(cols["drops"]) == 2
+    assert float(cols["latency_p50_ms"]) == 1.0
+    assert float(cols["latency_p99_ms"]) == 3.0
+    assert header[-3:] == ["latency_p50_ms", "latency_p95_ms", "latency_p99_ms"]
+
+
+def test_stream_report_header_covers_every_percentile_field():
+    """Any ``latency_*``/wait/drop field added to the dataclass must show
+    up in the CSV — the desync this file exists to prevent."""
+    header = set(StreamReport.header().split(","))
+    for f in dataclasses.fields(StreamReport):
+        if f.name.startswith("latency_") or f.name.endswith("_wait_s"):
+            assert f.name in header, f"{f.name} missing from header()"
+        if f.name == "drops":
+            assert f.name in header
+
+
+def test_session_report_extends_stream_report_columns():
+    rep = SessionReport(
+        **dataclasses.asdict(_stream_report()),
+        session="tenant0",
+        mode="drop_oldest",
+        deadline_ms=5.0,
+        deadline_misses=4,
+        queue_wait_s=0.75,
+        groups=6,
+    )
+    header = SessionReport.header().split(",")
+    row = rep.row("serve/case").split(",")
+    assert len(header) == len(row)
+    # prefix-compatible with the base CSV: the parent columns come first,
+    # unchanged, so StreamReport consumers can read SessionReport rows
+    base_header = StreamReport.header().split(",")
+    assert header[: len(base_header)] == base_header
+    base_row = _stream_report().row("serve/case").split(",")
+    assert row[: len(base_row)] == base_row
+    cols = dict(zip(header, row))
+    assert cols["session"] == "tenant0"
+    assert cols["mode"] == "drop_oldest"
+    assert int(cols["deadline_misses"]) == 4
+    assert float(cols["queue_wait_s"]) == 0.75
+    assert int(cols["groups"]) == 6
+
+
+def test_emit_report_prints_matching_header_per_class(capsys):
+    """The CSV emitter must pair each row with the emitting class's own
+    header — a SessionReport row under a StreamReport header is the
+    column desync this file guards against."""
+    from benchmarks import common
+
+    common._report_headers_printed.clear()
+    stream = _stream_report()
+    session = SessionReport(
+        **dataclasses.asdict(stream), session="t0", groups=4
+    )
+    common.emit_report("a", stream)
+    common.emit_report("b", session)
+    common.emit_report("c", session)  # header only once per class
+    lines = capsys.readouterr().out.strip().splitlines()
+    headers = [ln[2:] for ln in lines if ln.startswith("# ")]
+    rows = [ln[len("report/"):] for ln in lines if ln.startswith("report/")]
+    assert headers == [StreamReport.header(), SessionReport.header()]
+    assert len(rows[0].split(",")) == len(headers[0].split(","))
+    assert len(rows[1].split(",")) == len(headers[1].split(","))
+    assert len(rows[2].split(",")) == len(headers[1].split(","))
+
+
+def test_session_report_row_parses_for_every_field():
+    """Every dataclass field of SessionReport must be recoverable from
+    (header, row) — field count drift in either direction fails here."""
+    names = {f.name for f in dataclasses.fields(SessionReport)}
+    header = set(SessionReport.header().split(","))
+    # the header also carries derived columns (fps, mb_per_s,
+    # overlap_frac) and the name column; every *extension* field and the
+    # latency/drop accounting must be present verbatim
+    for required in (
+        "session",
+        "mode",
+        "deadline_ms",
+        "deadline_misses",
+        "queue_wait_s",
+        "groups",
+        "drops",
+        "latency_p50_ms",
+        "latency_p95_ms",
+        "latency_p99_ms",
+    ):
+        assert required in names and required in header

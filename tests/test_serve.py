@@ -1,0 +1,505 @@
+"""Multi-tenant session service: 1-session bit-identity with run_pipelined
+(every filter, single-device and mesh backends), multi-session correctness
+incl. staggered joins, QoS (drop_oldest / deadline / leave), admission
+control, slot hooks, and the 2-device gang-scheduled mesh path."""
+
+import threading
+import time
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core.banks import make_bank_mesh, run_pipelined_banked
+from repro.core.denoise import DenoiseConfig, StreamingDenoiser
+from repro.core.streaming import run_pipelined
+from repro.data.prism import PrismSource
+from repro.denoise import FILTERS, get_filter
+from repro.serve import (
+    AdmissionError,
+    Session,
+    SessionHandle,
+    SessionScheduler,
+    SessionReport,
+)
+
+ALL_FILTERS = sorted(FILTERS)
+WAIT = 300  # generous result timeout: first step pays jit compile
+
+
+def _cfg(**kw):
+    base = dict(
+        num_groups=4,
+        frames_per_group=20,
+        height=16,
+        width=64,
+        backend="xla",
+        median_window=3,
+    )
+    base.update(kw)
+    return DenoiseConfig(**base)
+
+
+def _groups(cfg, seed=3):
+    return list(PrismSource(cfg, seed=seed).groups())
+
+
+def _serial(cfg, groups, steps=None):
+    """Oracle: the direct filter calls on the same chunk sequence."""
+    den = StreamingDenoiser(cfg)
+    state = den.init()
+    for k, g in enumerate(groups):
+        state = den.ingest(state, np.asarray(g), step=k)
+    return np.asarray(den.finalize(state, steps=steps))
+
+
+# ---------------------------------------------------------------------------
+# Acceptance: a 1-session scheduler run IS run_pipelined, bit for bit.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", ALL_FILTERS)
+def test_one_session_bit_identical_to_run_pipelined(name):
+    cfg = _cfg(filter_name=name)
+    groups = _groups(cfg)
+    ref, _ = run_pipelined(cfg, iter(groups), num_slots=2)
+    with SessionScheduler(slots_per_executor=1, max_executors=1) as sched:
+        handle = sched.submit(Session(config=cfg, source=iter(groups)))
+        out, rep = handle.result(timeout=WAIT)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+    assert rep.groups == cfg.num_groups
+    assert rep.frames == cfg.num_groups * cfg.frames_per_group
+    assert rep.drops == 0 and rep.deadline_misses == 0
+    assert 0.0 <= rep.latency_p50_ms <= rep.latency_p95_ms <= rep.latency_p99_ms
+
+
+@pytest.mark.parametrize("name", ["pair_average", "temporal_median"])
+def test_one_session_mesh_matches_banked_executor(name):
+    """Mesh-backed (gang-scheduled shard_map) slot array: same calls as
+    run_pipelined_banked, so the same bits."""
+    cfg = _cfg(filter_name=name)
+    mesh = make_bank_mesh(1)
+    src = PrismSource(cfg, seed=5)
+    ref, _ = run_pipelined_banked(cfg, src.bank_sources(1), mesh, num_slots=2)
+    with SessionScheduler(mesh=mesh, max_executors=1) as sched:
+        handle = sched.submit(
+            Session(config=cfg, source=iter(src.bank_source(0)))
+        )
+        out, rep = handle.result(timeout=WAIT)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref[0]))
+    assert rep.groups == cfg.num_groups
+
+
+# ---------------------------------------------------------------------------
+# Multi-tenant correctness: co-batched slots == independent runs.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", ALL_FILTERS)
+def test_three_sessions_match_individual_runs(name):
+    cfg = _cfg(filter_name=name)
+    sources = [_groups(cfg, seed=s) for s in (1, 2, 3)]
+    with SessionScheduler(slots_per_executor=3, max_executors=1) as sched:
+        handles = [
+            sched.submit(Session(config=cfg, source=iter(g), name=f"m{i}"))
+            for i, g in enumerate(sources)
+        ]
+        outs = [h.result(timeout=WAIT)[0] for h in handles]
+    for out, groups in zip(outs, sources):
+        np.testing.assert_allclose(
+            np.asarray(out), _serial(cfg, groups), rtol=1e-6
+        )
+
+
+def test_mixed_filters_get_separate_executors():
+    cfg_a = _cfg()
+    cfg_b = _cfg(filter_name="ema_variance")
+    ga, gb = _groups(cfg_a, seed=1), _groups(cfg_b, seed=2)
+    with SessionScheduler(slots_per_executor=2, max_executors=2) as sched:
+        ha = sched.submit(Session(config=cfg_a, source=iter(ga)))
+        hb = sched.submit(Session(config=cfg_b, source=iter(gb)))
+        oa, _ = ha.result(timeout=WAIT)
+        ob, _ = hb.result(timeout=WAIT)
+        snap = sched.stats()
+    assert len(snap["executors"]) == 2
+    assert {e["filter"] for e in snap["executors"]} == {
+        "pair_average",
+        "ema_variance",
+    }
+    assert snap["completed"] == 2 and snap["in_flight"] == 0
+    np.testing.assert_array_equal(np.asarray(oa), _serial(cfg_a, ga))
+    np.testing.assert_array_equal(np.asarray(ob), _serial(cfg_b, gb))
+
+
+@pytest.mark.parametrize("name", ["temporal_median", "ema_variance"])
+def test_staggered_join_phase_sensitive_filter(name):
+    """A session joining mid-stream runs at its own phase: the executor
+    must cohort phase-sensitive filters by group index, and the join must
+    not retrace or disturb the resident session's slot."""
+    cfg = _cfg(num_groups=5, filter_name=name)
+    ga, gb = _groups(cfg, seed=1), _groups(cfg, seed=2)
+    seen = []
+    gate = threading.Event()
+
+    def a_src():
+        yield ga[0]
+        yield ga[1]
+        gate.wait(60)
+        yield from ga[2:]
+
+    with SessionScheduler(slots_per_executor=2, max_executors=1) as sched:
+        ha = sched.submit(
+            Session(
+                config=cfg,
+                source=a_src(),
+                name="A",
+                consumer=lambda k, p: seen.append(k),
+            )
+        )
+        deadline = time.time() + 60
+        while len(seen) < 2 and time.time() < deadline:
+            time.sleep(0.01)
+        assert len(seen) >= 2, "session A never progressed"
+        hb = sched.submit(Session(config=cfg, source=iter(gb), name="B"))
+        gate.set()
+        oa, _ = ha.result(timeout=WAIT)
+        ob, _ = hb.result(timeout=WAIT)
+    np.testing.assert_array_equal(np.asarray(oa), _serial(cfg, ga))
+    np.testing.assert_array_equal(np.asarray(ob), _serial(cfg, gb))
+
+
+# ---------------------------------------------------------------------------
+# QoS: drop_oldest, deadlines, leave, consumer hook.
+# ---------------------------------------------------------------------------
+
+
+def test_queued_drop_oldest_session_sheds_then_folds_survivors():
+    """A real-time session stuck in the join queue keeps shedding stale
+    groups; once seated it folds only the freshest window, and the output
+    averages exactly the surviving groups."""
+    cfg = _cfg()
+    groups = _groups(cfg, seed=7)
+    gate = threading.Event()
+    b_staged = threading.Event()
+
+    def a_src():
+        yield groups[0]
+        gate.wait(60)
+        yield from groups[1:]
+
+    def b_src():
+        yield from groups
+        b_staged.set()
+
+    sched = SessionScheduler(
+        slots_per_executor=1, max_executors=1, max_waiting=1, max_sessions=3
+    )
+    try:
+        ha = sched.submit(Session(config=cfg, source=a_src(), name="A"))
+        hb = sched.submit(
+            Session(
+                config=cfg,
+                source=b_src(),
+                name="B",
+                mode="drop_oldest",
+                num_slots=2,
+            )
+        )
+        assert b_staged.wait(60), "B's producer never drained its source"
+        time.sleep(0.2)  # let the final put/close land in B's ring
+        gate.set()
+        _, rep_a = ha.result(timeout=WAIT)
+        out_b, rep_b = hb.result(timeout=WAIT)
+    finally:
+        sched.shutdown()
+    assert rep_a.groups == cfg.num_groups
+    assert rep_b.mode == "drop_oldest"
+    assert rep_b.groups == 2 and rep_b.drops == 2  # depth-2 ring kept last 2
+    assert rep_b.queue_wait_s > 0.0
+    np.testing.assert_array_equal(
+        np.asarray(out_b), _serial(cfg, groups[2:], steps=2)
+    )
+
+
+def test_deadline_misses_counted():
+    cfg = _cfg()
+    groups = _groups(cfg)
+    with SessionScheduler(slots_per_executor=1, max_executors=1) as sched:
+        h = sched.submit(
+            Session(config=cfg, source=iter(groups), deadline_ms=1e-6)
+        )
+        _, rep = h.result(timeout=WAIT)
+    assert rep.deadline_misses == rep.groups == cfg.num_groups
+    assert rep.deadline_ms == 1e-6
+
+
+def test_leave_finalizes_partial_stream():
+    cfg = _cfg()
+    groups = _groups(cfg, seed=9)
+    seen = []
+    gate = threading.Event()
+
+    def src():
+        yield groups[0]
+        yield groups[1]
+        gate.wait(60)
+        yield from groups[2:]
+
+    sched = SessionScheduler(slots_per_executor=1, max_executors=1)
+    try:
+        h = sched.submit(
+            Session(
+                config=cfg,
+                source=src(),
+                name="L",
+                consumer=lambda k, p: seen.append(k),
+            )
+        )
+        deadline = time.time() + 60
+        while len(seen) < 2 and time.time() < deadline:
+            time.sleep(0.01)
+        assert len(seen) >= 2
+        h.leave()
+        out, rep = h.result(timeout=WAIT)
+        gate.set()
+    finally:
+        sched.shutdown()
+    assert rep.groups == 2
+    np.testing.assert_array_equal(
+        np.asarray(out), _serial(cfg, groups[:2], steps=2)
+    )
+
+
+def test_consumer_partials_match_run_pipelined_consumer():
+    cfg = _cfg()
+    groups = _groups(cfg, seed=11)
+    ref_partials = []
+    run_pipelined(
+        cfg,
+        iter(groups),
+        num_slots=2,
+        consumer=lambda k, p: ref_partials.append(np.asarray(p)),
+    )
+    got = {}
+    with SessionScheduler(slots_per_executor=1, max_executors=1) as sched:
+        h = sched.submit(
+            Session(
+                config=cfg,
+                source=iter(groups),
+                consumer=lambda k, p: got.__setitem__(k, np.asarray(p)),
+            )
+        )
+        out, _ = h.result(timeout=WAIT)
+    assert sorted(got) == list(range(cfg.num_groups))
+    for k, ref in enumerate(ref_partials):
+        np.testing.assert_array_equal(got[k], ref)
+    np.testing.assert_array_equal(got[cfg.num_groups - 1], np.asarray(out))
+
+
+# ---------------------------------------------------------------------------
+# Admission control and error paths.
+# ---------------------------------------------------------------------------
+
+
+def test_admission_rejects_on_max_sessions():
+    cfg = _cfg()
+    groups = _groups(cfg)
+    gate = threading.Event()
+
+    def slow():
+        yield groups[0]
+        gate.wait(60)
+        yield from groups[1:]
+
+    sched = SessionScheduler(
+        slots_per_executor=1, max_executors=1, max_sessions=1, max_waiting=4
+    )
+    try:
+        h = sched.submit(Session(config=cfg, source=slow()))
+        with pytest.raises(AdmissionError, match="max_sessions"):
+            sched.submit(Session(config=cfg, source=iter(groups)))
+        gate.set()
+        h.result(timeout=WAIT)
+        # the slot freed: the next submit is admitted again
+        h2 = sched.submit(Session(config=cfg, source=iter(groups)))
+        h2.result(timeout=WAIT)
+    finally:
+        sched.shutdown()
+
+
+def test_admission_rejects_on_queue_depth():
+    cfg = _cfg()
+    groups = _groups(cfg)
+    gate = threading.Event()
+
+    def slow():
+        yield groups[0]
+        gate.wait(60)
+        yield from groups[1:]
+
+    sched = SessionScheduler(
+        slots_per_executor=1, max_executors=1, max_waiting=1, max_sessions=8
+    )
+    try:
+        ha = sched.submit(Session(config=cfg, source=slow(), name="A"))
+        hb = sched.submit(Session(config=cfg, source=iter(groups), name="B"))
+        with pytest.raises(AdmissionError, match="max_waiting"):
+            sched.submit(Session(config=cfg, source=iter(groups), name="C"))
+        gate.set()
+        ha.result(timeout=WAIT)
+        hb.result(timeout=WAIT)
+    finally:
+        sched.shutdown()
+
+
+def test_source_error_fails_only_that_session():
+    cfg = _cfg()
+    groups = _groups(cfg)
+
+    def broken():
+        yield groups[0]
+        raise RuntimeError("camera unplugged")
+
+    with SessionScheduler(slots_per_executor=2, max_executors=1) as sched:
+        bad = sched.submit(Session(config=cfg, source=broken(), name="bad"))
+        good = sched.submit(Session(config=cfg, source=iter(groups), name="good"))
+        with pytest.raises(RuntimeError, match="camera unplugged"):
+            bad.result(timeout=WAIT)
+        out, rep = good.result(timeout=WAIT)
+    assert bad.status == "failed" and good.status == "done"
+    assert rep.groups == cfg.num_groups
+    np.testing.assert_array_equal(np.asarray(out), _serial(cfg, groups))
+
+
+def test_session_validates_config_and_qos():
+    cfg = _cfg()
+    with pytest.raises(ValueError, match="num_banks"):
+        Session(config=_cfg(num_banks=2), source=iter([]))
+    with pytest.raises(ValueError, match="mode"):
+        Session(config=cfg, source=iter([]), mode="nope")
+    with pytest.raises(ValueError, match="deadline_ms"):
+        Session(config=cfg, source=iter([]), deadline_ms=0.0)
+    with pytest.raises(ValueError, match="num_slots"):
+        Session(config=cfg, source=iter([]), num_slots=0)
+
+
+def test_submit_after_shutdown_raises():
+    sched = SessionScheduler(slots_per_executor=1, max_executors=1)
+    sched.shutdown()
+    with pytest.raises(RuntimeError, match="shut down"):
+        sched.submit(Session(config=_cfg(), source=iter([])))
+
+
+def test_stream_key_splits_scheduling_from_numerics():
+    import dataclasses
+
+    cfg = _cfg()
+    assert cfg.stream_key() == dataclasses.replace(
+        cfg, num_slots=5, overflow_policy="drop_oldest"
+    ).stream_key()
+    assert cfg.stream_key() != dataclasses.replace(
+        cfg, filter_name="ema_variance"
+    ).stream_key()
+    assert cfg.stream_key() != dataclasses.replace(cfg, width=128).stream_key()
+
+
+# ---------------------------------------------------------------------------
+# Slot hooks (the base-class surgery the scheduler is built on).
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", ALL_FILTERS)
+def test_slot_hooks_roundtrip(name):
+    cfg = _cfg(filter_name=name)
+    filt = get_filter(name)(cfg)
+    banked = filt.init(banks=3)
+    single = filt.init()
+    inserted = filt.slot_insert(banked, single, 1)
+    jax.tree.map(
+        lambda a, b: np.testing.assert_array_equal(np.asarray(a), np.asarray(b)),
+        filt.slot_extract(inserted, 1),
+        single,
+    )
+    sub = filt.slot_gather(inserted, [0, 2])
+    back = filt.slot_scatter(inserted, sub, [0, 2])
+    jax.tree.map(
+        lambda a, b: np.testing.assert_array_equal(np.asarray(a), np.asarray(b)),
+        back,
+        inserted,
+    )
+    # shapes never change across surgery: the no-retrace guarantee
+    assert jax.tree.map(lambda x: x.shape, inserted) == jax.tree.map(
+        lambda x: x.shape, banked
+    )
+
+
+def test_phase_invariance_flags():
+    assert FILTERS["pair_average"].phase_invariant
+    assert FILTERS["spatial_box"].phase_invariant  # inherits the same step
+    assert not FILTERS["temporal_median"].phase_invariant
+    assert not FILTERS["ema_variance"].phase_invariant
+
+
+def test_session_report_is_stream_report():
+    from repro.core.streaming import StreamReport
+
+    rep = SessionReport(
+        elapsed_s=1.0, buffering_s=0.0, compute_s=0.5, frames=10, bytes_in=20
+    )
+    assert isinstance(rep, StreamReport)
+    assert SessionReport.header().startswith(StreamReport.header())
+
+
+def test_handle_result_timeout():
+    handle = SessionHandle(Session(config=_cfg(), source=iter([])))
+    with pytest.raises(TimeoutError):
+        handle.result(timeout=0.01)
+
+
+# ---------------------------------------------------------------------------
+# Multi-device gang scheduling (subprocess, 2 host devices).
+# ---------------------------------------------------------------------------
+
+
+def test_two_sessions_two_devices_gang():
+    import os
+    import subprocess
+    import sys
+    import textwrap
+
+    code = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+        import numpy as np
+        from repro.core.banks import make_bank_mesh
+        from repro.core.denoise import DenoiseConfig, StreamingDenoiser
+        from repro.data.prism import PrismSource
+        from repro.serve import Session, SessionScheduler
+
+        cfg = DenoiseConfig(num_groups=3, frames_per_group=8, height=8,
+                            width=32, backend="xla",
+                            filter_name="temporal_median", median_window=2)
+        mesh = make_bank_mesh(2)
+        src = PrismSource(cfg, seed=13)
+        with SessionScheduler(mesh=mesh, max_executors=1) as sched:
+            hs = [sched.submit(Session(config=cfg,
+                                       source=iter(src.bank_source(b)),
+                                       name=f"b{b}"))
+                  for b in range(2)]
+            outs = [h.result(timeout=240)[0] for h in hs]
+        for b, out in enumerate(outs):
+            ref = StreamingDenoiser(cfg).run(
+                iter(PrismSource(cfg, seed=13).bank_source(b)))
+            np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                       rtol=1e-6)
+        print("SERVE_MESH_OK")
+    """)
+    res = subprocess.run(
+        [sys.executable, "-c", code],
+        capture_output=True,
+        text=True,
+        env=dict(os.environ),
+        timeout=600,
+    )
+    assert "SERVE_MESH_OK" in res.stdout, res.stderr[-2000:]
