@@ -30,6 +30,7 @@ __all__ = [
     "timeit",
     "bench_config",
     "bench_record",
+    "stream_pass_s",
     "PAPER_G",
     "PAPER_N",
     "PAPER_H",
@@ -41,12 +42,47 @@ PAPER_H, PAPER_W = 80, 256  # one camera bank
 
 _BENCH_PATH = pathlib.Path(__file__).resolve().parent.parent / "BENCH_denoise.json"
 
+#: one-shot migration map: 59 legacy points predate the required ``kind``
+#: field; their trajectory ``name`` determines the point shape exactly,
+#: so ``_migrate_kinds`` backfills from it (unknown names fall back to
+#: ``kind == name`` — present, greppable, and honest about provenance).
+_KIND_FROM_NAME = {
+    "denoise_fused_vs_reference": "speedup",
+    "multibank_fused_vs_reference": "speedup",
+    "streaming_prefetch_vs_presync": "speedup",
+    "inline_prefetch_vs_sync": "speedup",
+    "ring_depth_overlap": "speedup",
+    "filter_zoo_median_vs_mean_impulse": "snr_gain",
+    "multitenant": "multitenant",
+    "snr": "snr",
+}
 
-def bench_record(name: str, **fields) -> None:
+
+def _migrate_kinds(records: list) -> bool:
+    """Backfill ``kind`` on legacy points in place; True if anything changed."""
+    changed = False
+    for rec in records:
+        if isinstance(rec, dict) and "kind" not in rec:
+            name = rec.get("name")
+            # a nameless/mistyped (even unhashable) record still gets a
+            # typed string kind — readers can rely on kind being a str
+            if isinstance(name, str) and name:
+                rec["kind"] = _KIND_FROM_NAME.get(name, name)
+            else:
+                rec["kind"] = "unknown"
+            changed = True
+    return changed
+
+
+def bench_record(name: str, kind: str, **fields) -> None:
     """Append one trajectory point to BENCH_denoise.json.
 
-    Each point is ``{"name", "timestamp", **fields}``; speedup entries use
-    ``baseline_s`` / ``candidate_s`` / ``speedup`` plus a ``config`` dict.
+    Each point is ``{"name", "kind", "timestamp", **fields}``. ``name``
+    is the trajectory (the stable identifier readers plot across PRs);
+    ``kind`` is the required point shape discriminator (``"speedup"``,
+    ``"throughput"``, ``"snr"``, ...) — see docs/BENCHMARKS.md. Loading a
+    file that still contains pre-``kind`` legacy points triggers a
+    one-shot in-file migration backfilling them from their ``name``.
     The file is a flat JSON list, append-only across runs.
 
     The append is crash- and concurrency-safe: the new list is written to
@@ -57,6 +93,8 @@ def bench_record(name: str, **fields) -> None:
     (last replace wins; there is deliberately no cross-process lock), but
     every reader always sees valid JSON.
     """
+    if not kind or not isinstance(kind, str):
+        raise ValueError(f"bench_record needs a non-empty kind, got {kind!r}")
     path = pathlib.Path(os.environ.get("BENCH_DENOISE_PATH", _BENCH_PATH))
     records = []
     if path.exists():
@@ -66,7 +104,8 @@ def bench_record(name: str, **fields) -> None:
             records = []
         if not isinstance(records, list):
             records = []
-    records.append({"name": name, "timestamp": time.time(), **fields})
+    _migrate_kinds(records)
+    records.append({"name": name, "kind": kind, "timestamp": time.time(), **fields})
     fd, tmp = tempfile.mkstemp(
         dir=path.parent, prefix=f".{path.name}.", suffix=".tmp"
     )
@@ -120,6 +159,19 @@ def emit_report(name: str, report: StreamReport) -> None:
         print(f"# {cls.header()}")
         _report_headers_printed.add(cls.__qualname__)
     print(f"report/{report.row(name)}")
+
+
+def stream_pass_s(den, groups) -> float:
+    """Wall seconds for one full ingest+finalize streaming pass over
+    pre-staged device chunks — the shared timing body of the plan
+    comparisons in ``table12_autotune`` and ``roofline_report`` (one
+    implementation so their numbers stay comparable)."""
+    t0 = time.perf_counter()
+    state = den.init()
+    for k, g in enumerate(groups):
+        state = den.ingest(state, g, step=k)
+    jax.block_until_ready(den.finalize(state))
+    return time.perf_counter() - t0
 
 
 def timeit(fn, *args, warmup: int = 1, iters: int = 3, **kw) -> float:

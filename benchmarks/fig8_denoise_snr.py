@@ -41,6 +41,7 @@ def run(quick: bool = True) -> None:
         for groups, value in ((8, snr), (1, snr1)):
             bench_record(
                 "snr",
+                kind="snr",
                 figure="fig8",
                 config={"G": groups, "N": 50, "ambient": ambient},
                 filter="pair_average",

@@ -1,13 +1,52 @@
 """Roofline report: per (arch × shape × mesh) terms from the dry-run
-artifacts (§Roofline), plus the denoise kernel's own TPU roofline."""
+artifacts (§Roofline), the denoise kernel's own TPU roofline, and the
+*achieved* fraction of that roofline for the heuristic vs the tuned tile
+plan (the tuning layer's reporting hook)."""
 
 from __future__ import annotations
 
 import glob
 import json
 
-from benchmarks.common import emit
+from benchmarks.common import bench_config, emit
+from benchmarks.table12_autotune import _min_interleaved, _staged_groups
 from repro.core import latency_model as lm
+from repro.core.denoise import StreamingDenoiser
+
+
+def _achieved_fraction(quick: bool) -> None:
+    """Measured stream-step bandwidth vs the analytic HBM roofline, for
+    the heuristic and the tuned plan.
+
+    Backend is ``auto`` — ``pallas`` on TPU (where tuned geometry can
+    actually differ and this is the tuning layer's headline number),
+    ``xla`` elsewhere (no block geometry: both plans lower identically,
+    flagged ``identical_lowering=True`` so the residual delta reads as
+    host noise, not a tuning effect). Timing is table12's
+    ``_min_interleaved`` — one shared alternating-paired discipline, so
+    the roofline and table12 numbers stay method-comparable (sequential
+    one-then-the-other timing on a loaded host reported >2x deltas
+    between byte-identical programs).
+    """
+    n = 200 if quick else 1000
+    shape = dict(num_groups=8, frames_per_group=n, height=80, width=256)
+    traffic = lm.hbm_traffic_bytes("alg3", groups=8, frames_per_group=n,
+                                   height=80, width=256)["streaming_total"]
+    roof_s = traffic / (819.0 * 1e9)  # v5e HBM bound for the streaming path
+    cfg_h = bench_config(quick, **shape, backend="auto", tile_plan="heuristic")
+    cfg_t = bench_config(quick, **shape, backend="auto", tile_plan="auto")
+    groups = _staged_groups(cfg_h, seed=9)
+    den_h, den_t = StreamingDenoiser(cfg_h), StreamingDenoiser(cfg_t)
+    identical = den_h.filter.tile_args("stream") == den_t.filter.tile_args("stream")
+    heur_s, tuned_s, _ = _min_interleaved(den_h, den_t, groups, iters=4)
+    for label, sec in (("heuristic", heur_s), ("tuned", tuned_s)):
+        emit(
+            f"roofline/achieved_{label}",
+            sec * 1e6,
+            f"achieved_gbps={traffic / sec / 1e9:.2f};"
+            f"roofline_frac={roof_s / sec:.5f};"
+            f"identical_lowering={identical}",
+        )
 
 
 def run(quick: bool = True) -> None:
@@ -18,6 +57,7 @@ def run(quick: bool = True) -> None:
             r["memory_s"] * 1e6,
             f"bound={r['bound']};bytes={r['bytes']:.3e};flops={r['flops']:.3e}",
         )
+    _achieved_fraction(quick)
     art = sorted(glob.glob("artifacts/dryrun/*.json"))
     if not art:
         emit("roofline/dryrun", -1, "no artifacts yet — run repro.launch.dryrun")

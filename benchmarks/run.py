@@ -26,6 +26,7 @@ from benchmarks import (
     table9_ring_depth,
     table10_filter_zoo,
     table11_multitenant,
+    table12_autotune,
 )
 
 MODULES = [
@@ -40,6 +41,7 @@ MODULES = [
     ("table9", table9_ring_depth),
     ("table10-zoo", table10_filter_zoo),
     ("table11-multitenant", table11_multitenant),
+    ("table12-autotune", table12_autotune),
     ("fig8", fig8_denoise_snr),
     ("roofline", roofline_report),
 ]

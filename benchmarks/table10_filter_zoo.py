@@ -106,6 +106,7 @@ def run(quick: bool = True) -> None:
     )
     bench_record(
         "filter_zoo_median_vs_mean_impulse",
+        kind="snr_gain",
         config={"backend": backend},
         baseline="pair_average (paper subtract-and-average)",
         candidate="temporal_median (sliding-window rank filter)",

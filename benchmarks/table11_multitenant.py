@@ -224,4 +224,4 @@ def run(quick: bool = True) -> None:
             )
             derived += f";speedup_vs_sequential={speedup:.2f}x"
         emit(tag, wall * 1e6 / max(frames_total, 1), derived)
-        bench_record("multitenant", **point)
+        bench_record("multitenant", kind="multitenant", **point)

@@ -1,0 +1,264 @@
+"""Table 12 (framework extension): measured autotuner vs heuristic plans.
+
+The paper's design-space exploration picks burst lengths and buffer
+geometry so the kernel rides under the inter-frame interval; this table
+runs the jax_pallas analogue (``repro.tune``) and records what measuring
+buys over the shared budget heuristic:
+
+* **kernel points** — per (filter, backend, shape): full-stream ingest
+  throughput under ``tile_plan="heuristic"`` vs ``tile_plan="auto"``
+  (tuned block geometry), interleaved min-of-iters. The tuner's candidate
+  set always contains the heuristic, so tuned >= heuristic up to
+  run-to-run noise — the acceptance signal for the tuning layer.
+* **executor points** — ring-depth knob: the same bursty device-resident
+  replay as table9, config-default ping-pong (``num_slots=2``) vs the
+  plan's measured depth.
+
+Points land in ``BENCH_denoise.json`` as the ``autotune`` trajectory
+(``kind="kernel"`` / ``kind="executor"``); each carries the resolved
+plan string and its provenance (``tuned`` vs ``cache``).
+
+Run directly for the CI smoke cycle (search -> cache write -> cache hit)::
+
+    REPRO_TUNE_CACHE_PATH=/tmp/plans.json \\
+        python -m benchmarks.table12_autotune --smoke
+    python -m benchmarks.table12_autotune --smoke --expect-cache-hit
+
+``--smoke`` shrinks the sweep to one filter per backend at a tiny shape;
+``--expect-cache-hit`` exits non-zero if any plan had to re-measure
+(i.e. the persistent cache did not serve it).
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+from typing import Sequence
+
+import jax
+import numpy as np
+
+from benchmarks.common import (
+    PAPER_G,
+    PAPER_H,
+    PAPER_N,
+    PAPER_W,
+    bench_config,
+    bench_record,
+    emit,
+    stream_pass_s,
+)
+from benchmarks.table9_ring_depth import BURST_COMPUTE_MULT, bursty
+from repro import tune
+from repro.core.denoise import StreamingDenoiser
+from repro.core.streaming import run_pipelined
+from repro.data.prism import PrismSource
+
+FILTER_SWEEP = ("pair_average", "temporal_median", "ema_variance", "spatial_box")
+_ITERS = 6  # even: half the pairs run heuristic-first, half tuned-first,
+# so a "first run in the pair is slower" effect cancels in the median
+
+
+def _staged_groups(cfg, seed=5):
+    groups = [jax.device_put(np.asarray(c)) for c in PrismSource(cfg, seed=seed).groups()]
+    jax.block_until_ready(groups)
+    return groups
+
+
+def _min_interleaved(d_heur, d_tuned, groups, iters=_ITERS):
+    """(heuristic_s, tuned_s, speedup) with a paired-ratio speedup.
+
+    Host load on a small shared container drifts on second scales
+    (A/A ratios swing ~±30%), so independent minima are not comparable.
+    Each iteration times the two plans back to back and contributes one
+    heur/tuned *ratio*; the recorded speedup is the median ratio (common-
+    mode drift cancels within a pair), alongside median absolute times.
+    """
+    heur, tuned = [], []
+    stream_pass_s(d_heur, groups)  # warm both jits
+    stream_pass_s(d_tuned, groups)
+    for i in range(iters):
+        if i % 2:  # alternate order inside the pair: no systematic bias
+            t = stream_pass_s(d_tuned, groups)
+            h = stream_pass_s(d_heur, groups)
+        else:
+            h = stream_pass_s(d_heur, groups)
+            t = stream_pass_s(d_tuned, groups)
+        heur.append(h)
+        tuned.append(t)
+    ratios = [h / max(t, 1e-9) for h, t in zip(heur, tuned)]
+    return float(np.median(heur)), float(np.median(tuned)), float(np.median(ratios))
+
+
+def _matches_heuristic(plan, cfg) -> bool:
+    """True when every family's tuned geometry equals the budget-model
+    pick — the residual A/B ratio is then pure measurement noise (the two
+    plans lower to the same kernel)."""
+    from repro.tune import budget
+    from repro.tune.autotune import IN_DTYPE, filter_families
+
+    p = cfg.frames_per_group // 2
+    for fam, window in filter_families(cfg):
+        args = plan.tile_args(fam)
+        if args["row_tile"] is None:
+            continue
+        th, tp = budget.resolve_tiles(
+            fam, p, cfg.height, cfg.width, in_dtype=IN_DTYPE,
+            acc_dtype=cfg.accum_dtype, window=window,
+        )
+        if (args["row_tile"], args["pair_tile"]) != (th, tp):
+            return False
+    return True
+
+
+def _sweep_shapes(quick: bool, smoke: bool, backend: str):
+    """(G, N, H, W) per backend: pallas runs in interpret mode off-TPU, so
+    its CPU shapes stay small enough to keep the quick sweep fast."""
+    on_tpu = jax.default_backend() == "tpu"
+    if smoke:
+        return [(3, 40, 16, 64)]
+    if backend == "pallas" and not on_tpu:
+        return [(4, 60, 40, 128)]
+    if quick:
+        return [(4, 200, PAPER_H, PAPER_W)]
+    return [(PAPER_G, PAPER_N, PAPER_H, PAPER_W)]
+
+
+def run(quick: bool = True, *, smoke: bool = False, expect_cache_hit: bool = False) -> None:
+    backends = ["xla", "pallas"]
+    filters = ("pair_average",) if smoke else FILTER_SWEEP
+    missed_cache = []
+    for backend in backends:
+        for g, n, h, w in _sweep_shapes(quick, smoke, backend):
+            for name in filters:
+                common = dict(
+                    num_groups=g, frames_per_group=n, height=h, width=w,
+                    backend=backend, filter_name=name,
+                )
+                cfg_h = bench_config(quick, **common, tile_plan="heuristic")
+                cfg_t = bench_config(quick, **common, tile_plan="auto")
+                groups = _staged_groups(cfg_h)
+                t0 = time.perf_counter()
+                den_t = StreamingDenoiser(cfg_t)  # resolves (tunes) the plan
+                tune_s = time.perf_counter() - t0
+                plan = den_t.plan
+                if plan.source != "cache":
+                    missed_cache.append(f"{name}/{backend}/{g}x{n}x{h}x{w}")
+                den_h = StreamingDenoiser(cfg_h)
+                heur_s, tuned_s, speedup = _min_interleaved(den_h, den_t, groups)
+                frames = g * n
+                same = _matches_heuristic(plan, cfg_t)
+                tag = f"table12/{name}/{backend}/N{n}"
+                emit(
+                    tag,
+                    tuned_s * 1e6 / frames,
+                    f"heuristic_us={heur_s * 1e6 / frames:.1f};"
+                    f"speedup={speedup:.2f}x;plan_source={plan.source};"
+                    f"plan_matches_heuristic={same};tune_s={tune_s:.2f}",
+                )
+                bench_record(
+                    "autotune",
+                    kind="kernel",
+                    config={
+                        "G": g, "N": n, "H": h, "W": w,
+                        "backend": backend, "filter": name,
+                    },
+                    baseline="tile_plan=heuristic (shared budget model)",
+                    candidate="tile_plan=auto (measured plan)",
+                    baseline_s=round(heur_s, 5),
+                    candidate_s=round(tuned_s, 5),
+                    speedup=round(speedup, 3),
+                    plan=plan.describe(),
+                    plan_source=plan.source,
+                    plan_matches_heuristic=same,
+                    tune_s=round(tune_s, 3),
+                )
+
+        # executor knob: config-default ping-pong vs the plan's measured
+        # ring depth under the table9 bursty replay (xla: the knob is
+        # backend-independent and the xla step is the fast one here)
+        if backend != "xla":
+            continue
+        g, n, h, w = _sweep_shapes(quick, smoke, backend)[0]
+        cfg_t = bench_config(
+            quick, num_groups=max(g, 6), frames_per_group=n, height=h,
+            width=w, backend=backend, tile_plan="auto",
+        )
+        cfg_h = bench_config(
+            quick, num_groups=max(g, 6), frames_per_group=n, height=h,
+            width=w, backend=backend, tile_plan="heuristic",
+        )
+        plan = tune.resolve_plan(cfg_t)
+        chunks = _staged_groups(cfg_h)
+        run_pipelined(cfg_h, iter(chunks[:2]))  # warm
+        ratios, h_times, t_times = [], [], []
+        for i in range(4):  # paired rounds, burst recalibrated, order balanced
+            t0 = time.perf_counter()
+            run_pipelined(cfg_h, iter(chunks), num_slots=1)
+            burst_s = max(
+                BURST_COMPUTE_MULT * (time.perf_counter() - t0) / len(chunks),
+                0.002,
+            )
+            if i % 2:
+                _, rep_t = run_pipelined(cfg_t, bursty(chunks, burst_s, every=3))
+                _, rep_h = run_pipelined(cfg_h, bursty(chunks, burst_s, every=3))
+            else:
+                _, rep_h = run_pipelined(cfg_h, bursty(chunks, burst_s, every=3))
+                _, rep_t = run_pipelined(cfg_t, bursty(chunks, burst_s, every=3))
+            h_times.append(rep_h.elapsed_s)
+            t_times.append(rep_t.elapsed_s)
+            ratios.append(rep_h.elapsed_s / max(rep_t.elapsed_s, 1e-9))
+        ratios.sort()
+        speedup = (ratios[1] + ratios[2]) / 2  # median of 4
+        emit(
+            f"table12/exec/{backend}/N{n}",
+            rep_t.elapsed_s * 1e6 / rep_t.frames,
+            f"slots={rep_t.num_slots}vs{rep_h.num_slots};"
+            f"speedup={speedup:.2f}x;overlap={rep_t.overlap_frac:.2f}",
+        )
+        bench_record(
+            "autotune",
+            kind="executor",
+            config={
+                "G": cfg_h.num_groups, "N": n, "H": h, "W": w,
+                "backend": backend, "filter": "pair_average",
+                "burst_compute_mult": BURST_COMPUTE_MULT,
+            },
+            baseline=f"config default num_slots={rep_h.num_slots} (ping-pong)",
+            candidate=f"plan num_slots={rep_t.num_slots} (measured)",
+            baseline_s=round(float(np.median(h_times)), 4),
+            candidate_s=round(float(np.median(t_times)), 4),
+            speedup=round(speedup, 3),
+            plan=plan.describe(),
+            plan_source=plan.source,
+        )
+
+    if expect_cache_hit and missed_cache:
+        raise SystemExit(
+            "expected every plan to come from the persistent cache, but "
+            f"these re-measured: {missed_cache}"
+        )
+
+
+def main(argv: Sequence[str] | None = None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--full", action="store_true", help="paper-scale N=1000")
+    ap.add_argument(
+        "--smoke", action="store_true",
+        help="tiny search space: exercise search, cache write, cache hit",
+    )
+    ap.add_argument(
+        "--expect-cache-hit", action="store_true",
+        help="fail unless every plan resolution was a cache hit",
+    )
+    args = ap.parse_args(argv)
+    print("name,us_per_call,derived")
+    run(
+        quick=not args.full,
+        smoke=args.smoke,
+        expect_cache_hit=args.expect_cache_hit,
+    )
+
+
+if __name__ == "__main__":
+    main()

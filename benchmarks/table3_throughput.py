@@ -156,6 +156,7 @@ def run(quick: bool = True) -> None:
     )
     bench_record(
         "streaming_prefetch_vs_presync",
+        kind="speedup",
         config={
             "G": PAPER_G, "N": PAPER_N, "H": PAPER_H, "W": PAPER_W,
             "backend": "xla", "source": "pre-staged frames",

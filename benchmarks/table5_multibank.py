@@ -144,6 +144,7 @@ def run(quick: bool = True) -> None:
     )
     bench_record(
         "multibank_fused_vs_reference",
+        kind="speedup",
         config={
             "G": PAPER_G,
             "N": PAPER_N,

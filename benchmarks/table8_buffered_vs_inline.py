@@ -92,6 +92,7 @@ def run(quick: bool = True) -> None:
     emit_report("table8/inline_prefetch", pre)
     bench_record(
         "inline_prefetch_vs_sync",
+        kind="speedup",
         config={
             "G": pcfg.num_groups,
             "N": pcfg.frames_per_group,

@@ -160,6 +160,7 @@ def run(quick: bool = True) -> None:
                     continue  # the baseline itself is not a speedup point
                 bench_record(
                     "ring_depth_overlap",
+                    kind="speedup",
                     config={
                         "G": cfg.num_groups,
                         "N": n,

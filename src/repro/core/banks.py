@@ -42,6 +42,7 @@ import jax
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro import tune
 from repro.core.denoise import DenoiseConfig
 from repro.core.ringbuf import RingBuffer, RingClosed, nearest_rank_s
 from repro.core.streaming import StreamReport
@@ -80,6 +81,7 @@ def banked_subtract_average(
     runs the fused multi-bank kernel over its local banks.
     """
     spec = P("bank", None, None, None, None)
+    tiles = tune.tile_args(config, "stream")  # once, before the shard body
 
     @functools.partial(
         shard_map, mesh=mesh, in_specs=spec, out_specs=P("bank", None, None, None)
@@ -90,8 +92,7 @@ def banked_subtract_average(
             offset=config.offset,
             algorithm=config.algorithm,
             backend=config.backend,
-            row_tile=config.row_tile,
-            pair_tile=config.pair_tile,
+            **tiles,
         )
 
     sharded = jax.device_put(frames, NamedSharding(mesh, spec))
@@ -109,6 +110,7 @@ def banked_stream_step(
 
     sum_frames (B, N/2, H, W), group_frames (B, N, H, W), both bank-sharded.
     """
+    tiles = tune.tile_args(config, "stream")  # once, before the shard body
 
     @functools.partial(
         shard_map,
@@ -124,8 +126,7 @@ def banked_stream_step(
             offset=config.offset,
             variant=config.variant,
             backend=config.backend,
-            row_tile=config.row_tile,
-            pair_tile=config.pair_tile,
+            **tiles,
         )
 
     return _step(sum_frames, group_frames)

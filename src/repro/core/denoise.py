@@ -48,8 +48,12 @@ class DenoiseConfig:
     accum_dtype: str = "float32"
     backend: str = "auto"        # auto | pallas | xla
     num_banks: int = 1           # B  (paper: one FPGA per 256x80 bank)
-    row_tile: int | None = None  # Pallas rows/block override (None = auto)
+    row_tile: int | None = None  # Pallas rows/block override (None = plan)
     pair_tile: int | None = None  # Pallas frame-pairs/block override
+    # heuristic (shared budget model, default) | auto (measured tuner with
+    # persistent plan cache) | a path to a pre-built plan file. Resolved
+    # once at config time by repro.tune.resolve_plan; see docs/ARCHITECTURE.md
+    tile_plan: str = "heuristic"
     num_slots: int = 2           # ring depth for run_pipelined (2 = ping-pong)
     overflow_policy: str = "block"  # block (lossless) | drop_oldest (real-time)
     # -- streaming-filter subsystem (repro.denoise) -------------------------
@@ -70,6 +74,11 @@ class DenoiseConfig:
             )
         if self.num_banks < 1:
             raise ValueError("num_banks must be >= 1")
+        if not isinstance(self.tile_plan, str) or not self.tile_plan:
+            raise ValueError(
+                f"tile_plan must be one of {ops.TILE_PLANS} or a plan-file "
+                f"path, got {self.tile_plan!r}"
+            )
         if self.num_slots < 1:
             raise ValueError("num_slots must be >= 1")
         if self.overflow_policy not in ("block", "drop_oldest"):
@@ -144,7 +153,11 @@ class StreamingDenoiser:
     def __init__(self, config: DenoiseConfig):
         self.config = config
         self._accum = jnp.dtype(config.accum_dtype)
+        # the filter resolves config.tile_plan once here (construction =
+        # config time); self.plan is the same resolved object, exposed for
+        # telemetry and the one-shot __call__ path below
         self.filter = get_filter(config.filter_name)(config)
+        self.plan = self.filter.plan
         self._step = 0
 
     # -- streaming interface (filter init/step/finalize) --------------------
@@ -242,6 +255,7 @@ class StreamingDenoiser:
                 chunk = frames[:, g] if banks else frames[g]
                 state = self.filter.step(state, chunk, step_index=g)
             return self.filter.finalize(state)
+        tiles = self.filter.tile_args("stream")
         if frames.ndim == 5:
             return ops.multibank_subtract_average(
                 frames,
@@ -249,8 +263,7 @@ class StreamingDenoiser:
                 algorithm=c.algorithm,
                 backend=c.backend,
                 accum_dtype=self._accum,
-                row_tile=c.row_tile,
-                pair_tile=c.pair_tile,
+                **tiles,
             )
         return ops.subtract_average(
             frames,
@@ -258,8 +271,7 @@ class StreamingDenoiser:
             algorithm=c.algorithm,
             backend=c.backend,
             accum_dtype=self._accum,
-            row_tile=c.row_tile,
-            pair_tile=c.pair_tile,
+            **tiles,
         )
 
     # -- container-faithful reference (overflow reproduction) ---------------

@@ -54,6 +54,10 @@ import numpy as np
 from repro.core.denoise import DenoiseConfig, StreamingDenoiser
 from repro.core.ringbuf import RingBuffer, RingClosed
 
+# a config that KEEPS this default has not expressed a depth preference,
+# so a resolved plan's measured ring depth may apply (run_pipelined)
+_DEFAULT_NUM_SLOTS = DenoiseConfig.__dataclass_fields__["num_slots"].default
+
 __all__ = [
     "StreamReport",
     "run_pipelined",
@@ -224,14 +228,31 @@ def run_pipelined(
       accumulator. ``consumer=None`` skips the stage entirely.
 
     ``num_slots``/``policy`` default to ``config.num_slots`` /
-    ``config.overflow_policy``. With ``num_slots=2, consumer=None`` the
+    ``config.overflow_policy`` — except under a resolved tile plan
+    (``config.tile_plan`` of ``"auto"`` or a plan-file path) whose
+    executor knobs carry a measured ring depth: then, *when the config
+    leaves the depth at its dataclass default*, the plan's ``num_slots``
+    applies. A non-default ``config.num_slots`` (or the explicit
+    ``num_slots=`` argument) beats the plan — the same
+    explicit-overrides-win precedence as ``row_tile``/``pair_tile``.
+    Ring depth is scheduling-only — it never changes the numeric stream,
+    so plans may retune it freely.
+    With ``num_slots=2, consumer=None`` the
     schedule is the classic ping-pong double-buffer and the output is
     bit-identical to ``run_inline(prefetch=True)`` (which delegates here).
     Output is bit-identical for any ``num_slots`` and any consumer under
     the ``block`` policy — depth and consumers change only wall-clock
     accounting, never numerics.
     """
-    num_slots = config.num_slots if num_slots is None else num_slots
+    if num_slots is None:
+        num_slots = config.num_slots
+        if (
+            getattr(config, "tile_plan", "heuristic") != "heuristic"
+            and num_slots == _DEFAULT_NUM_SLOTS
+        ):
+            from repro import tune  # resolved once per config (memoized)
+
+            num_slots = tune.resolve_plan(config).num_slots or num_slots
     policy = config.overflow_policy if policy is None else policy
     den = StreamingDenoiser(config)
     if interval_us is not None:

@@ -31,6 +31,14 @@ Contract rules the executors rely on:
 * **Backend dispatch.** All device math goes through
   ``repro.kernels.ops`` (``config.backend`` selects pallas/xla/auto);
   filters never import kernel modules.
+* **Tile plans.** Block geometry is resolved **once, at filter
+  construction** (``repro.tune.resolve_plan(config)`` honouring
+  ``config.tile_plan``) and cached on the instance; ``step`` passes the
+  resolved static ints to ``ops``. Explicit ``config.row_tile`` /
+  ``pair_tile`` overrides beat the plan; ``tile_plan="heuristic"``
+  passes ``None`` through to the kernels' shared budget model. Because
+  resolution never happens inside ``step``, the jitted step sees one
+  fixed geometry for the whole stream — no mid-stream retrace.
 * **Slot surgery.** A banked state is a *slot array*: the session
   service (``repro.serve``) hosts one independent stream per bank slot
   and joins/leaves streams mid-run. ``slot_insert`` / ``slot_extract`` /
@@ -49,6 +57,8 @@ from typing import Any, ClassVar
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
+
+from repro import tune
 
 __all__ = ["StreamingFilter"]
 
@@ -69,6 +79,20 @@ class StreamingFilter:
 
     def __init__(self, config: Any):
         self.config = config
+        # plan resolution is config time, not step time: tuned/cached
+        # geometry is fixed here once and reused for the whole stream
+        self.plan = tune.resolve_plan(config)
+
+    def tile_args(self, family: str) -> dict:
+        """Static ``row_tile``/``pair_tile`` kwargs for one kernel family.
+
+        Explicit config overrides win; otherwise the plan resolved at
+        construction; otherwise ``None``s (shared budget heuristic).
+        One precedence implementation for every caller
+        (``tune.tile_args``), fed the instance's own resolved plan so
+        the per-step path never re-enters the resolver.
+        """
+        return tune.tile_args(self.config, family, plan=self.plan)
 
     @classmethod
     def validate(cls, config: Any) -> None:

@@ -75,8 +75,7 @@ class EmaVarianceFilter(StreamingFilter):
             offset=c.offset,
             prior_count=step_index * c.pairs_per_group,
             backend=c.backend,
-            row_tile=c.row_tile,
-            pair_tile=c.pair_tile,
+            **self.tile_args("ema"),
         )
 
     def step(self, state, group_frames, *, step_index: int):

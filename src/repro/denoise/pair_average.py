@@ -44,8 +44,7 @@ class PairAverageFilter(StreamingFilter):
             offset=c.offset,
             variant=c.variant,
             backend=c.backend,
-            row_tile=c.row_tile,
-            pair_tile=c.pair_tile,
+            **self.tile_args("stream"),
         )
         if group_frames.ndim == 4:
             return ops.multibank_stream_step(state, group_frames, **kw)

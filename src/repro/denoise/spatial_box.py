@@ -61,8 +61,7 @@ class SpatialBoxFilter(PairAverageFilter):
             mode=c.spatial_mode,
             range_sigma=c.spatial_range_sigma,
             backend=c.backend,
-            row_tile=c.row_tile,
-            pair_tile=c.pair_tile,
+            **self.tile_args("spatial"),
         )
         if banked:
             out = out.reshape(b, p, h, w)

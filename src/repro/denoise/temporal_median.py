@@ -69,8 +69,7 @@ class TemporalMedianFilter(StreamingFilter):
             slot=slot,
             offset=c.offset,
             backend=c.backend,
-            row_tile=c.row_tile,
-            pair_tile=c.pair_tile,
+            **self.tile_args("median_insert"),
         )
         if banked:
             out = out.reshape(k, b, p, h, w)
@@ -87,8 +86,7 @@ class TemporalMedianFilter(StreamingFilter):
         out = ops.median_combine(
             state[:count],
             backend=c.backend,
-            row_tile=c.row_tile,
-            pair_tile=c.pair_tile,
+            **self.tile_args("median_combine"),
         )
         if banked:
             out = out.reshape(b, p, h, w)

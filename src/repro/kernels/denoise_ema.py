@@ -32,7 +32,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.denoise_stream import _resolve_tiles
+from repro.tune.budget import resolve_tiles
 
 __all__ = ["ema_welford_step"]
 
@@ -105,7 +105,10 @@ def ema_welford_step(
     n = group_frames.shape[0]
     assert n == 2 * p, f"group has {n} frames for {p} state pairs"
     pairs = group_frames.reshape(p, 2, h, w)
-    th, tp = _resolve_tiles(p, h, w, row_tile, pair_tile)
+    th, tp = resolve_tiles(
+        "ema", p, h, w, row_tile, pair_tile,
+        in_dtype=group_frames.dtype, acc_dtype=ema.dtype,
+    )
     prior = jnp.full((1, 1), prior_count, dtype=ema.dtype)
     kernel = functools.partial(
         _ema_kernel,

@@ -33,7 +33,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.denoise_stream import _resolve_tiles
+from repro.tune.budget import resolve_tiles
 
 __all__ = ["median_window_insert", "median_combine"]
 
@@ -73,7 +73,10 @@ def median_window_insert(
     assert n == 2 * p, f"group has {n} frames for {p} window pairs"
     assert 0 <= slot < k_slots, f"slot {slot} outside window of {k_slots}"
     pairs = group_frames.reshape(p, 2, h, w)
-    th, tp = _resolve_tiles(p, h, w, row_tile, pair_tile)
+    th, tp = resolve_tiles(
+        "median_insert", p, h, w, row_tile, pair_tile,
+        in_dtype=group_frames.dtype, acc_dtype=window.dtype,
+    )
     kernel = functools.partial(_insert_kernel, offset=float(offset))
     slot_block = pl.BlockSpec(
         (None, tp, th, w), lambda k, hb: (slot, k, hb, 0)
@@ -127,7 +130,10 @@ def median_combine(
     (matching ``jnp.sort``-based fallback arithmetic exactly).
     """
     k_slots, p, h, w = window.shape
-    th, tp = _resolve_tiles(p, h, w, row_tile, pair_tile)
+    th, tp = resolve_tiles(
+        "median_combine", p, h, w, row_tile, pair_tile,
+        acc_dtype=window.dtype, window=k_slots,
+    )
     kernel = functools.partial(_median_kernel, count=k_slots)
     return pl.pallas_call(
         kernel,

@@ -29,7 +29,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.denoise_stream import _resolve_tiles
+from repro.tune.budget import resolve_tiles
 
 __all__ = ["multibank_subtract_average", "multibank_stream_step"]
 
@@ -81,7 +81,10 @@ def multibank_subtract_average(
     assert n % 2 == 0, "N must be even"
     p = n // 2
     pairs = frames.reshape(b, g, p, 2, h, w)
-    th, tp = _resolve_tiles(p, h, w, row_tile, pair_tile)
+    th, tp = resolve_tiles(
+        "stream", p, h, w, row_tile, pair_tile,
+        in_dtype=frames.dtype, acc_dtype=accum_dtype,
+    )
 
     kernel = functools.partial(
         _mb_kernel,
@@ -151,7 +154,10 @@ def multibank_stream_step(
     b, n, h, w = group_frames.shape
     p = n // 2
     pairs = group_frames.reshape(b, p, 2, h, w)
-    th, tp = _resolve_tiles(p, h, w, row_tile, pair_tile)
+    th, tp = resolve_tiles(
+        "stream", p, h, w, row_tile, pair_tile,
+        in_dtype=group_frames.dtype, acc_dtype=sum_frames.dtype,
+    )
     kernel = functools.partial(
         _mb_step_kernel,
         num_groups=num_groups,

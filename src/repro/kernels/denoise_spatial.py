@@ -32,7 +32,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.denoise_stream import _largest_divisor_leq
+from repro.tune.budget import resolve_tiles
 
 __all__ = ["spatial_filter_3x3"]
 
@@ -95,16 +95,16 @@ def spatial_filter_3x3(
     """(P, H, W) -> (P, H, W): 3×3 box or bilateral-lite smoothing per frame.
 
     ``row_tile`` must divide H; the default picks the largest divisor of H
-    within the VMEM budget (1-row tiles still work: the clamped neighbor
-    specs deliver single-row halos).
+    within the shared VMEM budget for the "spatial" family (three halo
+    views + the output block — the old private picker under-counted this
+    working set; 1-row tiles still work: the clamped neighbor specs
+    deliver single-row halos).
     """
     p, h, w = frames.shape
-    th = row_tile or _largest_divisor_leq(h, max(2, 2**18 // max(1, 3 * w * 4)))
-    if h % th:
-        raise ValueError(f"row_tile {th} must divide H={h}")
-    tp = pair_tile or _largest_divisor_leq(p, max(1, 2**20 // (4 * th * w * 4)))
-    if p % tp:
-        raise ValueError(f"pair_tile {tp} must divide N/2={p}")
+    th, tp = resolve_tiles(
+        "spatial", p, h, w, row_tile, pair_tile,
+        in_dtype=frames.dtype, acc_dtype=frames.dtype,
+    )
     nhb = h // th
     kernel = functools.partial(
         _spatial_kernel,

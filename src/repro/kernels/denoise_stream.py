@@ -37,67 +37,36 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.tune.budget import resolve_tiles
+
 __all__ = ["alg3_subtract_average", "alg3_stream_step"]
 
-_VMEM_BUDGET = 2**21  # ~2 MiB of the ~16 MiB VMEM for the working set
-
-
-def _largest_divisor_leq(n: int, cap: int) -> int:
-    """Largest exact divisor of ``n`` that is <= ``cap`` (>= 1)."""
-    cap = max(1, min(n, cap))
-    best = 1
-    d = 1
-    while d * d <= n:
-        if n % d == 0:
-            for cand in (d, n // d):
-                if cand <= cap:
-                    best = max(best, cand)
-        d += 1
-    return best
-
-
-def _pick_row_tile(
-    h: int, w: int, *, dtype_bytes: int = 4, vmem_budget: int = _VMEM_BUDGET
-) -> int:
-    """Rows per tile so that ~3 tiles (2 input frames + accum) fit the budget.
-
-    The tile must divide H exactly (interpret-mode friendliness; on TPU it
-    also avoids masked edge blocks). We take the largest exact divisor of H
-    within the budget rather than decrementing from a power-of-two-aligned
-    value: the old decrement loop skipped every divisor between the aligned
-    value and the budget (H=66 with a 40-row budget degraded to 22-row — or
-    for awkward heights 1-row — tiles where 33 fits).
-    """
-    rows = max(1, vmem_budget // max(1, 3 * w * dtype_bytes))
-    if rows >= h:
-        return h
-    return _largest_divisor_leq(h, rows)
-
-
-def _pick_pair_tile(
-    p: int,
-    row_tile: int,
-    w: int,
-    *,
-    dtype_bytes: int = 4,
-    vmem_budget: int = _VMEM_BUDGET,
-) -> int:
-    """Frame pairs per block: fill the VMEM budget with (2 in + 1 accum) tiles."""
-    per_pair = 3 * row_tile * w * dtype_bytes
-    budget = max(1, vmem_budget // max(1, per_pair))
-    return _largest_divisor_leq(p, budget)
+# Backwards-compatible re-exports: the tile pickers now live in the shared
+# per-family budget model (repro.tune.budget). The legacy names keep the
+# old 3-tile/4-byte semantics for callers that sized budgets against them.
+from repro.tune.budget import (  # noqa: F401  (compat re-exports)
+    VMEM_BUDGET as _VMEM_BUDGET,
+    largest_divisor_leq as _largest_divisor_leq,
+    legacy_pick_pair_tile as _pick_pair_tile,
+    legacy_pick_row_tile as _pick_row_tile,
+)
 
 
 def _resolve_tiles(
-    p: int, h: int, w: int, row_tile: int | None, pair_tile: int | None
+    p: int,
+    h: int,
+    w: int,
+    row_tile: int | None,
+    pair_tile: int | None,
+    *,
+    in_dtype="uint16",
+    acc_dtype="float32",
 ) -> tuple[int, int]:
-    th = row_tile or _pick_row_tile(h, w)
-    if h % th:
-        raise ValueError(f"row_tile {th} must divide H={h}")
-    tp = pair_tile or _pick_pair_tile(p, th, w)
-    if p % tp:
-        raise ValueError(f"pair_tile {tp} must divide N/2={p}")
-    return th, tp
+    """Alg 3 ("stream" family) tiles via the shared budget model."""
+    return resolve_tiles(
+        "stream", p, h, w, row_tile, pair_tile,
+        in_dtype=in_dtype, acc_dtype=acc_dtype,
+    )
 
 
 def _alg3_kernel(f_ref, o_ref, *, num_groups: int, offset: float, divide_first: bool):
@@ -152,7 +121,10 @@ def alg3_subtract_average(
     assert n % 2 == 0, "N must be even"
     p = n // 2
     pairs = frames.reshape(g, p, 2, h, w)
-    th, tp = _resolve_tiles(p, h, w, row_tile, pair_tile)
+    th, tp = _resolve_tiles(
+        p, h, w, row_tile, pair_tile,
+        in_dtype=frames.dtype, acc_dtype=accum_dtype,
+    )
 
     kernel = functools.partial(
         _alg3_kernel,
@@ -223,7 +195,10 @@ def alg3_stream_step(
     n, h, w = group_frames.shape
     p = n // 2
     pairs = group_frames.reshape(p, 2, h, w)
-    th, tp = _resolve_tiles(p, h, w, row_tile, pair_tile)
+    th, tp = _resolve_tiles(
+        p, h, w, row_tile, pair_tile,
+        in_dtype=group_frames.dtype, acc_dtype=sum_frame.dtype,
+    )
     kernel = functools.partial(
         _alg3_step_kernel,
         num_groups=num_groups,

@@ -29,7 +29,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.denoise_stream import _pick_row_tile
+from repro.tune.budget import pick_row_tile
 
 __all__ = ["alg1_subtract_average", "alg2_subtract_average"]
 
@@ -139,7 +139,9 @@ def alg2_subtract_average(
 ):
     """Algorithm 2: burst-mode writes (large tiles), row-granular reads."""
     g, n, h, w = frames.shape
-    th = row_tile or _pick_row_tile(h, w)
+    th = row_tile or pick_row_tile(
+        "stream", h, w, in_dtype=frames.dtype, acc_dtype=accum_dtype
+    )
     return _two_pass(
         frames,
         offset=offset,

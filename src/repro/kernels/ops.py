@@ -23,10 +23,19 @@ This module is the backend boundary: everything above it —
 ``repro.core.denoise`` (config + streaming state), the executors in
 ``repro.core.streaming`` (inline / ring-pipelined / buffered), and
 ``repro.core.banks`` — dispatches through these entry points and never
-imports a kernel module directly. ``ALGORITHMS`` / ``BACKENDS`` enumerate
-the valid ``algorithm`` / ``backend`` strings accepted everywhere a
-``DenoiseConfig`` is consumed. See docs/ARCHITECTURE.md for the full
-layer map.
+imports a kernel module directly. ``ALGORITHMS`` / ``BACKENDS`` /
+``TILE_PLANS`` enumerate the valid ``algorithm`` / ``backend`` /
+``tile_plan`` strings accepted everywhere a ``DenoiseConfig`` is
+consumed. See docs/ARCHITECTURE.md for the full layer map.
+
+**Block geometry** (``row_tile`` / ``pair_tile``) is static at every
+entry point. Callers resolve it once at config time via the tuning layer
+(``repro.tune``): ``tile_plan="heuristic"`` passes ``None`` through and
+the kernels fall back to the shared per-family VMEM budget model
+(``repro.tune.budget``); ``tile_plan="auto"`` passes a measured (or
+plan-cache-replayed) geometry; an explicit path replays a pre-built plan
+file. Either way the values arriving here are plain static ints — a
+resolved plan can never retrace a jitted step mid-stream.
 """
 
 from __future__ import annotations
@@ -50,6 +59,7 @@ __all__ = [
     "ALGORITHMS",
     "BACKENDS",
     "SPATIAL_MODES",
+    "TILE_PLANS",
     "subtract_average",
     "stream_init",
     "stream_step",
@@ -67,6 +77,9 @@ __all__ = [
 ALGORITHMS = ("alg1", "alg2", "alg3", "alg3_v2")
 BACKENDS = ("auto", "pallas", "xla")
 SPATIAL_MODES = ("box", "bilateral")
+# tile-plan modes; any other (non-empty) string is a pre-built plan-file
+# path replayed by repro.tune.resolve_plan
+TILE_PLANS = ("heuristic", "auto")
 
 
 def _on_tpu() -> bool:

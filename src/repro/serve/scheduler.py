@@ -42,8 +42,15 @@ Topology (one ``_SlotExecutor`` shown; the scheduler pools several)::
   fresh ``jnp.stack`` per group.
 * **Compatibility.** Sessions share an executor iff their configs'
   ``DenoiseConfig.stream_key()`` match (same filter, shapes, parameters —
-  scheduling-only fields excluded). Unlike keys get their own executor
-  from the pool.
+  scheduling-only fields excluded; ``tile_plan`` participates, so
+  differently-planned streams never co-batch). Unlike keys get their own
+  executor from the pool.
+* **Tile plans.** ``banked_filter_init`` constructs the executor's filter
+  exactly once, which is where ``config.tile_plan`` resolves
+  (``repro.tune.resolve_plan`` — measured/cached geometry under
+  ``"auto"``). The resolved plan is static for the executor's lifetime:
+  cohort steps never re-resolve, so the no-retrace guarantee above also
+  covers tuned plans.
 * **Admission control.** ``max_sessions`` caps in-flight sessions
   (queued + active); a matching executor whose join queue is already
   ``max_waiting`` deep rejects too. Both raise :class:`AdmissionError`.

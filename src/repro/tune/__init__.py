@@ -1,0 +1,114 @@
+"""Tuning layer: budget model, measured autotuner, persistent plan cache.
+
+``DenoiseConfig.tile_plan`` selects the mode and this package resolves it
+**once per config** (in-process memoized) into an immutable
+:class:`~repro.tune.plan.Plan` of static kernel geometry and executor
+knobs:
+
+* ``"heuristic"`` (default) — no plan: every kernel falls through to the
+  shared per-family VMEM budget model (``repro.tune.budget``), which the
+  five kernel files call instead of their old private pickers. Output is
+  bit-identical to the pre-tuner pipeline.
+* ``"auto"`` — tune-or-cache-hit: consult the persistent JSON plan cache
+  (``repro.tune.cache``); on a miss, run the measured search
+  (``repro.tune.autotune``) on the real jitted entry points and persist
+  the winner. A cache hit performs no measurement.
+* any other string — a path to a pre-built plan file (the cache format);
+  replayed without measuring, falling back to the heuristic when the
+  file is stale/malformed.
+
+Resolution happens where configs become executors — filter construction
+(``repro.denoise.base``), ``StreamingDenoiser``, ``banked_filter_init``,
+the session service — never inside a step, so plans are always static
+jit arguments and the compiled step is never retraced mid-stream.
+"""
+
+from __future__ import annotations
+
+import os
+
+from repro.tune import budget
+from repro.tune.cache import PlanCache, default_cache_path
+from repro.tune.plan import HEURISTIC_PLAN, Plan, TileGeom
+
+__all__ = [
+    "budget",
+    "Plan",
+    "TileGeom",
+    "PlanCache",
+    "HEURISTIC_PLAN",
+    "default_cache_path",
+    "resolve_plan",
+    "tile_args",
+    "clear_plan_memo",
+]
+
+
+def _plan_request(config) -> tuple:
+    """Hashable identity of everything a plan resolution depends on.
+
+    Reads duck-typed configs with ``getattr`` so ``repro.denoise`` filter
+    tests can pass lightweight stand-ins. The cache path is part of the
+    key: pointing ``REPRO_TUNE_CACHE_PATH`` somewhere else must not
+    replay a plan memoized for another store.
+    """
+    get = lambda k, d: getattr(config, k, d)  # noqa: E731
+    return (
+        str(get("tile_plan", "heuristic")),
+        str(default_cache_path()),
+        str(get("filter_name", "pair_average")),
+        str(get("backend", "auto")),
+        int(get("frames_per_group", 0) or 0),
+        int(get("height", 0) or 0),
+        int(get("width", 0) or 0),
+        int(get("num_groups", 0) or 0),
+        str(get("accum_dtype", "float32")),
+        int(get("median_window", 1) or 1),
+        str(get("spatial_mode", "bilateral")),
+    )
+
+
+_MEMO: dict[tuple, Plan] = {}
+
+
+def clear_plan_memo() -> None:
+    """Drop the in-process plan memo (tests; never needed in production)."""
+    _MEMO.clear()
+
+
+def resolve_plan(config) -> Plan:
+    """Resolve ``config.tile_plan`` to a :class:`Plan`, memoized per config."""
+    mode = getattr(config, "tile_plan", "heuristic")
+    if mode in (None, "heuristic"):
+        return HEURISTIC_PLAN
+    req = _plan_request(config)
+    plan = _MEMO.get(req)
+    if plan is None:
+        from repro.tune import autotune  # lazy: keeps kernel imports light
+
+        if mode == "auto":
+            plan = autotune.tune_plan(config)
+        else:
+            plan = autotune.plan_from_file(config, os.fspath(mode))
+        _MEMO[req] = plan
+    return plan
+
+
+def tile_args(config, family: str, plan: Plan | None = None) -> dict:
+    """ops-call tile kwargs for ``family`` under ``config``'s plan.
+
+    Precedence: explicit ``config.row_tile``/``pair_tile`` overrides beat
+    the plan (they are the operator's escape hatch and the pre-tuner
+    API); otherwise the resolved plan's geometry for ``family``; otherwise
+    ``None``s (the kernels' shared budget heuristic).
+
+    Callers that already hold their resolved plan (filters cache it at
+    construction) pass it via ``plan`` so the hot step path never touches
+    the resolver again — the no-mid-stream-retrace guarantee is then
+    structural, not dependent on the memo staying warm.
+    """
+    row = getattr(config, "row_tile", None)
+    pair = getattr(config, "pair_tile", None)
+    if row is not None or pair is not None:
+        return {"row_tile": row, "pair_tile": pair}
+    return (plan or resolve_plan(config)).tile_args(family)

@@ -1,0 +1,455 @@
+"""Measured autotuner: search block geometry and executor knobs by timing.
+
+The paper's burst lengths and buffer geometry are design-space-exploration
+outputs, not constants; related HLS work (hyperspectral-inversion and
+bilateral-grid FPGA implementations) makes the same point. This module is
+that exploration loop for the jax_pallas port:
+
+* **Kernel geometry** — for each kernel family a config uses, a small
+  candidate set of (row_tile, pair_tile) blocks is generated *around* the
+  shared budget model (``repro.tune.budget``): the budget point itself,
+  the legacy pre-tuner pick, half/double-budget neighbours, and the
+  full-problem block. Each candidate is timed on the **real** jitted
+  entry point (``repro.kernels.ops``) at the config's true shape — a few
+  warmed-up steps, not a model — and the argmin wins. The heuristic is
+  always in the candidate set, so a tuned plan can only beat or match it
+  (modulo run-to-run noise).
+* **Executor knobs** — ring depth (``num_slots``) is timed through short
+  ``run_pipelined`` replays of device-resident chunks under a small
+  injected readout burst (the table9 regime, miniaturized), and
+  ``frames_per_chunk`` records the staging chunk length whose per-frame
+  step cost measured lowest (advisory: the numeric stream fixes N, but
+  acquisition-side burst sizing can follow it).
+
+Results are memoized in-process and persisted through
+``repro.tune.cache.PlanCache``; a cache hit performs **no measurement**.
+Tile search only runs for the ``pallas`` backend — XLA ignores block
+geometry, so its plans carry heuristic tiles and only executor knobs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Iterator
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops
+from repro.tune import budget
+from repro.tune.cache import PlanCache
+from repro.tune.plan import Plan, TileGeom, exec_key, family_key
+
+__all__ = ["filter_families", "tile_candidates", "tune_plan", "plan_from_file"]
+
+#: input container dtype plans are measured with (the paper's mono12-in-u16)
+IN_DTYPE = "uint16"
+
+_WARMUP_STEPS = 1
+_TIMED_STEPS = 3
+_EXEC_CHUNKS = 5
+_EXEC_DEPTHS = (1, 2, 3)
+_BURST_COMPUTE_MULT = 2.5
+#: a tile candidate must beat the heuristic by this fraction to displace
+#: it; a ring depth must beat the ping-pong default by _DEPTH_MARGIN.
+#: Below the margin the difference is treated as measurement noise and
+#: the default wins — "tuned >= heuristic (within noise)" by construction.
+_TILE_MARGIN = 0.05
+_DEPTH_MARGIN = 0.10
+#: full-problem-block candidates above this working set never enter the
+#: search (half of the ~16 MiB/core VMEM: blocks are double-buffered)
+_FULL_BLOCK_CAP = 2**23
+
+
+def filter_families(config) -> list[tuple[str, int]]:
+    """(kernel family, window length) pairs the config's filter dispatches to."""
+    name = getattr(config, "filter_name", "pair_average")
+    k = int(getattr(config, "median_window", 1) or 1)
+    return {
+        "pair_average": [("stream", 1)],
+        "temporal_median": [("median_insert", 1), ("median_combine", k)],
+        "ema_variance": [("ema", 1)],
+        "spatial_box": [("stream", 1), ("spatial", 1)],
+    }.get(name, [("stream", 1)])
+
+
+def tile_candidates(
+    family: str,
+    p: int,
+    h: int,
+    w: int,
+    *,
+    in_dtype=IN_DTYPE,
+    acc_dtype="float32",
+    window: int = 1,
+) -> list[tuple[int, int]]:
+    """Small measured-search candidate set around the budget point."""
+    kw = dict(in_dtype=in_dtype, acc_dtype=acc_dtype, window=window)
+    cands: list[tuple[int, int]] = []
+
+    def add(th: int, tp: int) -> None:
+        if h % th == 0 and p % tp == 0 and (th, tp) not in cands:
+            cands.append((th, tp))
+
+    add(*budget.resolve_tiles(family, p, h, w, **kw))
+    th_legacy = budget.legacy_pick_row_tile(h, w)
+    add(th_legacy, budget.legacy_pick_pair_tile(p, th_legacy, w))
+    for mult in (0.5, 2.0):
+        add(*budget.resolve_tiles(
+            family, p, h, w, vmem_budget=int(budget.VMEM_BUDGET * mult), **kw
+        ))
+    # full-problem block (one grid step) — only when its working set
+    # actually fits on-chip: at paper scale it is ~123 MB and would fail
+    # Mosaic compilation on real TPU, so it must never enter the search
+    if budget.block_bytes(family, h, p, w, **kw) <= _FULL_BLOCK_CAP:
+        add(h, p)
+    return cands[:6]
+
+
+# ---------------------------------------------------------------------------
+# Per-family timers: chained real steps through the ops dispatch boundary.
+# ---------------------------------------------------------------------------
+
+
+def _time_chain(step: Callable, state, warmup=_WARMUP_STEPS, iters=_TIMED_STEPS):
+    """Median-free min-of-chain timing: state threads through ``step``."""
+    for _ in range(warmup):
+        state = step(state)
+    jax.block_until_ready(state)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        state = step(state)
+    jax.block_until_ready(state)
+    return (time.perf_counter() - t0) / iters
+
+
+def _chunk(n: int, h: int, w: int, dtype=IN_DTYPE) -> jnp.ndarray:
+    rng = np.random.default_rng(0)
+    return jnp.asarray(rng.integers(0, 4096, (n, h, w)), jnp.dtype(dtype))
+
+
+def family_timer(family: str, config, backend: str) -> Callable[[int, int], float]:
+    """seconds-per-step timer for one kernel family at the config's shape."""
+    n = int(config.frames_per_group)
+    p, h, w = n // 2, int(config.height), int(config.width)
+    acc = jnp.dtype(getattr(config, "accum_dtype", "float32"))
+    g = int(getattr(config, "num_groups", 8))
+    offset = float(getattr(config, "offset", 4096.0))
+    chunk = _chunk(n, h, w)
+
+    if family == "stream":
+        def timer(th, tp):
+            def step(state):
+                return ops.stream_step(
+                    state, chunk, num_groups=g, offset=offset,
+                    backend=backend, row_tile=th, pair_tile=tp,
+                )
+            return _time_chain(step, ops.stream_init(n, h, w, acc))
+        return timer
+
+    if family == "median_insert":
+        k = int(getattr(config, "median_window", 5))
+        def timer(th, tp):
+            def step(window):
+                return ops.median_window_insert(
+                    window, chunk, slot=0, offset=offset,
+                    backend=backend, row_tile=th, pair_tile=tp,
+                )
+            return _time_chain(step, jnp.zeros((k, p, h, w), acc))
+        return timer
+
+    if family == "median_combine":
+        k = int(getattr(config, "median_window", 5))
+        window = jnp.asarray(
+            np.random.default_rng(1).uniform(0, 4096, (k, p, h, w)), acc
+        )
+        def timer(th, tp):
+            def step(_):
+                return ops.median_combine(
+                    window, backend=backend, row_tile=th, pair_tile=tp
+                )
+            return _time_chain(step, None)
+        return timer
+
+    if family == "ema":
+        alpha = float(getattr(config, "ema_alpha", 0.25))
+        def timer(th, tp):
+            def step(state):
+                return ops.ema_welford_step(
+                    *state, chunk, alpha=alpha, offset=offset, prior_count=p,
+                    backend=backend, row_tile=th, pair_tile=tp,
+                )
+            init = (
+                jnp.zeros((p, h, w), acc),
+                jnp.zeros((h, w), acc),
+                jnp.zeros((h, w), acc),
+            )
+            return _time_chain(step, init)
+        return timer
+
+    if family == "spatial":
+        mode = getattr(config, "spatial_mode", "bilateral")
+        sigma = float(getattr(config, "spatial_range_sigma", 60.0))
+        frames = jnp.asarray(
+            np.random.default_rng(2).uniform(0, 4096, (p, h, w)), acc
+        )
+        def timer(th, tp):
+            def step(_):
+                return ops.spatial_filter(
+                    frames, mode=mode, range_sigma=sigma,
+                    backend=backend, row_tile=th, pair_tile=tp,
+                )
+            return _time_chain(step, None)
+        return timer
+
+    raise ValueError(
+        f"kernel family must be one of {tuple(budget.KERNEL_FAMILIES)}, "
+        f"got {family!r}"
+    )
+
+
+# ---------------------------------------------------------------------------
+# Executor-knob search (ring depth + advisory staging chunk length).
+# ---------------------------------------------------------------------------
+
+
+def _bursty(chunks: list, burst_s: float, every: int = 3) -> Iterator:
+    for i, chunk in enumerate(chunks):
+        if i % every == every - 1:
+            time.sleep(burst_s)
+        yield chunk
+
+
+def tune_exec_knobs(config) -> dict:
+    """Measure ring depth and per-frame-optimal chunk length for ``config``.
+
+    Only called for real ``DenoiseConfig``-style dataclasses (the replica
+    it times through ``run_pipelined`` is built with ``dataclasses.replace``
+    pinned to ``tile_plan='heuristic'``, which also breaks the resolve ->
+    tune -> executor -> resolve recursion).
+    """
+    from repro.core.streaming import run_pipelined  # lazy: avoids cycle
+
+    base = dataclasses.replace(config, tile_plan="heuristic", num_banks=1)
+    n, h, w = base.frames_per_group, base.height, base.width
+    chunks = [jax.device_put(_chunk(n, h, w)) for _ in range(_EXEC_CHUNKS)]
+    jax.block_until_ready(chunks)
+    replay = dataclasses.replace(base, num_groups=len(chunks))
+
+    run_pipelined(replay, iter(chunks[:2]), num_slots=1)  # warm the jit
+    t0 = time.perf_counter()
+    run_pipelined(replay, iter(chunks), num_slots=1)  # calibrate the burst
+    burst_s = max(
+        _BURST_COMPUTE_MULT * (time.perf_counter() - t0) / len(chunks), 0.002
+    )
+    # two round-robined passes per depth (pooled): interleaving exposes
+    # every depth to the same transient host load (the table9 discipline)
+    depth_s = {d: 0.0 for d in _EXEC_DEPTHS}
+    for _ in range(2):
+        for depth in _EXEC_DEPTHS:
+            _, rep = run_pipelined(
+                replay, _bursty(chunks, burst_s), num_slots=depth,
+                policy="block",
+            )
+            depth_s[depth] += rep.elapsed_s
+    best = min(depth_s, key=depth_s.get)
+    # conservative selection (see _DEPTH_MARGIN): genuine depth wins under
+    # readout bursts are large (table9: ~1.3x), noise is not
+    if 2 in depth_s and depth_s[best] > depth_s[2] * (1.0 - _DEPTH_MARGIN):
+        best = 2
+
+    # advisory staging chunk length: per-frame cost of THIS filter's own
+    # per-group step at even sub-chunk lengths of N (acquisition burst
+    # sizing, not numerics) — its primary kernel family, not pair_average's
+    fam, window = filter_families(base)[0]
+    per_frame = {}
+    for c in sorted({n} | {n // k for k in (2, 5) if n % k == 0 and (n // k) % 2 == 0}):
+        timer = family_timer(
+            fam, dataclasses.replace(replay, frames_per_group=c),
+            backend=base.backend,
+        )
+        th, tp = budget.resolve_tiles(fam, c // 2, h, w, window=window)
+        per_frame[c] = timer(th, tp) / c
+    return {
+        "num_slots": best,
+        "frames_per_chunk": min(per_frame, key=per_frame.get),
+        "depth_s": {str(k): round(v, 5) for k, v in depth_s.items()},
+        "per_frame_us": {str(k): round(v * 1e6, 3) for k, v in per_frame.items()},
+    }
+
+
+# ---------------------------------------------------------------------------
+# Plan assembly: tune-or-cache-hit ("auto") and pre-built file (path mode).
+# ---------------------------------------------------------------------------
+
+
+def _resolved_backend(config) -> str:
+    return ops._resolve(getattr(config, "backend", "auto"))
+
+
+def _geom_valid(entry: dict, p: int, h: int) -> bool:
+    th, tp = entry.get("row_tile"), entry.get("pair_tile")
+    return (
+        isinstance(th, int) and isinstance(tp, int)
+        and th > 0 and tp > 0 and h % th == 0 and p % tp == 0
+    )
+
+
+def _exec_valid(entry: dict) -> dict:
+    """Sanitize a cached/replayed executor-knob entry.
+
+    Same contract as ``_geom_valid`` for tiles: a stale, hand-edited or
+    future-schema entry must degrade to the config defaults, never crash
+    ``run_pipelined`` (e.g. ``RingBuffer(-2)``). Returns only the knobs
+    that validate."""
+    out = {}
+    slots = entry.get("num_slots")
+    if isinstance(slots, int) and 1 <= slots <= 64:
+        out["num_slots"] = slots
+    fpc = entry.get("frames_per_chunk")
+    if isinstance(fpc, int) and fpc >= 2 and fpc % 2 == 0:
+        out["frames_per_chunk"] = fpc
+    return out
+
+
+def tune_plan(config, cache: PlanCache | None = None) -> Plan:
+    """Tune-or-cache-hit: the ``tile_plan='auto'`` resolution path."""
+    cache = cache or PlanCache()
+    backend = _resolved_backend(config)
+    n = int(config.frames_per_group)
+    p, h, w = n // 2, int(config.height), int(config.width)
+    acc = str(jnp.dtype(getattr(config, "accum_dtype", "float32")))
+    measured = False
+    hits = 0
+
+    tiles = []
+    if backend == "pallas":  # XLA has no block geometry to search
+        for family, window in filter_families(config):
+            key = family_key(
+                family, p, h, w, in_dtype=IN_DTYPE, acc_dtype=acc,
+                backend=backend, window=window,
+            )
+            entry = cache.get(key)
+            if entry is not None and _geom_valid(entry, p, h):
+                hits += 1
+            if entry is None or not _geom_valid(entry, p, h):
+                timer = family_timer(family, config, backend)
+                cands = tile_candidates(
+                    family, p, h, w, acc_dtype=acc, window=window
+                )
+                heur = cands[0]  # budget-model pick, always first
+                # two round-robined passes, min per candidate: transient
+                # host load hits every candidate instead of biasing one.
+                # A candidate that fails to compile/run (e.g. a geometry
+                # Mosaic rejects on real TPU) is dropped, never fatal —
+                # only the heuristic itself failing propagates.
+                timed = {geom: float("inf") for geom in cands}
+                for _ in range(2):
+                    for geom in list(timed):
+                        try:
+                            timed[geom] = min(timed[geom], timer(*geom))
+                        except Exception:
+                            if geom == heur:
+                                raise
+                            del timed[geom]
+                best = min(timed, key=timed.get)
+                # conservative selection: replacing the heuristic needs a
+                # real margin, or measurement noise gets cached as a "win"
+                if timed[best] > timed[heur] * (1.0 - _TILE_MARGIN):
+                    best = heur
+                entry = {
+                    "row_tile": best[0],
+                    "pair_tile": best[1],
+                    "measured_s": round(timed[best], 6),
+                    "candidates": {
+                        f"{g[0]}x{g[1]}": round(s, 6) for g, s in timed.items()
+                    },
+                    "timestamp": time.time(),
+                }
+                cache.put(key, entry)
+                measured = True
+            tiles.append(
+                (family, TileGeom(entry["row_tile"], entry["pair_tile"]))
+            )
+
+    ek = exec_key(
+        getattr(config, "filter_name", "pair_average"),
+        int(getattr(config, "num_groups", 8)), n, h, w, backend=backend,
+    )
+    exec_entry = cache.get(ek)
+    if exec_entry is not None:
+        hits += 1
+    elif dataclasses.is_dataclass(config):
+        exec_entry = tune_exec_knobs(config)
+        exec_entry["timestamp"] = time.time()
+        cache.put(ek, exec_entry)
+        measured = True
+    knobs = _exec_valid(exec_entry or {})
+    # provenance: "tuned" if anything was measured this resolution,
+    # "cache" only if the persistent store actually served something,
+    # else "heuristic" (nothing to search for this backend/config shape)
+    source = "tuned" if measured else ("cache" if hits else "heuristic")
+    return Plan(
+        mode="auto",
+        tiles=tuple(tiles),
+        num_slots=knobs.get("num_slots"),
+        frames_per_chunk=knobs.get("frames_per_chunk"),
+        source=source,
+    )
+
+
+def plan_from_file(config, path: str) -> Plan:
+    """Explicit-path mode: replay a pre-built plan file, never measure.
+
+    A missing file is a caller error (``ValueError``); a malformed or
+    stale file falls back to the heuristic plan (never crashes), matching
+    the cache contract.
+    """
+    cache = PlanCache(path)
+    if not cache.path.exists():
+        raise ValueError(
+            f"tile_plan plan file {path!r} does not exist (tile_plan must "
+            "be 'heuristic', 'auto', or a path to a plan-cache JSON file)"
+        )
+    cache._load()
+    if cache.stale:
+        import warnings
+
+        warnings.warn(
+            f"plan file {path!r} is malformed or from another schema "
+            "version; falling back to the heuristic plan",
+            RuntimeWarning,
+            stacklevel=2,
+        )
+        return Plan(mode=path, source="heuristic")
+    backend = _resolved_backend(config)
+    n = int(config.frames_per_group)
+    p, h, w = n // 2, int(config.height), int(config.width)
+    acc = str(jnp.dtype(getattr(config, "accum_dtype", "float32")))
+    tiles = []
+    for family, window in filter_families(config):
+        entry = cache.get(
+            family_key(
+                family, p, h, w, in_dtype=IN_DTYPE, acc_dtype=acc,
+                backend=backend, window=window,
+            )
+        )
+        if entry is not None and _geom_valid(entry, p, h):
+            tiles.append(
+                (family, TileGeom(entry["row_tile"], entry["pair_tile"]))
+            )
+    knobs = _exec_valid(cache.get(
+        exec_key(
+            getattr(config, "filter_name", "pair_average"),
+            int(getattr(config, "num_groups", 8)), n, h, w, backend=backend,
+        )
+    ) or {})
+    return Plan(
+        mode=path,
+        tiles=tuple(tiles),
+        num_slots=knobs.get("num_slots"),
+        frames_per_chunk=knobs.get("frames_per_chunk"),
+        source=path,
+    )

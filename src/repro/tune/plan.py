@@ -1,0 +1,123 @@
+"""Plan objects: the static tuning decisions a config resolves to.
+
+A :class:`Plan` bundles per-kernel-family block geometry
+(:class:`TileGeom`) with executor knobs (ring depth, advisory staging
+chunk length). Plans are immutable and resolved **once at config time**
+(``repro.tune.resolve_plan``); every value in them is a Python int fed to
+the jitted entry points as *static* arguments, so a resolved plan can
+never retrace a streaming step mid-stream.
+
+Cache keys deliberately over-specify: a plan measured for one
+(kernel family, problem shape, dtypes, backend, device kind, jax version)
+tuple is only ever replayed for exactly that tuple — anything else is a
+cache miss and re-tunes (or falls back to the heuristic).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+
+__all__ = [
+    "TileGeom",
+    "Plan",
+    "HEURISTIC_PLAN",
+    "family_key",
+    "exec_key",
+]
+
+#: bump when the on-disk entry layout changes; readers treat any other
+#: version as stale (fall back to heuristic / re-tune, never crash)
+SCHEMA_VERSION = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class TileGeom:
+    """Block geometry for one kernel family (None = kernel heuristic)."""
+
+    row_tile: int | None = None
+    pair_tile: int | None = None
+
+    def as_args(self) -> dict:
+        return {"row_tile": self.row_tile, "pair_tile": self.pair_tile}
+
+
+@dataclasses.dataclass(frozen=True)
+class Plan:
+    """Resolved tuning decisions for one config.
+
+    ``tiles`` maps kernel family -> :class:`TileGeom`; families absent
+    from the map run the shared budget heuristic. ``num_slots`` /
+    ``frames_per_chunk`` are the executor knobs (None = config default).
+    ``source`` records provenance: ``heuristic``, ``tuned``, ``cache``,
+    or the plan-file path.
+    """
+
+    mode: str = "heuristic"            # heuristic | auto | <path>
+    tiles: tuple = ()                  # ((family, TileGeom), ...) — hashable
+    num_slots: int | None = None
+    frames_per_chunk: int | None = None
+    source: str = "heuristic"
+
+    def tile_args(self, family: str) -> dict:
+        """ops-call kwargs for ``family`` (row_tile/pair_tile or Nones)."""
+        for fam, geom in self.tiles:
+            if fam == family:
+                return geom.as_args()
+        return {"row_tile": None, "pair_tile": None}
+
+    def describe(self) -> str:
+        parts = [f"mode={self.mode}", f"source={self.source}"]
+        for fam, geom in self.tiles:
+            parts.append(f"{fam}=({geom.row_tile},{geom.pair_tile})")
+        if self.num_slots is not None:
+            parts.append(f"num_slots={self.num_slots}")
+        if self.frames_per_chunk is not None:
+            parts.append(f"frames_per_chunk={self.frames_per_chunk}")
+        return ";".join(parts)
+
+
+HEURISTIC_PLAN = Plan()
+
+
+def _device_kind() -> str:
+    try:
+        return jax.devices()[0].device_kind.replace(" ", "_")
+    except Exception:  # pragma: no cover - no devices at all
+        return "unknown"
+
+
+def family_key(
+    family: str,
+    p: int,
+    h: int,
+    w: int,
+    *,
+    in_dtype: str,
+    acc_dtype: str,
+    backend: str,
+    window: int = 1,
+) -> str:
+    """Persistent-cache key for one kernel family's geometry."""
+    return (
+        f"v{SCHEMA_VERSION}/{family}/p{p}h{h}w{w}k{window}/"
+        f"{in_dtype}->{acc_dtype}/{backend}/{_device_kind()}/"
+        f"jax{jax.__version__}"
+    )
+
+
+def exec_key(
+    filter_name: str,
+    g: int,
+    n: int,
+    h: int,
+    w: int,
+    *,
+    backend: str,
+) -> str:
+    """Persistent-cache key for the executor knobs of one stream shape."""
+    return (
+        f"v{SCHEMA_VERSION}/exec/{filter_name}/g{g}n{n}h{h}w{w}/"
+        f"{backend}/{_device_kind()}/jax{jax.__version__}"
+    )

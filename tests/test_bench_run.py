@@ -40,10 +40,12 @@ def test_unknown_only_raises_through_main():
 
 def test_select_substring_matches():
     assert [n for n, _ in bench_run.select("table11")] == ["table11-multitenant"]
+    assert [n for n, _ in bench_run.select("table12")] == ["table12-autotune"]
     assert [n for n, _ in bench_run.select("table1")] == [
         "table1",
         "table10-zoo",
         "table11-multitenant",
+        "table12-autotune",
     ]
     assert bench_run.select(None) == bench_run.MODULES
 
@@ -61,18 +63,19 @@ def _with_path(tmp_path, monkeypatch, name="bench.json"):
 
 def test_bench_record_appends(tmp_path, monkeypatch):
     path = _with_path(tmp_path, monkeypatch)
-    common.bench_record("first", speedup=2.0)
-    common.bench_record("second", config={"G": 8}, speedup=3.0)
+    common.bench_record("first", "speedup", speedup=2.0)
+    common.bench_record("second", kind="speedup", config={"G": 8}, speedup=3.0)
     records = json.loads(path.read_text())
     assert [r["name"] for r in records] == ["first", "second"]
     assert records[1]["config"] == {"G": 8}
     assert all("timestamp" in r for r in records)
+    assert all(r["kind"] == "speedup" for r in records)
 
 
 def test_bench_record_replaces_corrupt_file(tmp_path, monkeypatch):
     path = _with_path(tmp_path, monkeypatch)
     path.write_text('[{"name": "truncated-by-a-crash"')  # invalid JSON
-    common.bench_record("fresh")
+    common.bench_record("fresh", "speedup")
     records = json.loads(path.read_text())
     assert [r["name"] for r in records] == ["fresh"]
 
@@ -80,7 +83,7 @@ def test_bench_record_replaces_corrupt_file(tmp_path, monkeypatch):
 def test_bench_record_leaves_no_temp_droppings(tmp_path, monkeypatch):
     path = _with_path(tmp_path, monkeypatch)
     for i in range(5):
-        common.bench_record(f"p{i}")
+        common.bench_record(f"p{i}", "speedup")
     leftovers = [p for p in tmp_path.iterdir() if p != path]
     assert leftovers == []
 
@@ -96,7 +99,7 @@ def test_bench_record_concurrent_writers_never_corrupt(tmp_path, monkeypatch):
     def writer(tag):
         try:
             for i in range(20):
-                common.bench_record(f"{tag}-{i}")
+                common.bench_record(f"{tag}-{i}", "speedup")
                 if path.exists():  # every observable state parses
                     parsed = json.loads(path.read_text())
                     assert isinstance(parsed, list)
@@ -114,3 +117,60 @@ def test_bench_record_concurrent_writers_never_corrupt(tmp_path, monkeypatch):
     final = json.loads(path.read_text())
     assert isinstance(final, list) and 1 <= len(final) <= 80
     assert all(isinstance(r, dict) and "name" in r for r in final)
+
+
+# ---------------------------------------------------------------------------
+# bench_record schema: required kind + one-shot legacy migration.
+# ---------------------------------------------------------------------------
+
+
+def test_bench_record_requires_kind(tmp_path, monkeypatch):
+    _with_path(tmp_path, monkeypatch)
+    with pytest.raises(TypeError):
+        common.bench_record("no-kind")  # positional kind is mandatory
+    with pytest.raises(ValueError, match="kind"):
+        common.bench_record("empty-kind", "")
+
+
+def test_bench_record_migrates_legacy_points(tmp_path, monkeypatch):
+    """Appending to a file with pre-kind legacy points backfills them from
+    their trajectory name in the same atomic write."""
+    path = _with_path(tmp_path, monkeypatch)
+    legacy = [
+        {"name": "ring_depth_overlap", "timestamp": 1.0, "speedup": 1.3},
+        {"name": "snr", "timestamp": 2.0, "snr_db": 17.0},
+        {"name": "multitenant", "timestamp": 3.0, "aggregate_fps": 100.0},
+        {"name": "filter_zoo_median_vs_mean_impulse", "timestamp": 4.0},
+        {"name": "never-heard-of-it", "timestamp": 5.0},
+        {"name": "filter_zoo", "kind": "snr", "timestamp": 6.0},  # untouched
+        {"timestamp": 7.0},                    # nameless: typed, not null
+        {"name": ["snr"], "timestamp": 8.0},   # unhashable: no crash
+    ]
+    path.write_text(json.dumps(legacy))
+    common.bench_record("autotune", "kernel", speedup=1.1)
+    records = json.loads(path.read_text())
+    assert all("kind" in r for r in records)
+    assert all(isinstance(r["kind"], str) and r["kind"] for r in records)
+    assert {r["kind"] for r in records if not isinstance(r.get("name"), str)} \
+        == {"unknown"}
+    by_name = {r["name"]: r["kind"] for r in records
+               if isinstance(r.get("name"), str)}
+    assert by_name["ring_depth_overlap"] == "speedup"
+    assert by_name["snr"] == "snr"
+    assert by_name["multitenant"] == "multitenant"
+    assert by_name["filter_zoo_median_vs_mean_impulse"] == "snr_gain"
+    assert by_name["never-heard-of-it"] == "never-heard-of-it"  # honest fallback
+    assert by_name["filter_zoo"] == "snr"
+    assert by_name["autotune"] == "kernel"
+
+
+def test_repo_bench_file_every_point_has_kind():
+    """The committed BENCH_denoise.json is fully migrated: every point
+    carries kind (the regression the migration satellite asks for)."""
+    import pathlib
+
+    path = pathlib.Path(__file__).resolve().parent.parent / "BENCH_denoise.json"
+    records = json.loads(path.read_text())
+    assert isinstance(records, list) and records
+    missing = [r.get("name") for r in records if "kind" not in r]
+    assert missing == []
