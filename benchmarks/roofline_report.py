@@ -10,8 +10,36 @@ import json
 
 from benchmarks.common import bench_config, emit
 from benchmarks.table12_autotune import _min_interleaved, _staged_groups
+from benchmarks.table13_bandwidth import _step_cost_bytes
 from repro.core import latency_model as lm
 from repro.core.denoise import StreamingDenoiser
+
+#: pinned derived-field schema of the ``roofline/achieved_*`` points —
+#: readers parse ``k=v`` pairs by these names, so adding/renaming a field
+#: MUST go through this tuple (``tests/test_report_columns.py`` holds the
+#: emitter and this schema in sync)
+ACHIEVED_FIELDS = (
+    "achieved_gbps",
+    "roofline_frac",
+    "bytes_per_frame_model",
+    "bytes_per_frame_measured",
+    "identical_lowering",
+)
+
+
+def _achieved_derived(fields: dict) -> str:
+    """Render the achieved-point derived string from ``ACHIEVED_FIELDS``.
+
+    Raises on any mismatch between the fields produced and the pinned
+    schema — a silently dropped or extra field is exactly the header/row
+    desync class this guards against.
+    """
+    if set(fields) != set(ACHIEVED_FIELDS):
+        raise ValueError(
+            f"achieved-point fields {sorted(fields)} do not match "
+            f"ACHIEVED_FIELDS {sorted(ACHIEVED_FIELDS)}"
+        )
+    return ";".join(f"{k}={fields[k]}" for k in ACHIEVED_FIELDS)
 
 
 def _achieved_fraction(quick: bool) -> None:
@@ -39,13 +67,23 @@ def _achieved_fraction(quick: bool) -> None:
     den_h, den_t = StreamingDenoiser(cfg_h), StreamingDenoiser(cfg_t)
     identical = den_h.filter.tile_args("stream") == den_t.filter.tile_args("stream")
     heur_s, tuned_s, _ = _min_interleaved(den_h, den_t, groups, iters=4)
+    frames = 8 * n
+    # bytes per frame: the analytic streaming model vs the compiler-counted
+    # step (table13's measure), so every achieved point carries both sides
+    # of the bandwidth ledger
+    bpf_model = traffic / frames
+    bpf_measured = _step_cost_bytes(cfg_h)
     for label, sec in (("heuristic", heur_s), ("tuned", tuned_s)):
         emit(
             f"roofline/achieved_{label}",
             sec * 1e6,
-            f"achieved_gbps={traffic / sec / 1e9:.2f};"
-            f"roofline_frac={roof_s / sec:.5f};"
-            f"identical_lowering={identical}",
+            _achieved_derived({
+                "achieved_gbps": f"{traffic / sec / 1e9:.2f}",
+                "roofline_frac": f"{roof_s / sec:.5f}",
+                "bytes_per_frame_model": f"{bpf_model:.1f}",
+                "bytes_per_frame_measured": f"{bpf_measured:.1f}",
+                "identical_lowering": identical,
+            }),
         )
 
 
@@ -55,7 +93,8 @@ def run(quick: bool = True) -> None:
         emit(
             f"roofline/denoise_{alg}",
             r["memory_s"] * 1e6,
-            f"bound={r['bound']};bytes={r['bytes']:.3e};flops={r['flops']:.3e}",
+            f"bound={r['bound']};bytes={r['bytes']:.3e};flops={r['flops']:.3e};"
+            f"bytes_per_frame={r['bytes'] / 8000:.1f}",  # G=8, N=1000 defaults
         )
     _achieved_fraction(quick)
     art = sorted(glob.glob("artifacts/dryrun/*.json"))

@@ -27,6 +27,7 @@ from benchmarks import (
     table10_filter_zoo,
     table11_multitenant,
     table12_autotune,
+    table13_bandwidth,
 )
 
 MODULES = [
@@ -42,6 +43,7 @@ MODULES = [
     ("table10-zoo", table10_filter_zoo),
     ("table11-multitenant", table11_multitenant),
     ("table12-autotune", table12_autotune),
+    ("table13-bandwidth", table13_bandwidth),
     ("fig8", fig8_denoise_snr),
     ("roofline", roofline_report),
 ]

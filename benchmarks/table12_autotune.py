@@ -94,19 +94,25 @@ def _matches_heuristic(plan, cfg) -> bool:
     """True when every family's tuned geometry equals the budget-model
     pick — the residual A/B ratio is then pure measurement noise (the two
     plans lower to the same kernel)."""
+    from repro.kernels import quant
     from repro.tune import budget
-    from repro.tune.autotune import IN_DTYPE, filter_families
+    from repro.tune.autotune import _in_dtype, _stream_dtype, filter_families
 
+    sd = _stream_dtype(cfg)
     p = cfg.frames_per_group // 2
     for fam, window in filter_families(cfg):
         args = plan.tile_args(fam)
         if args["row_tile"] is None:
             continue
         th, tp = budget.resolve_tiles(
-            fam, p, cfg.height, cfg.width, in_dtype=IN_DTYPE,
+            fam, p, cfg.height, cfg.width, in_dtype=_in_dtype(cfg),
             acc_dtype=cfg.accum_dtype, window=window,
+            in_pixel_bytes=None if sd == "u16" else quant.wire_pixel_bytes(sd),
         )
         if (args["row_tile"], args["pair_tile"]) != (th, tp):
+            return False
+        # a non-default placement scheme changes the lowering too
+        if args.get("placement") not in (None, budget.placement_schemes(fam)[0]):
             return False
     return True
 

@@ -1,0 +1,293 @@
+"""Table 13 (framework extension): the bandwidth tier's bytes-vs-quality
+ledger.
+
+The paper's whole argument is bandwidth engineering: the denoise kernel is
+memory-bound, so moving fewer bytes per frame is the remaining lever once
+geometry and overlap are tuned (tables 9/12). This table sweeps the
+``stream_dtype`` wire formats (u16 baseline, u8 quantized, p12 packed)
+across filters and backends and records, per cell:
+
+* **wire bytes per frame** — ``config.bytes_per_frame``, the container
+  bytes the acquisition stream actually moves per frame (the quantity
+  ``StreamReport.bytes_in`` accounts and the paper's DRAM argument is
+  about): 2x smaller for u8, 1.33x for p12, by construction of the wire.
+* **compiler-counted step bytes** — total ``bytes accessed`` from
+  ``cost_analysis()`` of the XLA lowering of the filter's real ingest
+  step at the sweep shape (accumulator traffic included — the honest
+  whole-step denominator; per-operand attribution is deliberately not
+  used: XLA reorders and fuses operands). Taken from
+  the XLA lowering for every sweep backend: off-TPU the Pallas path runs
+  in interpret mode, whose cost attribution is not meaningful, and the
+  wire math is identical either way. On CPU this count is honest about
+  p12: the packed format trades wire bytes for unpack reads, so its
+  whole-step count can *rise* off-TPU while the wire shrinks.
+* **measured throughput** — full-stream frames/s for the narrow format vs
+  the u16 baseline, timed with table12's paired, order-balanced
+  median-of-ratios discipline (each format streams its *own* wire-format
+  staged chunks).
+* **model roofline fraction** — the analytic HBM traffic of the format
+  (``latency_model.hbm_traffic_bytes`` at its wire bytes/pixel) against
+  the v5e 819 GB/s bound, as the fraction the measured pass achieves.
+* **SNR delta** — full-pipeline SNR against the noise-free truth for the
+  narrow format minus the u16 baseline (p12 is exact: delta is 0 by
+  construction; u8 pays its quantization floor here, on the record).
+
+Points land in ``BENCH_denoise.json`` as the ``bandwidth`` trajectory
+(``kind="bandwidth"``). Run directly for the CI smoke cycle::
+
+    python -m benchmarks.table13_bandwidth --smoke --assert-u8-reduction
+
+``--assert-u8-reduction`` exits non-zero unless, on every swept filter,
+the u8 wire bytes shrink >= 1.5x vs u16 AND the compiler-counted step
+bytes strictly shrink (load-independent: both are static counts).
+"""
+
+from __future__ import annotations
+
+import argparse
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import (
+    PAPER_G,
+    PAPER_H,
+    PAPER_N,
+    PAPER_W,
+    bench_config,
+    bench_record,
+    emit,
+    stream_pass_s,
+)
+from repro.core import latency_model as lm
+from repro.core.denoise import StreamingDenoiser
+from repro.data.prism import PrismSource, snr_db
+from repro.kernels import ops, quant
+
+FILTER_SWEEP = ("pair_average", "ema_variance")
+NARROW = ("u8", "p12")
+_HBM_GBPS = 819.0  # v5e bound, same constant as roofline_report
+_ITERS = 6
+
+#: filter -> ops entry used for its per-group ingest step
+_COST_OPS = {
+    "pair_average": "stream",
+    "spatial_box": "stream",
+    "temporal_median": "median_insert",
+    "ema_variance": "ema",
+}
+
+
+def _wire_chunk(cfg, seed=0) -> jnp.ndarray:
+    rng = np.random.default_rng(seed)
+    mono12 = rng.integers(0, 4096, (cfg.frames_per_group, cfg.height, cfg.width))
+    return jnp.asarray(quant.encode(mono12.astype(np.uint16), cfg.stream_dtype))
+
+
+def _step_cost_bytes(cfg) -> float:
+    """Compiler-counted total bytes per frame for one ingest step.
+
+    Lowers the filter's real jitted ingest entry point with ``backend=
+    "xla"`` at the config's shape and wire format and reads the compiled
+    ``cost_analysis()`` total ``bytes accessed``.
+    """
+    family = _COST_OPS[cfg.filter_name]
+    n, h, w = cfg.frames_per_group, cfg.height, cfg.width
+    acc = jnp.dtype(cfg.accum_dtype)
+    sd = cfg.stream_dtype
+    chunk = _wire_chunk(cfg)
+    kw = dict(offset=cfg.offset, backend="xla", stream_dtype=sd)
+    if family == "stream":
+        lowered = ops.stream_step.lower(
+            ops.stream_init(n, h, w, acc), chunk,
+            num_groups=cfg.num_groups, **kw,
+        )
+    elif family == "median_insert":
+        window = jnp.zeros((cfg.median_window, n // 2, h, w), acc)
+        lowered = ops.median_window_insert.lower(window, chunk, slot=0, **kw)
+    else:  # ema
+        lowered = ops.ema_welford_step.lower(
+            jnp.zeros((n // 2, h, w), acc),
+            jnp.zeros((h, w), acc),
+            jnp.zeros((h, w), acc),
+            chunk,
+            alpha=cfg.ema_alpha, prior_count=0, **kw,
+        )
+    cost = lowered.compile().cost_analysis()
+    if isinstance(cost, list):  # some jax versions wrap per-device
+        cost = cost[0]
+    return float(cost.get("bytes accessed", 0.0)) / n
+
+
+def _staged(cfg, seed=7):
+    groups = [
+        jax.device_put(np.asarray(c))
+        for c in PrismSource(cfg, seed=seed).groups()
+    ]
+    jax.block_until_ready(groups)
+    return groups
+
+
+def _paired_ratio(den_a, groups_a, den_b, groups_b, iters=_ITERS):
+    """(a_s, b_s, a/b speedup): table12's interleaved paired-median
+    discipline, generalized to per-denoiser staged chunks (each wire
+    format streams its own containers)."""
+    stream_pass_s(den_a, groups_a)  # warm both jits
+    stream_pass_s(den_b, groups_b)
+    a_times, b_times = [], []
+    for i in range(iters):
+        if i % 2:
+            b = stream_pass_s(den_b, groups_b)
+            a = stream_pass_s(den_a, groups_a)
+        else:
+            a = stream_pass_s(den_a, groups_a)
+            b = stream_pass_s(den_b, groups_b)
+        a_times.append(a)
+        b_times.append(b)
+    ratios = [x / max(y, 1e-9) for x, y in zip(a_times, b_times)]
+    return (
+        float(np.median(a_times)),
+        float(np.median(b_times)),
+        float(np.median(ratios)),
+    )
+
+
+def _snr(cfg, seed=7) -> float:
+    src = PrismSource(cfg, seed=seed)
+    den = StreamingDenoiser(cfg)
+    state = den.init()
+    for k, g in enumerate(src.groups()):
+        state = den.ingest(state, jnp.asarray(g), step=k)
+    out = np.asarray(den.finalize(state))
+    return snr_db(out, src.true_signal())
+
+
+def _roofline_frac(cfg, pass_s: float) -> float:
+    traffic = lm.hbm_traffic_bytes(
+        "alg3",
+        groups=cfg.num_groups,
+        frames_per_group=cfg.frames_per_group,
+        height=cfg.height,
+        width=cfg.width,
+        in_bytes=cfg.wire_pixel_bytes,
+    )["streaming_total"]
+    return (traffic / (_HBM_GBPS * 1e9)) / max(pass_s, 1e-12)
+
+
+def _sweep_shapes(quick: bool, smoke: bool, backend: str):
+    on_tpu = jax.default_backend() == "tpu"
+    if smoke:
+        return [(3, 40, 16, 64)]
+    if backend == "pallas" and not on_tpu:
+        return [(4, 60, 40, 128)]
+    if quick:
+        return [(4, 200, PAPER_H, PAPER_W)]
+    return [(PAPER_G, PAPER_N, PAPER_H, PAPER_W)]
+
+
+def run(
+    quick: bool = True,
+    *,
+    smoke: bool = False,
+    assert_u8_reduction: bool = False,
+) -> None:
+    short = []
+    backends = ("xla",) if smoke else ("xla", "pallas")
+    filters = FILTER_SWEEP
+    for backend in backends:
+        for g, n, h, w in _sweep_shapes(quick, smoke, backend):
+            for name in filters:
+                common = dict(
+                    num_groups=g, frames_per_group=n, height=h, width=w,
+                    backend=backend, filter_name=name,
+                )
+                cfg16 = bench_config(quick, **common)
+                step16 = _step_cost_bytes(cfg16)
+                groups16 = _staged(cfg16)
+                den16 = StreamingDenoiser(cfg16)
+                snr16 = _snr(cfg16)
+                frames = g * n
+                for sd in NARROW:
+                    cfg = bench_config(quick, **common, stream_dtype=sd)
+                    step_b = _step_cost_bytes(cfg)
+                    base_s, narrow_s, speedup = _paired_ratio(
+                        den16, groups16, StreamingDenoiser(cfg), _staged(cfg)
+                    )
+                    snr = _snr(cfg)
+                    wire, wire16 = cfg.bytes_per_frame, cfg16.bytes_per_frame
+                    wire_ratio = wire16 / max(wire, 1)
+                    if sd == "u8" and (wire_ratio < 1.5 or step_b >= step16):
+                        short.append(
+                            f"{name}/{backend}: wire {wire_ratio:.2f}x, "
+                            f"step {step16:.0f}->{step_b:.0f} B/frame"
+                        )
+                    tag = f"table13/{name}/{backend}/{sd}/N{n}"
+                    emit(
+                        tag,
+                        narrow_s * 1e6 / frames,
+                        f"u16_us={base_s * 1e6 / frames:.1f};"
+                        f"speedup={speedup:.2f}x;"
+                        f"wire_Bpf={wire}vs{wire16}({wire_ratio:.2f}x);"
+                        f"step_Bpf={step_b:.0f}vs{step16:.0f};"
+                        f"snr_delta_db={snr - snr16:+.2f};"
+                        f"roofline_frac={_roofline_frac(cfg, narrow_s):.5f}"
+                        f"vs{_roofline_frac(cfg16, base_s):.5f}",
+                    )
+                    bench_record(
+                        "bandwidth",
+                        kind="bandwidth",
+                        config={
+                            "G": g, "N": n, "H": h, "W": w,
+                            "backend": backend, "filter": name,
+                        },
+                        baseline="stream_dtype=u16 (mono12-in-u16 wire)",
+                        candidate=f"stream_dtype={sd}",
+                        wire_bytes_per_frame=wire,
+                        wire_bytes_per_frame_u16=wire16,
+                        wire_reduction=round(wire_ratio, 3),
+                        step_bytes_per_frame=round(step_b, 1),
+                        step_bytes_per_frame_u16=round(step16, 1),
+                        step_reduction=round(step16 / max(step_b, 1e-9), 3),
+                        baseline_s=round(base_s, 5),
+                        candidate_s=round(narrow_s, 5),
+                        speedup=round(speedup, 3),
+                        fps=round(frames / max(narrow_s, 1e-9), 1),
+                        roofline_frac=round(_roofline_frac(cfg, narrow_s), 6),
+                        roofline_frac_u16=round(
+                            _roofline_frac(cfg16, base_s), 6
+                        ),
+                        snr_db=round(snr, 3),
+                        snr_delta_db=round(snr - snr16, 3),
+                    )
+    if assert_u8_reduction and short:
+        raise SystemExit(
+            "expected every swept filter to move >=1.5x fewer u8 wire "
+            "bytes AND fewer compiler-counted step bytes than u16, but "
+            f"these fell short: {short}"
+        )
+
+
+def main(argv: Sequence[str] | None = None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--full", action="store_true", help="paper-scale N=1000")
+    ap.add_argument(
+        "--smoke", action="store_true",
+        help="tiny shape, xla only: the CI bytes-reduction check",
+    )
+    ap.add_argument(
+        "--assert-u8-reduction", action="store_true",
+        help="fail unless u8 ingest bytes shrink >=1.5x vs u16 everywhere",
+    )
+    args = ap.parse_args(argv)
+    print("name,us_per_call,derived")
+    run(
+        quick=not args.full,
+        smoke=args.smoke,
+        assert_u8_reduction=args.assert_u8_reduction,
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -17,6 +17,11 @@ from repro.core.denoise import (  # noqa: F401
     DenoiseConfig,
     StreamingDenoiser,
 )
+from repro.core.egress import (  # noqa: F401
+    EGRESS_KINDS,
+    CompressedEgress,
+    EgressPacket,
+)
 from repro.core.ringbuf import RingBuffer, RingClosed, RingStats  # noqa: F401
 from repro.core.streaming import (  # noqa: F401
     DownloadConsumer,

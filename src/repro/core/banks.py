@@ -332,7 +332,7 @@ def run_pipelined_banked(
         buffering_s=0.0,
         compute_s=elapsed - stall_s,
         frames=frames,
-        bytes_in=frames * c.frame_pixels * 2,
+        bytes_in=frames * c.bytes_per_frame,
         transfer_s=transfer_s,
         stall_s=stall_s,
         num_slots=num_slots,

@@ -26,12 +26,12 @@ from typing import Iterable
 import jax.numpy as jnp
 
 from repro.denoise import get_filter
-from repro.kernels import ops
+from repro.kernels import ops, quant
+from repro.kernels.quant import MONO12_MAX  # noqa: F401  (canonical home moved)
 from repro.kernels.ref import ref_subtract_average
 
 __all__ = ["DenoiseConfig", "StreamingDenoiser", "MONO12_MAX", "DEFAULT_OFFSET"]
 
-MONO12_MAX = 4095  # 12-bit pixels wrapped in u16 containers (paper §6)
 DEFAULT_OFFSET = MONO12_MAX + 1  # keeps (exc - ctl + offset) non-negative
 
 
@@ -47,6 +47,12 @@ class DenoiseConfig:
     algorithm: str = "alg3"      # alg1 | alg2 | alg3 | alg3_v2
     accum_dtype: str = "float32"
     backend: str = "auto"        # auto | pallas | xla
+    # ingest wire format (repro.kernels.quant.STREAM_DTYPES): u16 keeps
+    # today's bit-exact mono12-in-u16 containers; u8 / p12 stream narrow
+    # containers that every kernel dequantizes in-VMEM, cutting HBM->VMEM
+    # ingest bytes per frame by 2x / 1.33x (the paper's inline data
+    # reduction applied on the acquisition side)
+    stream_dtype: str = "u16"
     num_banks: int = 1           # B  (paper: one FPGA per 256x80 bank)
     row_tile: int | None = None  # Pallas rows/block override (None = plan)
     pair_tile: int | None = None  # Pallas frame-pairs/block override
@@ -81,6 +87,27 @@ class DenoiseConfig:
             )
         if self.num_slots < 1:
             raise ValueError("num_slots must be >= 1")
+        quant.validate_stream_dtype(self.stream_dtype)
+        if self.stream_dtype != "u16":
+            if self.stream_dtype == "p12" and self.width % 2:
+                raise ValueError(
+                    "stream_dtype='p12' packs pixel pairs: width must be "
+                    f"even, got {self.width}"
+                )
+            if self.stream_dtype == "u8" and not jnp.issubdtype(
+                jnp.dtype(self.accum_dtype), jnp.floating
+            ):
+                raise ValueError(
+                    "stream_dtype='u8' dequantizes to fractional pixel "
+                    "values and needs a floating accum_dtype, got "
+                    f"{self.accum_dtype!r}"
+                )
+            if self.backend == "pallas" and self.algorithm in ("alg1", "alg2"):
+                raise ValueError(
+                    f"the {self.algorithm} pallas baseline has no "
+                    f"{self.stream_dtype!r} ingest path; use backend='xla' "
+                    "or stream_dtype='u16'"
+                )
         if self.overflow_policy not in ("block", "drop_oldest"):
             raise ValueError(
                 "overflow_policy must be 'block' or 'drop_oldest', got "
@@ -127,13 +154,25 @@ class DenoiseConfig:
         return "divide_first" if self.algorithm == "alg3_v2" else "divide_last"
 
     @property
+    def wire_pixel_bytes(self) -> float:
+        """Wire bytes per logical pixel for the ingest format (2 / 1 / 1.5)."""
+        return quant.wire_pixel_bytes(self.stream_dtype)
+
+    @property
+    def wire_width(self) -> int:
+        """Minor-axis length of one wire-format frame row."""
+        return quant.wire_width(self.width, self.stream_dtype)
+
+    @property
+    def bytes_per_frame(self) -> int:
+        """Wire bytes of one ingest frame (exact int for every format)."""
+        return int(self.frame_pixels * self.wire_pixel_bytes)
+
+    @property
     def input_bytes(self) -> int:
         return (
-            2
-            * self.num_groups
-            * self.frames_per_group
-            * self.frame_pixels
-        )  # u16 containers
+            self.num_groups * self.frames_per_group * self.bytes_per_frame
+        )  # wire containers (u16 unless stream_dtype says narrower)
 
     @property
     def output_frames(self) -> int:
@@ -263,6 +302,7 @@ class StreamingDenoiser:
                 algorithm=c.algorithm,
                 backend=c.backend,
                 accum_dtype=self._accum,
+                stream_dtype=c.stream_dtype,
                 **tiles,
             )
         return ops.subtract_average(
@@ -271,6 +311,7 @@ class StreamingDenoiser:
             algorithm=c.algorithm,
             backend=c.backend,
             accum_dtype=self._accum,
+            stream_dtype=c.stream_dtype,
             **tiles,
         )
 
@@ -281,6 +322,12 @@ class StreamingDenoiser:
         With 12-bit pixels and the standard offset, divide-last accumulation
         overflows the u16 container once G > 8; divide-first (v2) never does.
         """
+        if self.config.stream_dtype != "u16":
+            raise ValueError(
+                "reference_u16 models the u16-container pipeline; decode "
+                f"the {self.config.stream_dtype!r} wire stream first "
+                "(repro.kernels.quant.decode)"
+            )
         return ref_subtract_average(
             frames.astype(jnp.uint16),
             offset=int(self.config.offset),

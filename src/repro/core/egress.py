@@ -1,0 +1,182 @@
+"""Compressed egress: the device->host half of the bandwidth tier.
+
+Ingest moves raw frames HBM->VMEM; egress moves denoised partial
+estimates device->host every group (the paper's frame-grabber readback
+path, ``DownloadConsumer``). At paper scale that readback is f32 — 2x the
+raw mono12 wire — so it is the other bandwidth lever this tier pulls.
+
+:class:`CompressedEgress` is a drop-in for any ``consumer(step, partial)``
+slot (``run_pipelined``'s consumer stage, a serve ``Session.consumer``
+hook) that compresses each partial with the dormant gradient-compression
+primitives (``repro.optim.compress``) before it crosses the wire:
+
+* ``kind="int8"`` — symmetric per-group int8 quantization. One f32 scale
+  per packet (the per-group amax/127), so every group is decodable in
+  isolation; reconstruction error is bounded by ``scale/2`` per pixel.
+* ``kind="topk"`` — magnitude top-k sparsification of the centered
+  partial: the denoised estimate is ``offset + signal`` with most pixels
+  near the offset, so centering first concentrates the energy the top-k
+  keeps. Kept pixels reconstruct exactly; dropped pixels decode to
+  ``center``.
+* ``kind="none"`` — uncompressed f32 packets (the measurement baseline;
+  byte-accounting only, the payload round-trips bit-exactly).
+
+``decompress(i)`` exactly inverts the wire format of packet ``i`` — it
+returns what was *sent* (the quantized/sparse estimate plus ``center``),
+not the pre-compression partial; the int8 error bound relates the two.
+``wire_bytes``/``raw_bytes``/``reduction`` expose the byte accounting the
+bandwidth benchmark (``benchmarks/table13_bandwidth.py``) records.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.optim.compress import (
+    int8_compress,
+    topk_compress,
+    topk_decompress,
+)
+
+__all__ = ["EGRESS_KINDS", "EgressPacket", "CompressedEgress"]
+
+EGRESS_KINDS = ("none", "int8", "topk")
+
+_jit_int8 = jax.jit(int8_compress)
+
+
+@functools.partial(jax.jit, static_argnames="k")
+def _jit_topk(x, k: int):
+    return topk_compress(x, k)
+
+
+@dataclasses.dataclass(frozen=True)
+class EgressPacket:
+    """One compressed per-group partial as it crossed the wire.
+
+    ``payload`` holds host copies of exactly what was transferred:
+    ``(q,)`` int8 values for ``"int8"`` (plus the f32 ``scale`` field),
+    ``(vals, idx)`` for ``"topk"``, the raw f32 array for ``"none"``.
+    """
+
+    step: int
+    kind: str
+    shape: tuple
+    payload: tuple
+    scale: float = 0.0
+    center: float = 0.0
+
+    @property
+    def raw_bytes(self) -> int:
+        """f32 bytes an uncompressed download of this partial would move."""
+        return int(np.prod(self.shape)) * 4
+
+    @property
+    def wire_bytes(self) -> int:
+        if self.kind == "int8":
+            return self.payload[0].size + 4  # int8 values + one f32 scale
+        if self.kind == "topk":
+            return self.payload[0].size * 8  # f32 value + int32 index
+        return self.raw_bytes
+
+    def decompress(self) -> np.ndarray:
+        """Exact inverse of the wire format: the estimate as sent."""
+        if self.kind == "int8":
+            q = self.payload[0]
+            return (
+                q.astype(np.float32) * np.float32(self.scale)
+                + np.float32(self.center)
+            ).reshape(self.shape)
+        if self.kind == "topk":
+            vals, idx = self.payload
+            dense = topk_decompress(
+                jnp.asarray(vals), jnp.asarray(idx), (int(np.prod(self.shape)),)
+            )
+            return (
+                np.asarray(dense).reshape(self.shape) + np.float32(self.center)
+            )
+        return self.payload[0].reshape(self.shape)  # "none": sent uncentered
+
+
+class CompressedEgress:
+    """Compressing ``consumer(step, partial)`` stage (see module docstring).
+
+    ``center`` is subtracted before compression and restored on decode —
+    pass the config's ``offset`` so both schemes see a zero-centered
+    signal. ``k_fraction`` is the top-k keep ratio (ignored for int8).
+    """
+
+    def __init__(
+        self,
+        kind: str = "int8",
+        *,
+        center: float = 0.0,
+        k_fraction: float = 0.05,
+    ):
+        if kind not in EGRESS_KINDS:
+            raise ValueError(
+                f"egress kind must be one of {EGRESS_KINDS}, got {kind!r}"
+            )
+        if not 0.0 < k_fraction <= 1.0:
+            raise ValueError(f"k_fraction must be in (0, 1], got {k_fraction}")
+        self.kind = kind
+        self.center = float(center)
+        self.k_fraction = float(k_fraction)
+        self.packets: list[EgressPacket] = []
+
+    def __call__(self, step: int, partial) -> None:
+        x = jnp.asarray(partial, jnp.float32)
+        if self.kind != "none":  # "none" skips centering: bit-exact payload
+            x = x - jnp.float32(self.center)
+        shape = tuple(x.shape)
+        if self.kind == "int8":
+            q, scale = _jit_int8(x)
+            pkt = EgressPacket(
+                step=step,
+                kind=self.kind,
+                shape=shape,
+                payload=(np.asarray(q),),
+                scale=float(scale),
+                center=self.center,
+            )
+        elif self.kind == "topk":
+            k = max(1, int(x.size * self.k_fraction))
+            vals, idx = _jit_topk(x.reshape(-1), k)
+            pkt = EgressPacket(
+                step=step,
+                kind=self.kind,
+                shape=shape,
+                payload=(np.asarray(vals), np.asarray(idx)),
+                center=self.center,
+            )
+        else:
+            pkt = EgressPacket(
+                step=step,
+                kind=self.kind,
+                shape=shape,
+                payload=(np.asarray(x),),
+                center=self.center,
+            )
+        self.packets.append(pkt)
+
+    def decompress(self, index: int = -1) -> np.ndarray:
+        """Decoded estimate of packet ``index`` (default: the latest)."""
+        return self.packets[index].decompress()
+
+    @property
+    def raw_bytes(self) -> int:
+        return sum(p.raw_bytes for p in self.packets)
+
+    @property
+    def wire_bytes(self) -> int:
+        return sum(p.wire_bytes for p in self.packets)
+
+    @property
+    def reduction(self) -> float:
+        """Raw/wire byte ratio over everything egressed so far (>= 1)."""
+        return self.raw_bytes / self.wire_bytes if self.wire_bytes else 0.0

@@ -353,7 +353,7 @@ def run_pipelined(
         # consumer-bottlenecked run masquerades as denoise-bound
         compute_s=elapsed - stall_s - deliver_wait_s,
         frames=frames,
-        bytes_in=frames * config.frame_pixels * 2,
+        bytes_in=frames * config.bytes_per_frame,
         transfer_s=transfer_s,
         stall_s=stall_s,
         num_slots=num_slots,
@@ -432,7 +432,7 @@ def run_inline(
         buffering_s=0.0,
         compute_s=elapsed - stall_s,
         frames=frames,
-        bytes_in=frames * config.frame_pixels * 2,
+        bytes_in=frames * config.bytes_per_frame,
         transfer_s=transfer_s,
         stall_s=stall_s,
     )
@@ -463,7 +463,7 @@ def run_buffered(
         buffering_s=t1 - t0,
         compute_s=t2 - t1,
         frames=frames,
-        bytes_in=frames * config.frame_pixels * 2,
+        bytes_in=frames * config.bytes_per_frame,
         transfer_s=t1 - t0,
         stall_s=t1 - t0,
     )

@@ -35,6 +35,7 @@ from typing import Iterator
 import numpy as np
 
 from repro.core.denoise import MONO12_MAX, DenoiseConfig
+from repro.kernels import quant
 
 __all__ = ["PrismSource", "NOISE_REGIMES", "snr_db"]
 
@@ -140,7 +141,12 @@ class PrismSource:
             ).astype(np.float32)[:, None, None]
         elif self.noise_regime == "hot_pixels":
             frames[:, hot_mask] = self.hot_pixel_level
-        return np.clip(np.round(frames), 0, MONO12_MAX).astype(np.uint16)
+        mono12 = np.clip(np.round(frames), 0, MONO12_MAX).astype(np.uint16)
+        # wire-format hook: every source path (groups / banked_groups /
+        # bank_source / all_frames) funnels through here, so the config's
+        # stream_dtype decides the container exactly once. "u16" is a
+        # no-copy passthrough — byte-identical to the pre-tier source.
+        return quant.encode(mono12, getattr(c, "stream_dtype", "u16"))
 
     def _regime_state(self, bank: int):
         """Dedicated RNG stream + stuck-pixel mask for one bank's iterator."""
@@ -155,7 +161,7 @@ class PrismSource:
         return regime_rng, hot_mask
 
     def groups(self) -> Iterator[np.ndarray]:
-        """Yield G arrays of (N, H, W) u16 frames."""
+        """Yield G arrays of (N, H, W) wire-format frames (u16 default)."""
         rng = np.random.default_rng(self.seed)
         regime_rng, hot_mask = self._regime_state(0)
         n = self.config.frames_per_group
@@ -207,7 +213,7 @@ class PrismSource:
         return [self.bank_source(i) for i in range(b)]
 
     def all_frames(self) -> np.ndarray:
-        """(G, N, H, W) u16 — the buffered-acquisition view."""
+        """(G, N, H, W) wire containers — the buffered-acquisition view."""
         return np.stack(list(self.groups()))
 
 

@@ -75,6 +75,7 @@ class EmaVarianceFilter(StreamingFilter):
             offset=c.offset,
             prior_count=step_index * c.pairs_per_group,
             backend=c.backend,
+            stream_dtype=getattr(c, "stream_dtype", "u16"),
             **self.tile_args("ema"),
         )
 

@@ -44,6 +44,7 @@ class PairAverageFilter(StreamingFilter):
             offset=c.offset,
             variant=c.variant,
             backend=c.backend,
+            stream_dtype=getattr(c, "stream_dtype", "u16"),
             **self.tile_args("stream"),
         )
         if group_frames.ndim == 4:

@@ -60,15 +60,17 @@ class TemporalMedianFilter(StreamingFilter):
         if banked:
             k, b, p, h, w = state.shape
             # bank-major flatten: (K, B, P, H, W) -> (K, B*P, H, W) pairs up
-            # exactly with the (B*N, H, W) flatten of the chunk.
+            # exactly with the (B*N, H, Wp) flatten of the chunk (the chunk
+            # keeps its own wire-format minor axis, which for p12 is 3W/2)
             state = state.reshape(k, b * p, h, w)
-            group_frames = group_frames.reshape(-1, h, w)
+            group_frames = group_frames.reshape(-1, *group_frames.shape[-2:])
         out = ops.median_window_insert(
             state,
             group_frames,
             slot=slot,
             offset=c.offset,
             backend=c.backend,
+            stream_dtype=getattr(c, "stream_dtype", "u16"),
             **self.tile_args("median_insert"),
         )
         if banked:

@@ -32,6 +32,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels import quant, spaces
 from repro.tune.budget import resolve_tiles
 
 __all__ = ["ema_welford_step"]
@@ -50,10 +51,13 @@ def _ema_kernel(
     alpha: float,
     offset: float,
     pair_tile: int,
+    stream_dtype: str,
 ):
     k = pl.program_id(1)
     acc = o_ema.dtype
-    diff = f_ref[:, 1].astype(acc) - f_ref[:, 0].astype(acc) + jnp.asarray(offset, acc)
+    diff = quant.pair_diff_block(
+        f_ref[...], offset=offset, accum_dtype=acc, stream_dtype=stream_dtype
+    )
     a = jnp.asarray(alpha, acc)
     o_ema[...] = ema_ref[...] * (1 - a) + a * diff
 
@@ -77,7 +81,15 @@ def _ema_kernel(
 
 @functools.partial(
     jax.jit,
-    static_argnames=("alpha", "offset", "row_tile", "pair_tile", "interpret"),
+    static_argnames=(
+        "alpha",
+        "offset",
+        "row_tile",
+        "pair_tile",
+        "stream_dtype",
+        "placement",
+        "interpret",
+    ),
     donate_argnums=(0, 1, 2),
 )
 def ema_welford_step(
@@ -91,23 +103,31 @@ def ema_welford_step(
     prior_count=0,
     row_tile: int | None = None,
     pair_tile: int | None = None,
+    stream_dtype: str = "u16",
+    placement: str | None = None,
     interpret: bool = True,
 ):
     """Fold one group into (ema, wmean, wm2); all three state arrays donated.
 
     ema: (N/2, H, W); wmean/wm2: (H, W) pooled over pairs and groups;
-    group_frames: (N, H, W). ``prior_count`` is the number of diff samples
-    already folded into wmean/wm2 (= steps_so_far * N/2) — a *traced*
-    scalar fed to the kernel as a (1, 1) block, so the per-group value
-    never retraces or recompiles the streaming step.
+    group_frames: (N, H, wire_W). ``prior_count`` is the number of diff
+    samples already folded into wmean/wm2 (= steps_so_far * N/2) — a
+    *traced* scalar fed to the kernel as a (1, 1) block (SMEM under the
+    default placement: it is control state, not datapath), so the
+    per-group value never retraces or recompiles the streaming step.
     """
     p, h, w = ema.shape
     n = group_frames.shape[0]
     assert n == 2 * p, f"group has {n} frames for {p} state pairs"
-    pairs = group_frames.reshape(p, 2, h, w)
+    wp = group_frames.shape[-1]
+    pairs = group_frames.reshape(p, 2, h, wp)
     th, tp = resolve_tiles(
         "ema", p, h, w, row_tile, pair_tile,
         in_dtype=group_frames.dtype, acc_dtype=ema.dtype,
+        in_pixel_bytes=(
+            None if stream_dtype == "u16"
+            else quant.wire_pixel_bytes(stream_dtype)
+        ),
     )
     prior = jnp.full((1, 1), prior_count, dtype=ema.dtype)
     kernel = functools.partial(
@@ -115,21 +135,42 @@ def ema_welford_step(
         alpha=float(alpha),
         offset=float(offset),
         pair_tile=tp,
+        stream_dtype=stream_dtype,
     )
+    ms = spaces.operand_spaces("ema", placement)
     return pl.pallas_call(
         kernel,
         grid=(h // th, p // tp),  # pairs innermost: mean/M2 tiles stay resident
         in_specs=[
-            pl.BlockSpec((tp, 2, th, w), lambda hb, k: (k, 0, hb, 0)),
-            pl.BlockSpec((tp, th, w), lambda hb, k: (k, hb, 0)),
-            pl.BlockSpec((th, w), lambda hb, k: (hb, 0)),
-            pl.BlockSpec((th, w), lambda hb, k: (hb, 0)),
-            pl.BlockSpec((1, 1), lambda hb, k: (0, 0)),
+            pl.BlockSpec(
+                (tp, 2, th, wp), lambda hb, k: (k, 0, hb, 0),
+                memory_space=ms.get("pairs"),
+            ),
+            pl.BlockSpec(
+                (tp, th, w), lambda hb, k: (k, hb, 0),
+                memory_space=ms.get("state"),
+            ),
+            pl.BlockSpec(
+                (th, w), lambda hb, k: (hb, 0), memory_space=ms.get("state")
+            ),
+            pl.BlockSpec(
+                (th, w), lambda hb, k: (hb, 0), memory_space=ms.get("state")
+            ),
+            pl.BlockSpec(
+                (1, 1), lambda hb, k: (0, 0), memory_space=ms.get("prior")
+            ),
         ],
         out_specs=[
-            pl.BlockSpec((tp, th, w), lambda hb, k: (k, hb, 0)),
-            pl.BlockSpec((th, w), lambda hb, k: (hb, 0)),
-            pl.BlockSpec((th, w), lambda hb, k: (hb, 0)),
+            pl.BlockSpec(
+                (tp, th, w), lambda hb, k: (k, hb, 0),
+                memory_space=ms.get("state"),
+            ),
+            pl.BlockSpec(
+                (th, w), lambda hb, k: (hb, 0), memory_space=ms.get("state")
+            ),
+            pl.BlockSpec(
+                (th, w), lambda hb, k: (hb, 0), memory_space=ms.get("state")
+            ),
         ],
         out_shape=[
             jax.ShapeDtypeStruct(ema.shape, ema.dtype),

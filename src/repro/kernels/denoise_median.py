@@ -33,22 +33,33 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels import quant, spaces
 from repro.tune.budget import resolve_tiles
 
 __all__ = ["median_window_insert", "median_combine"]
 
 
-def _insert_kernel(f_ref, w_ref, o_ref, *, offset: float):
+def _insert_kernel(f_ref, w_ref, o_ref, *, offset: float, stream_dtype: str):
     del w_ref  # aliased donor only; never read (out block = slot's block)
     acc = o_ref.dtype
-    # f_ref: (tp, 2, th, w) -> diff (tp, th, w) = o_ref block (slot squeezed)
-    diff = f_ref[:, 1].astype(acc) - f_ref[:, 0].astype(acc) + jnp.asarray(offset, acc)
+    # f_ref: (tp, 2, th, wire_w) -> diff (tp, th, w) = o_ref block (slot squeezed)
+    diff = quant.pair_diff_block(
+        f_ref[...], offset=offset, accum_dtype=acc, stream_dtype=stream_dtype
+    )
     o_ref[...] = diff
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("slot", "offset", "row_tile", "pair_tile", "interpret"),
+    static_argnames=(
+        "slot",
+        "offset",
+        "row_tile",
+        "pair_tile",
+        "stream_dtype",
+        "placement",
+        "interpret",
+    ),
     donate_argnums=(0,),
 )
 def median_window_insert(
@@ -59,36 +70,55 @@ def median_window_insert(
     offset: float = 0.0,
     row_tile: int | None = None,
     pair_tile: int | None = None,
+    stream_dtype: str = "u16",
+    placement: str | None = None,
     interpret: bool = True,
 ):
     """Write the group's diff frames into ``window[slot]`` (window donated).
 
     window: (K, N/2, H, W) accumulator-dtype ring of past diffs;
-    group_frames: (N, H, W). Returns the updated window: the grid touches
-    only ``slot``'s blocks; the remaining K-1 slots ride through the
-    aliased (donated) buffer untouched.
+    group_frames: (N, H, wire_W). Returns the updated window: the grid
+    touches only ``slot``'s blocks; the remaining K-1 slots ride through
+    the aliased (donated) buffer untouched. The donor operand is never
+    read, so the default placement leaves it in ANY/HBM (only the written
+    slot blocks occupy VMEM).
     """
     k_slots, p, h, w = window.shape
     n = group_frames.shape[0]
     assert n == 2 * p, f"group has {n} frames for {p} window pairs"
     assert 0 <= slot < k_slots, f"slot {slot} outside window of {k_slots}"
-    pairs = group_frames.reshape(p, 2, h, w)
+    wp = group_frames.shape[-1]
+    pairs = group_frames.reshape(p, 2, h, wp)
     th, tp = resolve_tiles(
         "median_insert", p, h, w, row_tile, pair_tile,
         in_dtype=group_frames.dtype, acc_dtype=window.dtype,
+        in_pixel_bytes=(
+            None if stream_dtype == "u16"
+            else quant.wire_pixel_bytes(stream_dtype)
+        ),
     )
-    kernel = functools.partial(_insert_kernel, offset=float(offset))
-    slot_block = pl.BlockSpec(
-        (None, tp, th, w), lambda k, hb: (slot, k, hb, 0)
+    kernel = functools.partial(
+        _insert_kernel, offset=float(offset), stream_dtype=stream_dtype
     )
+    ms = spaces.operand_spaces("median_insert", placement)
     return pl.pallas_call(
         kernel,
         grid=(p // tp, h // th),
         in_specs=[
-            pl.BlockSpec((tp, 2, th, w), lambda k, hb: (k, 0, hb, 0)),
-            slot_block,  # aliased donor; kernel never reads it
+            pl.BlockSpec(
+                (tp, 2, th, wp), lambda k, hb: (k, 0, hb, 0),
+                memory_space=ms.get("pairs"),
+            ),
+            # aliased donor; kernel never reads it
+            pl.BlockSpec(
+                (None, tp, th, w), lambda k, hb: (slot, k, hb, 0),
+                memory_space=ms.get("donor"),
+            ),
         ],
-        out_specs=slot_block,
+        out_specs=pl.BlockSpec(
+            (None, tp, th, w), lambda k, hb: (slot, k, hb, 0),
+            memory_space=ms.get("slot"),
+        ),
         out_shape=jax.ShapeDtypeStruct(window.shape, window.dtype),
         input_output_aliases={1: 0},
         interpret=interpret,
@@ -114,13 +144,14 @@ def _median_kernel(w_ref, o_ref, *, count: int):
 
 @functools.partial(
     jax.jit,
-    static_argnames=("row_tile", "pair_tile", "interpret"),
+    static_argnames=("row_tile", "pair_tile", "placement", "interpret"),
 )
 def median_combine(
     window: jnp.ndarray,
     *,
     row_tile: int | None = None,
     pair_tile: int | None = None,
+    placement: str | None = None,
     interpret: bool = True,
 ):
     """(K, N/2, H, W) window -> (N/2, H, W) per-pixel median over K.
@@ -135,13 +166,20 @@ def median_combine(
         acc_dtype=window.dtype, window=k_slots,
     )
     kernel = functools.partial(_median_kernel, count=k_slots)
+    ms = spaces.operand_spaces("median_combine", placement)
     return pl.pallas_call(
         kernel,
         grid=(p // tp, h // th),
         in_specs=[
-            pl.BlockSpec((k_slots, tp, th, w), lambda k, hb: (0, k, hb, 0)),
+            pl.BlockSpec(
+                (k_slots, tp, th, w), lambda k, hb: (0, k, hb, 0),
+                memory_space=ms.get("window"),
+            ),
         ],
-        out_specs=pl.BlockSpec((tp, th, w), lambda k, hb: (k, hb, 0)),
+        out_specs=pl.BlockSpec(
+            (tp, th, w), lambda k, hb: (k, hb, 0),
+            memory_space=ms.get("out"),
+        ),
         out_shape=jax.ShapeDtypeStruct((p, h, w), window.dtype),
         interpret=interpret,
     )(window)

@@ -29,16 +29,26 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels import quant, spaces
 from repro.tune.budget import resolve_tiles
 
 __all__ = ["multibank_subtract_average", "multibank_stream_step"]
 
 
-def _mb_kernel(f_ref, o_ref, *, num_groups: int, offset: float, divide_first: bool):
+def _in_pixel_bytes(stream_dtype: str) -> float | None:
+    return None if stream_dtype == "u16" else quant.wire_pixel_bytes(stream_dtype)
+
+
+def _mb_kernel(
+    f_ref, o_ref, *, num_groups: int, offset: float, divide_first: bool,
+    stream_dtype: str,
+):
     g = pl.program_id(3)
     acc = o_ref.dtype
-    # f_ref: (pair_tile, 2, th, w) for this (bank, pair_block, row_block, group)
-    diff = f_ref[:, 1].astype(acc) - f_ref[:, 0].astype(acc) + jnp.asarray(offset, acc)
+    # f_ref: (pair_tile, 2, th, wire_w) for this (bank, pair_block, row_block, group)
+    diff = quant.pair_diff_block(
+        f_ref[...], offset=offset, accum_dtype=acc, stream_dtype=stream_dtype
+    )
     if divide_first:
         diff = diff / jnp.asarray(num_groups, acc)
 
@@ -63,6 +73,8 @@ def _mb_kernel(f_ref, o_ref, *, num_groups: int, offset: float, divide_first: bo
         "accum_dtype",
         "row_tile",
         "pair_tile",
+        "stream_dtype",
+        "placement",
         "interpret",
     ),
 )
@@ -74,16 +86,20 @@ def multibank_subtract_average(
     accum_dtype=jnp.float32,
     row_tile: int | None = None,
     pair_tile: int | None = None,
+    stream_dtype: str = "u16",
+    placement: str | None = None,
     interpret: bool = True,
 ):
-    """frames (B, G, N, H, W) -> (B, N/2, H, W), one fused ``pallas_call``."""
-    b, g, n, h, w = frames.shape
+    """frames (B, G, N, H, wire_W) -> (B, N/2, H, W), one fused ``pallas_call``."""
+    b, g, n, h, wp = frames.shape
     assert n % 2 == 0, "N must be even"
     p = n // 2
-    pairs = frames.reshape(b, g, p, 2, h, w)
+    w = quant.logical_width(wp, stream_dtype)
+    pairs = frames.reshape(b, g, p, 2, h, wp)
     th, tp = resolve_tiles(
         "stream", p, h, w, row_tile, pair_tile,
         in_dtype=frames.dtype, acc_dtype=accum_dtype,
+        in_pixel_bytes=_in_pixel_bytes(stream_dtype),
     )
 
     kernel = functools.partial(
@@ -91,27 +107,36 @@ def multibank_subtract_average(
         num_groups=g,
         offset=float(offset),
         divide_first=divide_first,
+        stream_dtype=stream_dtype,
     )
+    ms = spaces.operand_spaces("stream", placement)
     return pl.pallas_call(
         kernel,
         grid=(b, p // tp, h // th, g),
         in_specs=[
             pl.BlockSpec(
-                (None, None, tp, 2, th, w),
+                (None, None, tp, 2, th, wp),
                 lambda bi, k, hb, gi: (bi, gi, k, 0, hb, 0),
+                memory_space=ms.get("pairs"),
             )
         ],
         out_specs=pl.BlockSpec(
-            (None, tp, th, w), lambda bi, k, hb, gi: (bi, k, hb, 0)
+            (None, tp, th, w), lambda bi, k, hb, gi: (bi, k, hb, 0),
+            memory_space=ms.get("acc"),
         ),
         out_shape=jax.ShapeDtypeStruct((b, p, h, w), jnp.dtype(accum_dtype)),
         interpret=interpret,
     )(pairs)
 
 
-def _mb_step_kernel(f_ref, s_ref, o_ref, *, num_groups, offset, divide_first, final):
+def _mb_step_kernel(
+    f_ref, s_ref, o_ref, *, num_groups, offset, divide_first, final,
+    stream_dtype,
+):
     acc = o_ref.dtype
-    diff = f_ref[:, 1].astype(acc) - f_ref[:, 0].astype(acc) + jnp.asarray(offset, acc)
+    diff = quant.pair_diff_block(
+        f_ref[...], offset=offset, accum_dtype=acc, stream_dtype=stream_dtype
+    )
     if divide_first:
         diff = diff / jnp.asarray(num_groups, acc)
     total = s_ref[...] + diff
@@ -129,6 +154,8 @@ def _mb_step_kernel(f_ref, s_ref, o_ref, *, num_groups, offset, divide_first, fi
         "final",
         "row_tile",
         "pair_tile",
+        "stream_dtype",
+        "placement",
         "interpret",
     ),
     donate_argnums=(1,),
@@ -143,20 +170,24 @@ def multibank_stream_step(
     final: bool = False,
     row_tile: int | None = None,
     pair_tile: int | None = None,
+    stream_dtype: str = "u16",
+    placement: str | None = None,
     interpret: bool = True,
 ):
-    """Fold one group per bank (B, N, H, W) into running sums (B, N/2, H, W).
+    """Fold one group per bank (B, N, H, wire_W) into sums (B, N/2, H, W).
 
     ``sum_frames`` is donated (input/output aliased) — per step the HBM
     traffic is read in + read sum + write sum, the paper's burst R/W
     schedule, independently per bank.
     """
-    b, n, h, w = group_frames.shape
+    b, n, h, wp = group_frames.shape
     p = n // 2
-    pairs = group_frames.reshape(b, p, 2, h, w)
+    w = sum_frames.shape[-1]
+    pairs = group_frames.reshape(b, p, 2, h, wp)
     th, tp = resolve_tiles(
         "stream", p, h, w, row_tile, pair_tile,
         in_dtype=group_frames.dtype, acc_dtype=sum_frames.dtype,
+        in_pixel_bytes=_in_pixel_bytes(stream_dtype),
     )
     kernel = functools.partial(
         _mb_step_kernel,
@@ -164,18 +195,25 @@ def multibank_stream_step(
         offset=float(offset),
         divide_first=divide_first,
         final=final,
+        stream_dtype=stream_dtype,
     )
+    ms = spaces.operand_spaces("stream", placement)
     return pl.pallas_call(
         kernel,
         grid=(b, p // tp, h // th),
         in_specs=[
             pl.BlockSpec(
-                (None, tp, 2, th, w), lambda bi, k, hb: (bi, k, 0, hb, 0)
+                (None, tp, 2, th, wp), lambda bi, k, hb: (bi, k, 0, hb, 0),
+                memory_space=ms.get("pairs"),
             ),
-            pl.BlockSpec((None, tp, th, w), lambda bi, k, hb: (bi, k, hb, 0)),
+            pl.BlockSpec(
+                (None, tp, th, w), lambda bi, k, hb: (bi, k, hb, 0),
+                memory_space=ms.get("acc"),
+            ),
         ],
         out_specs=pl.BlockSpec(
-            (None, tp, th, w), lambda bi, k, hb: (bi, k, hb, 0)
+            (None, tp, th, w), lambda bi, k, hb: (bi, k, hb, 0),
+            memory_space=ms.get("acc"),
         ),
         out_shape=jax.ShapeDtypeStruct(sum_frames.shape, sum_frames.dtype),
         input_output_aliases={1: 0},

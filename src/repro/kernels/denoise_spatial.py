@@ -32,6 +32,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels import spaces
 from repro.tune.budget import resolve_tiles
 
 __all__ = ["spatial_filter_3x3"]
@@ -81,7 +82,14 @@ def _spatial_kernel(
 
 @functools.partial(
     jax.jit,
-    static_argnames=("mode", "range_sigma", "row_tile", "pair_tile", "interpret"),
+    static_argnames=(
+        "mode",
+        "range_sigma",
+        "row_tile",
+        "pair_tile",
+        "placement",
+        "interpret",
+    ),
 )
 def spatial_filter_3x3(
     frames: jnp.ndarray,
@@ -90,6 +98,7 @@ def spatial_filter_3x3(
     range_sigma: float = 50.0,
     row_tile: int | None = None,
     pair_tile: int | None = None,
+    placement: str | None = None,
     interpret: bool = True,
 ):
     """(P, H, W) -> (P, H, W): 3×3 box or bilateral-lite smoothing per frame.
@@ -113,17 +122,28 @@ def spatial_filter_3x3(
         num_row_blocks=nhb,
     )
     last = nhb - 1
+    ms = spaces.operand_spaces("spatial", placement)
     return pl.pallas_call(
         kernel,
         grid=(p // tp, nhb),
         in_specs=[
-            pl.BlockSpec((tp, th, w), lambda k, hb: (k, hb, 0)),
-            pl.BlockSpec((tp, th, w), lambda k, hb: (k, jnp.maximum(hb - 1, 0), 0)),
             pl.BlockSpec(
-                (tp, th, w), lambda k, hb: (k, jnp.minimum(hb + 1, last), 0)
+                (tp, th, w), lambda k, hb: (k, hb, 0),
+                memory_space=ms.get("halo"),
+            ),
+            pl.BlockSpec(
+                (tp, th, w), lambda k, hb: (k, jnp.maximum(hb - 1, 0), 0),
+                memory_space=ms.get("halo"),
+            ),
+            pl.BlockSpec(
+                (tp, th, w), lambda k, hb: (k, jnp.minimum(hb + 1, last), 0),
+                memory_space=ms.get("halo"),
             ),
         ],
-        out_specs=pl.BlockSpec((tp, th, w), lambda k, hb: (k, hb, 0)),
+        out_specs=pl.BlockSpec(
+            (tp, th, w), lambda k, hb: (k, hb, 0),
+            memory_space=ms.get("out"),
+        ),
         out_shape=jax.ShapeDtypeStruct(frames.shape, frames.dtype),
         interpret=interpret,
     )(frames, frames, frames)

@@ -37,6 +37,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels import quant, spaces
 from repro.tune.budget import resolve_tiles
 
 __all__ = ["alg3_subtract_average", "alg3_stream_step"]
@@ -61,19 +62,33 @@ def _resolve_tiles(
     *,
     in_dtype="uint16",
     acc_dtype="float32",
+    stream_dtype: str = "u16",
 ) -> tuple[int, int]:
-    """Alg 3 ("stream" family) tiles via the shared budget model."""
+    """Alg 3 ("stream" family) tiles via the shared budget model.
+
+    ``w`` is the *logical* width; narrow wire formats discount the input
+    planes via ``in_pixel_bytes`` (u16 keeps the exact pre-tier path).
+    """
     return resolve_tiles(
         "stream", p, h, w, row_tile, pair_tile,
         in_dtype=in_dtype, acc_dtype=acc_dtype,
+        in_pixel_bytes=(
+            None if stream_dtype == "u16"
+            else quant.wire_pixel_bytes(stream_dtype)
+        ),
     )
 
 
-def _alg3_kernel(f_ref, o_ref, *, num_groups: int, offset: float, divide_first: bool):
+def _alg3_kernel(
+    f_ref, o_ref, *, num_groups: int, offset: float, divide_first: bool,
+    stream_dtype: str,
+):
     g = pl.program_id(2)
     acc = o_ref.dtype
-    # f_ref: (pair_tile, 2, th, w) -> diff (pair_tile, th, w)
-    diff = f_ref[:, 1].astype(acc) - f_ref[:, 0].astype(acc) + jnp.asarray(offset, acc)
+    # f_ref: (pair_tile, 2, th, wire_w) -> dequantized diff (pair_tile, th, w)
+    diff = quant.pair_diff_block(
+        f_ref[...], offset=offset, accum_dtype=acc, stream_dtype=stream_dtype
+    )
     if divide_first:
         diff = diff / jnp.asarray(num_groups, acc)
 
@@ -98,6 +113,8 @@ def _alg3_kernel(f_ref, o_ref, *, num_groups: int, offset: float, divide_first: 
         "accum_dtype",
         "row_tile",
         "pair_tile",
+        "stream_dtype",
+        "placement",
         "interpret",
     ),
 )
@@ -109,21 +126,27 @@ def alg3_subtract_average(
     accum_dtype=jnp.float32,
     row_tile: int | None = None,
     pair_tile: int | None = None,
+    stream_dtype: str = "u16",
+    placement: str | None = None,
     interpret: bool = True,
 ):
-    """frames (G, N, H, W) -> averaged difference frames (N/2, H, W).
+    """frames (G, N, H, wire_W) -> averaged difference frames (N/2, H, W).
 
-    One ``pallas_call``; each input element crosses HBM->VMEM exactly once.
+    One ``pallas_call``; each input element crosses HBM->VMEM exactly once
+    — and for narrow ``stream_dtype`` wire formats each *pixel* crosses as
+    1 or 1.5 bytes instead of 2, widening in-VMEM inside the kernel.
     ``divide_first=True`` is the paper's Alg 3 v2 (overflow-safe spread
     division).
     """
-    g, n, h, w = frames.shape
+    g, n, h, wp = frames.shape
     assert n % 2 == 0, "N must be even"
     p = n // 2
-    pairs = frames.reshape(g, p, 2, h, w)
+    w = quant.logical_width(wp, stream_dtype)
+    pairs = frames.reshape(g, p, 2, h, wp)
     th, tp = _resolve_tiles(
         p, h, w, row_tile, pair_tile,
         in_dtype=frames.dtype, acc_dtype=accum_dtype,
+        stream_dtype=stream_dtype,
     )
 
     kernel = functools.partial(
@@ -131,16 +154,22 @@ def alg3_subtract_average(
         num_groups=g,
         offset=float(offset),
         divide_first=divide_first,
+        stream_dtype=stream_dtype,
     )
+    ms = spaces.operand_spaces("stream", placement)
     return pl.pallas_call(
         kernel,
         grid=(p // tp, h // th, g),
         in_specs=[
             pl.BlockSpec(
-                (None, tp, 2, th, w), lambda k, hb, gi: (gi, k, 0, hb, 0)
+                (None, tp, 2, th, wp), lambda k, hb, gi: (gi, k, 0, hb, 0),
+                memory_space=ms.get("pairs"),
             )
         ],
-        out_specs=pl.BlockSpec((tp, th, w), lambda k, hb, gi: (k, hb, 0)),
+        out_specs=pl.BlockSpec(
+            (tp, th, w), lambda k, hb, gi: (k, hb, 0),
+            memory_space=ms.get("acc"),
+        ),
         out_shape=jax.ShapeDtypeStruct((p, h, w), jnp.dtype(accum_dtype)),
         interpret=interpret,
     )(pairs)
@@ -155,9 +184,14 @@ def alg3_subtract_average(
 # ---------------------------------------------------------------------------
 
 
-def _alg3_step_kernel(f_ref, s_ref, o_ref, *, num_groups, offset, divide_first, final):
+def _alg3_step_kernel(
+    f_ref, s_ref, o_ref, *, num_groups, offset, divide_first, final,
+    stream_dtype,
+):
     acc = o_ref.dtype
-    diff = f_ref[:, 1].astype(acc) - f_ref[:, 0].astype(acc) + jnp.asarray(offset, acc)
+    diff = quant.pair_diff_block(
+        f_ref[...], offset=offset, accum_dtype=acc, stream_dtype=stream_dtype
+    )
     if divide_first:
         diff = diff / jnp.asarray(num_groups, acc)
     total = s_ref[...] + diff
@@ -175,6 +209,8 @@ def _alg3_step_kernel(f_ref, s_ref, o_ref, *, num_groups, offset, divide_first, 
         "final",
         "row_tile",
         "pair_tile",
+        "stream_dtype",
+        "placement",
         "interpret",
     ),
     donate_argnums=(1,),
@@ -189,15 +225,20 @@ def alg3_stream_step(
     final: bool = False,
     row_tile: int | None = None,
     pair_tile: int | None = None,
+    stream_dtype: str = "u16",
+    placement: str | None = None,
     interpret: bool = True,
 ):
-    """Fold one group (N, H, W) into the running sum (N/2, H, W) (donated)."""
-    n, h, w = group_frames.shape
+    """Fold one group (N, H, wire_W) into the running sum (N/2, H, W) (donated)."""
+    n, h, wp = group_frames.shape
     p = n // 2
-    pairs = group_frames.reshape(p, 2, h, w)
+    # the running sum carries the logical width; the wire may be narrower
+    w = sum_frame.shape[-1]
+    pairs = group_frames.reshape(p, 2, h, wp)
     th, tp = _resolve_tiles(
         p, h, w, row_tile, pair_tile,
         in_dtype=group_frames.dtype, acc_dtype=sum_frame.dtype,
+        stream_dtype=stream_dtype,
     )
     kernel = functools.partial(
         _alg3_step_kernel,
@@ -205,15 +246,26 @@ def alg3_stream_step(
         offset=float(offset),
         divide_first=divide_first,
         final=final,
+        stream_dtype=stream_dtype,
     )
+    ms = spaces.operand_spaces("stream", placement)
     return pl.pallas_call(
         kernel,
         grid=(p // tp, h // th),
         in_specs=[
-            pl.BlockSpec((tp, 2, th, w), lambda k, hb: (k, 0, hb, 0)),
-            pl.BlockSpec((tp, th, w), lambda k, hb: (k, hb, 0)),
+            pl.BlockSpec(
+                (tp, 2, th, wp), lambda k, hb: (k, 0, hb, 0),
+                memory_space=ms.get("pairs"),
+            ),
+            pl.BlockSpec(
+                (tp, th, w), lambda k, hb: (k, hb, 0),
+                memory_space=ms.get("acc"),
+            ),
         ],
-        out_specs=pl.BlockSpec((tp, th, w), lambda k, hb: (k, hb, 0)),
+        out_specs=pl.BlockSpec(
+            (tp, th, w), lambda k, hb: (k, hb, 0),
+            memory_space=ms.get("acc"),
+        ),
         out_shape=jax.ShapeDtypeStruct(sum_frame.shape, sum_frame.dtype),
         input_output_aliases={1: 0},
         interpret=interpret,

@@ -52,6 +52,12 @@ from repro.kernels import (
     denoise_spatial,
     denoise_stream,
     denoise_tmpframe,
+    quant,
+)
+from repro.kernels.quant import (  # noqa: F401  (shared dequant prologue)
+    STREAM_DTYPES,
+    dequant,
+    pair_diff_block,
 )
 from repro.kernels.ref import ref_stream_finalize, ref_stream_init, ref_stream_step
 
@@ -59,6 +65,7 @@ __all__ = [
     "ALGORITHMS",
     "BACKENDS",
     "SPATIAL_MODES",
+    "STREAM_DTYPES",
     "TILE_PLANS",
     "subtract_average",
     "stream_init",
@@ -68,6 +75,8 @@ __all__ = [
     "multibank_stream_init",
     "multibank_stream_step",
     "pair_diff",
+    "dequant",
+    "pair_diff_block",
     "median_window_insert",
     "median_combine",
     "ema_welford_step",
@@ -99,15 +108,12 @@ def _resolve(backend: str) -> str:
 # ---------------------------------------------------------------------------
 
 
-def _xla_materialized(frames, *, offset, accum_dtype):
+def _xla_materialized(frames, *, offset, accum_dtype, stream_dtype="u16"):
     """Alg 1/2 dataflow: build tmpFrame fully, then reduce it (two passes)."""
-    g, n, h, w = frames.shape
-    pairs = frames.reshape(g, n // 2, 2, h, w)
+    g = frames.shape[0]
     acc = jnp.dtype(accum_dtype)
-    tmp = (
-        pairs[:, :, 1].astype(acc)
-        - pairs[:, :, 0].astype(acc)
-        + jnp.asarray(offset, acc)
+    tmp = pair_diff(
+        frames, offset=offset, accum_dtype=acc, stream_dtype=stream_dtype
     )
     # Force materialization: without this XLA fuses subtract+reduce into the
     # Alg-3 dataflow and the baseline measures nothing.
@@ -115,13 +121,20 @@ def _xla_materialized(frames, *, offset, accum_dtype):
     return tmp.sum(axis=0) / jnp.asarray(g, acc)
 
 
-def _xla_streaming(frames, *, offset, accum_dtype, divide_first):
-    """Alg 3 dataflow: scan groups, running sum, single pass over inputs."""
+def _xla_streaming(frames, *, offset, accum_dtype, divide_first, stream_dtype="u16"):
+    """Alg 3 dataflow: scan groups, running sum, single pass over inputs.
+
+    Narrow wire formats dequantize per group inside the scan body (the
+    shared prologue), so the full-stream f32 copy is never materialized —
+    the streaming dataflow this path exists to measure is preserved.
+    """
     g = frames.shape[0]
     acc = jnp.dtype(accum_dtype)
     variant = "divide_first" if divide_first else "divide_last"
 
     def body(s, group):
+        if stream_dtype != "u16":
+            group = quant.dequant(group, stream_dtype, acc)
         return (
             ref_stream_step(
                 s, group, offset=offset, variant=variant, num_groups=g
@@ -129,42 +142,39 @@ def _xla_streaming(frames, *, offset, accum_dtype, divide_first):
             None,
         )
 
-    init = jnp.zeros((frames.shape[1] // 2,) + frames.shape[2:], acc)
+    w = quant.logical_width(frames.shape[-1], stream_dtype)
+    init = jnp.zeros((frames.shape[1] // 2, frames.shape[2], w), acc)
     total, _ = jax.lax.scan(body, init, frames)
     return ref_stream_finalize(total, g, variant=variant)
 
 
-def _xla_materialized_banked(frames, *, offset, accum_dtype):
+def _xla_materialized_banked(frames, *, offset, accum_dtype, stream_dtype="u16"):
     """Banked Alg 1/2 dataflow: materialize all diffs, reduce late.
 
     Written directly on the 5-D array (not vmap of the 4-D version:
     ``optimization_barrier`` has no batching rule on older JAX).
     """
-    b, g, n, h, w = frames.shape
-    pairs = frames.reshape(b, g, n // 2, 2, h, w)
+    g = frames.shape[1]
     acc = jnp.dtype(accum_dtype)
-    tmp = (
-        pairs[:, :, :, 1].astype(acc)
-        - pairs[:, :, :, 0].astype(acc)
-        + jnp.asarray(offset, acc)
+    tmp = pair_diff(
+        frames, offset=offset, accum_dtype=acc, stream_dtype=stream_dtype
     )
     tmp = jax.lax.optimization_barrier(tmp)
     return tmp.sum(axis=1) / jnp.asarray(g, acc)
 
 
-def _xla_fused_banked(frames, *, offset, accum_dtype, divide_first):
+def _xla_fused_banked(
+    frames, *, offset, accum_dtype, divide_first, stream_dtype="u16"
+):
     """Fused multi-bank path: (B, G, N, H, W) -> (B, N/2, H, W), one pass.
 
     Unlike the reference scan this lets XLA fuse the pair subtraction into
     the group reduction — no per-group dispatch, no materialized diffs.
     """
-    b, g, n, h, w = frames.shape
+    g = frames.shape[1]
     acc = jnp.dtype(accum_dtype)
-    pairs = frames.reshape(b, g, n // 2, 2, h, w)
-    diff = (
-        pairs[:, :, :, 1].astype(acc)
-        - pairs[:, :, :, 0].astype(acc)
-        + jnp.asarray(offset, acc)
+    diff = pair_diff(
+        frames, offset=offset, accum_dtype=acc, stream_dtype=stream_dtype
     )
     gg = jnp.asarray(g, acc)
     if jnp.issubdtype(acc, jnp.integer):
@@ -186,6 +196,8 @@ def _xla_fused_banked(frames, *, offset, accum_dtype, divide_first):
         "interpret",
         "row_tile",
         "pair_tile",
+        "stream_dtype",
+        "placement",
     ),
 )
 def subtract_average(
@@ -198,23 +210,35 @@ def subtract_average(
     interpret: bool | None = None,
     row_tile: int | None = None,
     pair_tile: int | None = None,
+    stream_dtype: str = "u16",
+    placement: str | None = None,
 ) -> jnp.ndarray:
-    """PRISM denoise: (G, N, H, W) frames -> (N/2, H, W) averaged diffs.
+    """PRISM denoise: (G, N, H, wire_W) frames -> (N/2, H, W) averaged diffs.
 
     ``row_tile`` / ``pair_tile`` override the Pallas block geometry (Alg 3
-    kernels only; XLA has no tiles and ignores them).
+    kernels only; XLA has no tiles and ignores them). Narrow
+    ``stream_dtype`` wire formats are dequantized in-VMEM by the Alg 3
+    Pallas kernel; the Alg 1/2 *Pallas* baselines deliberately have no
+    dequant path (they exist for dataflow comparison) — requesting one
+    explicitly is an error, while the XLA fallbacks decode every format.
     """
     if algorithm not in ALGORITHMS:
         raise ValueError(f"algorithm must be one of {ALGORITHMS}, got {algorithm}")
     backend = _resolve(backend)
     interp = (not _on_tpu()) if interpret is None else interpret
     if backend == "pallas":
-        if algorithm == "alg1":
-            return denoise_tmpframe.alg1_subtract_average(
-                frames, offset=offset, accum_dtype=accum_dtype, interpret=interp
+        if algorithm in ("alg1", "alg2"):
+            if stream_dtype != "u16":
+                raise ValueError(
+                    f"no {stream_dtype!r} ingest for the {algorithm} pallas "
+                    "baseline; use backend='xla' or stream_dtype='u16'"
+                )
+            fn = (
+                denoise_tmpframe.alg1_subtract_average
+                if algorithm == "alg1"
+                else denoise_tmpframe.alg2_subtract_average
             )
-        if algorithm == "alg2":
-            return denoise_tmpframe.alg2_subtract_average(
+            return fn(
                 frames, offset=offset, accum_dtype=accum_dtype, interpret=interp
             )
         return denoise_stream.alg3_subtract_average(
@@ -225,14 +249,20 @@ def subtract_average(
             interpret=interp,
             row_tile=row_tile,
             pair_tile=pair_tile,
+            stream_dtype=stream_dtype,
+            placement=placement,
         )
     if algorithm in ("alg1", "alg2"):
-        return _xla_materialized(frames, offset=offset, accum_dtype=accum_dtype)
+        return _xla_materialized(
+            frames, offset=offset, accum_dtype=accum_dtype,
+            stream_dtype=stream_dtype,
+        )
     return _xla_streaming(
         frames,
         offset=offset,
         accum_dtype=accum_dtype,
         divide_first=(algorithm == "alg3_v2"),
+        stream_dtype=stream_dtype,
     )
 
 
@@ -255,6 +285,8 @@ def stream_init(n: int, h: int, w: int, accum_dtype=jnp.float32) -> jnp.ndarray:
         "interpret",
         "row_tile",
         "pair_tile",
+        "stream_dtype",
+        "placement",
     ),
     donate_argnums=(0,),
 )
@@ -269,6 +301,8 @@ def stream_step(
     interpret: bool | None = None,
     row_tile: int | None = None,
     pair_tile: int | None = None,
+    stream_dtype: str = "u16",
+    placement: str | None = None,
 ) -> jnp.ndarray:
     backend = _resolve(backend)
     interp = (not _on_tpu()) if interpret is None else interpret
@@ -282,7 +316,11 @@ def stream_step(
             interpret=interp,
             row_tile=row_tile,
             pair_tile=pair_tile,
+            stream_dtype=stream_dtype,
+            placement=placement,
         )
+    if stream_dtype != "u16":
+        group_frames = quant.dequant(group_frames, stream_dtype, sum_frame.dtype)
     return ref_stream_step(
         sum_frame,
         group_frames,
@@ -313,6 +351,8 @@ def stream_finalize(sum_frame, num_groups, *, variant="divide_last"):
         "interpret",
         "row_tile",
         "pair_tile",
+        "stream_dtype",
+        "placement",
     ),
 )
 def multibank_subtract_average(
@@ -325,8 +365,10 @@ def multibank_subtract_average(
     interpret: bool | None = None,
     row_tile: int | None = None,
     pair_tile: int | None = None,
+    stream_dtype: str = "u16",
+    placement: str | None = None,
 ) -> jnp.ndarray:
-    """(B, G, N, H, W) -> (B, N/2, H, W), banks independent (zero traffic).
+    """(B, G, N, H, wire_W) -> (B, N/2, H, W), banks independent (zero traffic).
 
     Only the Alg 3 variants have a fused multi-bank Pallas kernel; the
     Alg 1/2 baselines exist for dataflow comparison and run the vmapped
@@ -354,13 +396,17 @@ def multibank_subtract_average(
             interpret=interp,
             row_tile=row_tile,
             pair_tile=pair_tile,
+            stream_dtype=stream_dtype,
+            placement=placement,
         )
     if algorithm in ("alg1", "alg2"):
         return _xla_materialized_banked(
-            frames, offset=offset, accum_dtype=accum_dtype
+            frames, offset=offset, accum_dtype=accum_dtype,
+            stream_dtype=stream_dtype,
         )
     return _xla_fused_banked(
-        frames, offset=offset, accum_dtype=accum_dtype, divide_first=divide_first
+        frames, offset=offset, accum_dtype=accum_dtype,
+        divide_first=divide_first, stream_dtype=stream_dtype,
     )
 
 
@@ -381,6 +427,8 @@ def multibank_stream_init(
         "interpret",
         "row_tile",
         "pair_tile",
+        "stream_dtype",
+        "placement",
     ),
     donate_argnums=(0,),
 )
@@ -395,8 +443,10 @@ def multibank_stream_step(
     interpret: bool | None = None,
     row_tile: int | None = None,
     pair_tile: int | None = None,
+    stream_dtype: str = "u16",
+    placement: str | None = None,
 ) -> jnp.ndarray:
-    """Fold one group per bank (B, N, H, W) into donated sums (B, N/2, H, W)."""
+    """Fold one group per bank (B, N, H, wire_W) into donated sums (B, N/2, H, W)."""
     backend = _resolve(backend)
     interp = (not _on_tpu()) if interpret is None else interpret
     if backend == "pallas":
@@ -409,7 +459,11 @@ def multibank_stream_step(
             interpret=interp,
             row_tile=row_tile,
             pair_tile=pair_tile,
+            stream_dtype=stream_dtype,
+            placement=placement,
         )
+    if stream_dtype != "u16":
+        group_frames = quant.dequant(group_frames, stream_dtype, sum_frames.dtype)
     # vectorized over the bank axis; subtract fuses into the accumulate
     return ref_stream_step(
         sum_frames,
@@ -428,25 +482,39 @@ def multibank_stream_step(
 # ---------------------------------------------------------------------------
 
 
-def pair_diff(group_frames: jnp.ndarray, *, offset: float, accum_dtype) -> jnp.ndarray:
-    """(..., N, H, W) -> (..., N/2, H, W): exc - ctl + offset (pure XLA).
+def pair_diff(
+    group_frames: jnp.ndarray,
+    *,
+    offset: float,
+    accum_dtype,
+    stream_dtype: str = "u16",
+) -> jnp.ndarray:
+    """(..., N, H, wire_W) -> (..., N/2, H, W): exc - ctl + offset (pure XLA).
 
     The shared subtraction step of every filter's XLA fallback; the Pallas
-    paths fuse this into their kernels instead.
+    paths fuse the same prologue (``pair_diff_block``) into their kernels,
+    so narrow wire formats decode identically on both backends.
     """
     acc = jnp.dtype(accum_dtype)
     shape = group_frames.shape
     pairs = group_frames.reshape(shape[:-3] + (shape[-3] // 2, 2) + shape[-2:])
-    return (
-        pairs[..., 1, :, :].astype(acc)
-        - pairs[..., 0, :, :].astype(acc)
-        + jnp.asarray(offset, acc)
+    return quant.pair_diff_block(
+        pairs, offset=offset, accum_dtype=acc, stream_dtype=stream_dtype
     )
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("slot", "offset", "backend", "interpret", "row_tile", "pair_tile"),
+    static_argnames=(
+        "slot",
+        "offset",
+        "backend",
+        "interpret",
+        "row_tile",
+        "pair_tile",
+        "stream_dtype",
+        "placement",
+    ),
     donate_argnums=(0,),
 )
 def median_window_insert(
@@ -459,6 +527,8 @@ def median_window_insert(
     interpret: bool | None = None,
     row_tile: int | None = None,
     pair_tile: int | None = None,
+    stream_dtype: str = "u16",
+    placement: str | None = None,
 ) -> jnp.ndarray:
     """Fold one group's diffs into slot ``slot`` of the (K, N/2, H, W) window."""
     backend = _resolve(backend)
@@ -471,15 +541,20 @@ def median_window_insert(
             offset=offset,
             row_tile=row_tile,
             pair_tile=pair_tile,
+            stream_dtype=stream_dtype,
+            placement=placement,
             interpret=interp,
         )
-    diff = pair_diff(group_frames, offset=offset, accum_dtype=window.dtype)
+    diff = pair_diff(
+        group_frames, offset=offset, accum_dtype=window.dtype,
+        stream_dtype=stream_dtype,
+    )
     return window.at[slot].set(diff)
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("backend", "interpret", "row_tile", "pair_tile"),
+    static_argnames=("backend", "interpret", "row_tile", "pair_tile", "placement"),
 )
 def median_combine(
     window: jnp.ndarray,
@@ -488,6 +563,7 @@ def median_combine(
     interpret: bool | None = None,
     row_tile: int | None = None,
     pair_tile: int | None = None,
+    placement: str | None = None,
 ) -> jnp.ndarray:
     """(K, N/2, H, W) -> (N/2, H, W): per-pixel median over the window axis.
 
@@ -498,7 +574,8 @@ def median_combine(
     if backend == "pallas":
         interp = (not _on_tpu()) if interpret is None else interpret
         return denoise_median.median_combine(
-            window, row_tile=row_tile, pair_tile=pair_tile, interpret=interp
+            window, row_tile=row_tile, pair_tile=pair_tile,
+            placement=placement, interpret=interp,
         )
     k = window.shape[0]
     srt = jnp.sort(window, axis=0)
@@ -516,6 +593,8 @@ def median_combine(
         "interpret",
         "row_tile",
         "pair_tile",
+        "stream_dtype",
+        "placement",
     ),
     donate_argnums=(0, 1, 2),
 )
@@ -532,6 +611,8 @@ def ema_welford_step(
     interpret: bool | None = None,
     row_tile: int | None = None,
     pair_tile: int | None = None,
+    stream_dtype: str = "u16",
+    placement: str | None = None,
 ):
     """One fused EMA + Welford/Chan update; (ema, wmean, wm2) donated.
 
@@ -553,10 +634,14 @@ def ema_welford_step(
             prior_count=prior_count,
             row_tile=row_tile,
             pair_tile=pair_tile,
+            stream_dtype=stream_dtype,
+            placement=placement,
             interpret=interp,
         )
     acc = ema.dtype
-    diff = pair_diff(group_frames, offset=offset, accum_dtype=acc)
+    diff = pair_diff(
+        group_frames, offset=offset, accum_dtype=acc, stream_dtype=stream_dtype
+    )
     a = jnp.asarray(alpha, acc)
     new_ema = ema * (1 - a) + a * diff
     # Chan chunk merge with the whole group's N/2 samples per pixel at once
@@ -581,6 +666,7 @@ def ema_welford_step(
         "interpret",
         "row_tile",
         "pair_tile",
+        "placement",
     ),
 )
 def spatial_filter(
@@ -592,6 +678,7 @@ def spatial_filter(
     interpret: bool | None = None,
     row_tile: int | None = None,
     pair_tile: int | None = None,
+    placement: str | None = None,
 ) -> jnp.ndarray:
     """(P, H, W) -> (P, H, W): 3×3 box or bilateral-lite smoothing."""
     if mode not in SPATIAL_MODES:
@@ -605,6 +692,7 @@ def spatial_filter(
             range_sigma=range_sigma,
             row_tile=row_tile,
             pair_tile=pair_tile,
+            placement=placement,
             interpret=interp,
         )
     p, h, w = frames.shape

@@ -18,6 +18,8 @@ of the step.
 
 from __future__ import annotations
 
+import math
+
 import jax
 import jax.numpy as jnp
 
@@ -69,7 +71,10 @@ def topk_compress(x, k: int):
 
 
 def topk_decompress(vals, idx, shape):
-    flat = jnp.zeros(int(jnp.prod(jnp.asarray(shape))), vals.dtype)
+    # shape is static python metadata: size it with math.prod, not a traced
+    # jnp.prod (which would make the output shape value-dependent and fail
+    # under jit)
+    flat = jnp.zeros(math.prod(shape), vals.dtype)
     flat = flat.at[idx].set(vals)
     return flat.reshape(shape)
 

@@ -568,7 +568,7 @@ class _SlotExecutor:
             buffering_s=0.0,
             compute_s=act.compute_s,
             frames=act.frames,
-            bytes_in=act.frames * c.frame_pixels * 2,
+            bytes_in=act.frames * c.bytes_per_frame,
             transfer_s=act.transfer_s,
             stall_s=s.get_wait_s,
             num_slots=act.session.ring_slots,

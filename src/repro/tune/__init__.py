@@ -63,6 +63,7 @@ def _plan_request(config) -> tuple:
         int(get("width", 0) or 0),
         int(get("num_groups", 0) or 0),
         str(get("accum_dtype", "float32")),
+        str(get("stream_dtype", "u16")),
         int(get("median_window", 1) or 1),
         str(get("spatial_mode", "bilateral")),
     )
@@ -110,5 +111,7 @@ def tile_args(config, family: str, plan: Plan | None = None) -> dict:
     row = getattr(config, "row_tile", None)
     pair = getattr(config, "pair_tile", None)
     if row is not None or pair is not None:
-        return {"row_tile": row, "pair_tile": pair}
+        # explicit geometry overrides pin placement to the family default
+        # too: an operator reasoning in tiles gets pre-tier behaviour
+        return {"row_tile": row, "pair_tile": pair, "placement": None}
     return (plan or resolve_plan(config)).tile_args(family)

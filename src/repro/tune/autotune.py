@@ -37,15 +37,33 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels import ops
+from repro.kernels import ops, quant
 from repro.tune import budget
 from repro.tune.cache import PlanCache
 from repro.tune.plan import Plan, TileGeom, exec_key, family_key
 
 __all__ = ["filter_families", "tile_candidates", "tune_plan", "plan_from_file"]
 
-#: input container dtype plans are measured with (the paper's mono12-in-u16)
+#: default input container dtype (the paper's mono12-in-u16); narrow
+#: ``stream_dtype`` configs key their plans by the wire container instead
+#: (see ``_in_dtype``), so u16 plans cached before the bandwidth tier
+#: remain valid verbatim.
 IN_DTYPE = "uint16"
+
+
+def _stream_dtype(config) -> str:
+    return quant.validate_stream_dtype(
+        str(getattr(config, "stream_dtype", "u16"))
+    )
+
+
+def _in_dtype(config) -> str:
+    """Plan-cache dtype spelling for the config's wire format.
+
+    ``"u16"`` maps to the pre-tier ``"uint16"`` so existing plan caches
+    are neither invalidated nor forked by the ``stream_dtype`` axis.
+    """
+    return quant.container_name(_stream_dtype(config))
 
 _WARMUP_STEPS = 1
 _TIMED_STEPS = 3
@@ -84,9 +102,13 @@ def tile_candidates(
     in_dtype=IN_DTYPE,
     acc_dtype="float32",
     window: int = 1,
+    in_pixel_bytes: float | None = None,
 ) -> list[tuple[int, int]]:
     """Small measured-search candidate set around the budget point."""
-    kw = dict(in_dtype=in_dtype, acc_dtype=acc_dtype, window=window)
+    kw = dict(
+        in_dtype=in_dtype, acc_dtype=acc_dtype, window=window,
+        in_pixel_bytes=in_pixel_bytes,
+    )
     cands: list[tuple[int, int]] = []
 
     def add(th: int, tp: int) -> None:
@@ -125,37 +147,48 @@ def _time_chain(step: Callable, state, warmup=_WARMUP_STEPS, iters=_TIMED_STEPS)
     return (time.perf_counter() - t0) / iters
 
 
-def _chunk(n: int, h: int, w: int, dtype=IN_DTYPE) -> jnp.ndarray:
+def _chunk(n: int, h: int, w: int, stream_dtype: str = "u16") -> jnp.ndarray:
+    """A wire-format chunk: mono12 values encoded into the stream container."""
     rng = np.random.default_rng(0)
-    return jnp.asarray(rng.integers(0, 4096, (n, h, w)), jnp.dtype(dtype))
+    mono12 = rng.integers(0, 4096, (n, h, w)).astype(np.uint16)
+    return jnp.asarray(quant.encode(mono12, stream_dtype))
 
 
-def family_timer(family: str, config, backend: str) -> Callable[[int, int], float]:
-    """seconds-per-step timer for one kernel family at the config's shape."""
+def family_timer(family: str, config, backend: str) -> Callable[..., float]:
+    """seconds-per-step timer for one kernel family at the config's shape.
+
+    The returned callable is ``timer(row_tile, pair_tile, placement=None)``
+    — placement selects a memory-space scheme from
+    ``budget.FAMILY_PLACEMENTS`` (None = the family default), so the same
+    timer serves both the geometry search and the placement search.
+    """
     n = int(config.frames_per_group)
     p, h, w = n // 2, int(config.height), int(config.width)
     acc = jnp.dtype(getattr(config, "accum_dtype", "float32"))
     g = int(getattr(config, "num_groups", 8))
     offset = float(getattr(config, "offset", 4096.0))
-    chunk = _chunk(n, h, w)
+    sd = _stream_dtype(config)
+    chunk = _chunk(n, h, w, sd)
 
     if family == "stream":
-        def timer(th, tp):
+        def timer(th, tp, placement=None):
             def step(state):
                 return ops.stream_step(
                     state, chunk, num_groups=g, offset=offset,
                     backend=backend, row_tile=th, pair_tile=tp,
+                    stream_dtype=sd, placement=placement,
                 )
             return _time_chain(step, ops.stream_init(n, h, w, acc))
         return timer
 
     if family == "median_insert":
         k = int(getattr(config, "median_window", 5))
-        def timer(th, tp):
+        def timer(th, tp, placement=None):
             def step(window):
                 return ops.median_window_insert(
                     window, chunk, slot=0, offset=offset,
                     backend=backend, row_tile=th, pair_tile=tp,
+                    stream_dtype=sd, placement=placement,
                 )
             return _time_chain(step, jnp.zeros((k, p, h, w), acc))
         return timer
@@ -165,21 +198,23 @@ def family_timer(family: str, config, backend: str) -> Callable[[int, int], floa
         window = jnp.asarray(
             np.random.default_rng(1).uniform(0, 4096, (k, p, h, w)), acc
         )
-        def timer(th, tp):
+        def timer(th, tp, placement=None):
             def step(_):
                 return ops.median_combine(
-                    window, backend=backend, row_tile=th, pair_tile=tp
+                    window, backend=backend, row_tile=th, pair_tile=tp,
+                    placement=placement,
                 )
             return _time_chain(step, None)
         return timer
 
     if family == "ema":
         alpha = float(getattr(config, "ema_alpha", 0.25))
-        def timer(th, tp):
+        def timer(th, tp, placement=None):
             def step(state):
                 return ops.ema_welford_step(
                     *state, chunk, alpha=alpha, offset=offset, prior_count=p,
                     backend=backend, row_tile=th, pair_tile=tp,
+                    stream_dtype=sd, placement=placement,
                 )
             init = (
                 jnp.zeros((p, h, w), acc),
@@ -195,11 +230,12 @@ def family_timer(family: str, config, backend: str) -> Callable[[int, int], floa
         frames = jnp.asarray(
             np.random.default_rng(2).uniform(0, 4096, (p, h, w)), acc
         )
-        def timer(th, tp):
+        def timer(th, tp, placement=None):
             def step(_):
                 return ops.spatial_filter(
                     frames, mode=mode, range_sigma=sigma,
                     backend=backend, row_tile=th, pair_tile=tp,
+                    placement=placement,
                 )
             return _time_chain(step, None)
         return timer
@@ -234,7 +270,10 @@ def tune_exec_knobs(config) -> dict:
 
     base = dataclasses.replace(config, tile_plan="heuristic", num_banks=1)
     n, h, w = base.frames_per_group, base.height, base.width
-    chunks = [jax.device_put(_chunk(n, h, w)) for _ in range(_EXEC_CHUNKS)]
+    sd = _stream_dtype(base)
+    chunks = [
+        jax.device_put(_chunk(n, h, w, sd)) for _ in range(_EXEC_CHUNKS)
+    ]
     jax.block_until_ready(chunks)
     replay = dataclasses.replace(base, num_groups=len(chunks))
 
@@ -270,7 +309,10 @@ def tune_exec_knobs(config) -> dict:
             fam, dataclasses.replace(replay, frames_per_group=c),
             backend=base.backend,
         )
-        th, tp = budget.resolve_tiles(fam, c // 2, h, w, window=window)
+        th, tp = budget.resolve_tiles(
+            fam, c // 2, h, w, window=window,
+            in_pixel_bytes=None if sd == "u16" else quant.wire_pixel_bytes(sd),
+        )
         per_frame[c] = timer(th, tp) / c
     return {
         "num_slots": best,
@@ -297,6 +339,20 @@ def _geom_valid(entry: dict, p: int, h: int) -> bool:
     )
 
 
+def _placement_valid(entry: dict, family: str) -> str | None:
+    """Cached placement scheme, degraded to the default when unknown.
+
+    Pre-tier cache entries have no ``placement`` key and hand-edited or
+    future-schema names must never reach the kernels: anything outside
+    ``budget.placement_schemes(family)`` resolves to ``None`` (family
+    default scheme), matching the ``_geom_valid``/``_exec_valid`` contract.
+    """
+    scheme = entry.get("placement")
+    if scheme in budget.placement_schemes(family):
+        return scheme
+    return None
+
+
 def _exec_valid(entry: dict) -> dict:
     """Sanitize a cached/replayed executor-knob entry.
 
@@ -321,6 +377,9 @@ def tune_plan(config, cache: PlanCache | None = None) -> Plan:
     n = int(config.frames_per_group)
     p, h, w = n // 2, int(config.height), int(config.width)
     acc = str(jnp.dtype(getattr(config, "accum_dtype", "float32")))
+    in_dtype = _in_dtype(config)
+    sd = _stream_dtype(config)
+    wire_bytes = None if sd == "u16" else quant.wire_pixel_bytes(sd)
     measured = False
     hits = 0
 
@@ -328,7 +387,7 @@ def tune_plan(config, cache: PlanCache | None = None) -> Plan:
     if backend == "pallas":  # XLA has no block geometry to search
         for family, window in filter_families(config):
             key = family_key(
-                family, p, h, w, in_dtype=IN_DTYPE, acc_dtype=acc,
+                family, p, h, w, in_dtype=in_dtype, acc_dtype=acc,
                 backend=backend, window=window,
             )
             entry = cache.get(key)
@@ -337,7 +396,8 @@ def tune_plan(config, cache: PlanCache | None = None) -> Plan:
             if entry is None or not _geom_valid(entry, p, h):
                 timer = family_timer(family, config, backend)
                 cands = tile_candidates(
-                    family, p, h, w, acc_dtype=acc, window=window
+                    family, p, h, w, acc_dtype=acc, window=window,
+                    in_pixel_bytes=wire_bytes,
                 )
                 heur = cands[0]  # budget-model pick, always first
                 # two round-robined passes, min per candidate: transient
@@ -359,19 +419,57 @@ def tune_plan(config, cache: PlanCache | None = None) -> Plan:
                 # real margin, or measurement noise gets cached as a "win"
                 if timed[best] > timed[heur] * (1.0 - _TILE_MARGIN):
                     best = heur
+                # placement pass: at the winning geometry, time each
+                # memory-space scheme of the family. Placement is
+                # numerics-neutral, so this is a pure perf race — but the
+                # same noise margin applies before a non-default scheme
+                # can displace the default, and a scheme that fails to
+                # compile is dropped (only the default failing propagates).
+                schemes = budget.placement_schemes(family)
+                default = schemes[0]
+                placed = {s: float("inf") for s in schemes}
+                if len(schemes) > 1:
+                    for _ in range(2):
+                        for scheme in list(placed):
+                            try:
+                                placed[scheme] = min(
+                                    placed[scheme],
+                                    timer(*best, placement=scheme),
+                                )
+                            except Exception:
+                                if scheme == default:
+                                    raise
+                                del placed[scheme]
+                    chosen = min(placed, key=placed.get)
+                    if placed[chosen] > placed[default] * (1.0 - _TILE_MARGIN):
+                        chosen = default
+                else:
+                    chosen = default
                 entry = {
                     "row_tile": best[0],
                     "pair_tile": best[1],
+                    "placement": chosen,
                     "measured_s": round(timed[best], 6),
                     "candidates": {
                         f"{g[0]}x{g[1]}": round(s, 6) for g, s in timed.items()
+                    },
+                    "placements": {
+                        s: round(v, 6) for s, v in placed.items()
+                        if v != float("inf")
                     },
                     "timestamp": time.time(),
                 }
                 cache.put(key, entry)
                 measured = True
             tiles.append(
-                (family, TileGeom(entry["row_tile"], entry["pair_tile"]))
+                (
+                    family,
+                    TileGeom(
+                        entry["row_tile"],
+                        entry["pair_tile"],
+                        _placement_valid(entry, family),
+                    ),
+                )
             )
 
     ek = exec_key(
@@ -428,17 +526,25 @@ def plan_from_file(config, path: str) -> Plan:
     n = int(config.frames_per_group)
     p, h, w = n // 2, int(config.height), int(config.width)
     acc = str(jnp.dtype(getattr(config, "accum_dtype", "float32")))
+    in_dtype = _in_dtype(config)
     tiles = []
     for family, window in filter_families(config):
         entry = cache.get(
             family_key(
-                family, p, h, w, in_dtype=IN_DTYPE, acc_dtype=acc,
+                family, p, h, w, in_dtype=in_dtype, acc_dtype=acc,
                 backend=backend, window=window,
             )
         )
         if entry is not None and _geom_valid(entry, p, h):
             tiles.append(
-                (family, TileGeom(entry["row_tile"], entry["pair_tile"]))
+                (
+                    family,
+                    TileGeom(
+                        entry["row_tile"],
+                        entry["pair_tile"],
+                        _placement_valid(entry, family),
+                    ),
+                )
             )
     knobs = _exec_valid(cache.get(
         exec_key(

@@ -43,12 +43,15 @@ import numpy as np
 __all__ = [
     "VMEM_BUDGET",
     "KERNEL_FAMILIES",
+    "FAMILY_PLACEMENTS",
     "KernelBudget",
     "largest_divisor_leq",
     "block_bytes",
     "pick_row_tile",
     "pick_pair_tile",
     "resolve_tiles",
+    "placement_schemes",
+    "resolve_placement",
     "legacy_pick_row_tile",
     "legacy_pick_pair_tile",
 ]
@@ -108,9 +111,78 @@ KERNEL_FAMILIES: dict[str, KernelBudget] = {
     "spatial": KernelBudget(acc_planes=4),
 }
 
+#: Per-family memory-space placement schemes: scheme name -> logical
+#: operand -> space string (``"vmem"`` / ``"smem"`` / ``"any"``). The
+#: first scheme of each family is the default ("auto"); ``"compiler"``
+#: leaves every BlockSpec unannotated (pre-tier behaviour, the compiler
+#: decides). ``repro.kernels.spaces`` translates the strings to Pallas
+#: memory-space objects; the measured autotuner treats the scheme names
+#: as a candidate axis and caches the winner in the plan next to the
+#: block geometry. Placement never changes the numeric stream — only
+#: where blocks live — so every scheme of a family is interchangeable
+#: for correctness.
+FAMILY_PLACEMENTS: dict[str, dict[str, dict[str, str]]] = {
+    # pairs stream through VMEM, the running sum is a VMEM accumulator
+    "stream": {
+        "auto": {"pairs": "vmem", "acc": "vmem"},
+        "compiler": {},
+    },
+    # the donated window-slot operand is never read (pure alias donor),
+    # so by default it stays in ANY/HBM and only the written slot block
+    # occupies VMEM; "vmem_donor" is the conservative alternative
+    "median_insert": {
+        "auto": {"pairs": "vmem", "donor": "any", "slot": "vmem"},
+        "vmem_donor": {"pairs": "vmem", "donor": "vmem", "slot": "vmem"},
+        "compiler": {},
+    },
+    # the K-slot window block dominates; it and the median live in VMEM
+    "median_combine": {
+        "auto": {"window": "vmem", "out": "vmem"},
+        "compiler": {},
+    },
+    # the traced step counter is a (1,1) scalar -> SMEM by default
+    # (paper's control scalars live beside the datapath, not in BRAM);
+    # "vmem_scalar" keeps it with the vector operands instead
+    "ema": {
+        "auto": {"pairs": "vmem", "state": "vmem", "prior": "smem"},
+        "vmem_scalar": {"pairs": "vmem", "state": "vmem", "prior": "vmem"},
+        "compiler": {},
+    },
+    "spatial": {
+        "auto": {"halo": "vmem", "out": "vmem"},
+        "compiler": {},
+    },
+}
+
 
 def _bytes(dtype) -> int:
     return int(np.dtype(dtype).itemsize)
+
+
+def placement_schemes(family: str) -> tuple[str, ...]:
+    """Valid placement scheme names for ``family``, default first."""
+    _family(family)
+    return tuple(FAMILY_PLACEMENTS[family])
+
+
+def resolve_placement(family: str, placement: str | None = None) -> dict[str, str]:
+    """Logical-operand -> space-string map for one scheme of ``family``.
+
+    ``None`` selects the family default (first scheme). Unknown scheme
+    names raise — a stale plan cache must fail loudly here, not silently
+    mis-place operands.
+    """
+    _family(family)
+    schemes = FAMILY_PLACEMENTS[family]
+    if placement is None:
+        placement = next(iter(schemes))
+    try:
+        return dict(schemes[placement])
+    except KeyError:
+        raise ValueError(
+            f"placement for {family!r} must be one of {tuple(schemes)}, "
+            f"got {placement!r}"
+        ) from None
 
 
 def _family(family: str) -> KernelBudget:
@@ -132,16 +204,26 @@ def block_bytes(
     in_dtype="uint16",
     acc_dtype="float32",
     window: int = 1,
+    in_pixel_bytes: float | None = None,
 ) -> int:
-    """VMEM bytes of one grid step's block working set for ``family``."""
+    """VMEM bytes of one grid step's block working set for ``family``.
+
+    ``in_pixel_bytes`` overrides the input-plane cost per *logical* pixel
+    for quantized wire formats (1.0 for u8, 1.5 for packed-12-bit, whose
+    wire block is narrower than the logical width). ``None`` keeps the
+    exact pre-tier integer path from ``in_dtype``.
+    """
     kb = _family(family)
-    in_b, acc_b = _bytes(in_dtype), _bytes(acc_dtype)
+    acc_b = _bytes(acc_dtype)
+    in_b: float | int = (
+        _bytes(in_dtype) if in_pixel_bytes is None else in_pixel_bytes
+    )
     per_pair = row_tile * w * (
         kb.in_planes * in_b
         + kb.acc_planes * acc_b
         + kb.window_planes * window * acc_b
     )
-    return pair_tile * per_pair + kb.row_planes * row_tile * w * acc_b
+    return int(pair_tile * per_pair + kb.row_planes * row_tile * w * acc_b)
 
 
 def pick_row_tile(
@@ -152,6 +234,7 @@ def pick_row_tile(
     in_dtype="uint16",
     acc_dtype="float32",
     window: int = 1,
+    in_pixel_bytes: float | None = None,
     vmem_budget: int = VMEM_BUDGET,
 ) -> int:
     """Largest exact divisor of ``h`` whose single-pair block fits the budget.
@@ -161,7 +244,8 @@ def pick_row_tile(
     plans stay comparable across the refactor.
     """
     per_row = block_bytes(
-        family, 1, 1, w, in_dtype=in_dtype, acc_dtype=acc_dtype, window=window
+        family, 1, 1, w, in_dtype=in_dtype, acc_dtype=acc_dtype, window=window,
+        in_pixel_bytes=in_pixel_bytes,
     )
     rows = max(1, vmem_budget // max(1, per_row))
     if rows >= h:
@@ -178,6 +262,7 @@ def pick_pair_tile(
     in_dtype="uint16",
     acc_dtype="float32",
     window: int = 1,
+    in_pixel_bytes: float | None = None,
     vmem_budget: int = VMEM_BUDGET,
 ) -> int:
     """Frame pairs per block: fill what the row tile left of the budget."""
@@ -185,7 +270,7 @@ def pick_pair_tile(
     fixed = kb.row_planes * row_tile * w * _bytes(acc_dtype)
     per_pair = block_bytes(
         family, row_tile, 1, w, in_dtype=in_dtype, acc_dtype=acc_dtype,
-        window=window,
+        window=window, in_pixel_bytes=in_pixel_bytes,
     ) - fixed
     budget = max(1, (vmem_budget - fixed) // max(1, per_pair))
     return largest_divisor_leq(p, budget)
@@ -210,6 +295,7 @@ def resolve_tiles(
     in_dtype="uint16",
     acc_dtype="float32",
     window: int = 1,
+    in_pixel_bytes: float | None = None,
     vmem_budget: int = VMEM_BUDGET,
 ) -> tuple[int, int]:
     """(row_tile, pair_tile) for a (p, h, w) problem of ``family``.
@@ -220,7 +306,7 @@ def resolve_tiles(
     """
     kw = dict(
         in_dtype=in_dtype, acc_dtype=acc_dtype, window=window,
-        vmem_budget=vmem_budget,
+        in_pixel_bytes=in_pixel_bytes, vmem_budget=vmem_budget,
     )
     if family == "ema" and vmem_budget == VMEM_BUDGET:
         # The EMA kernel's Chan variance merge accumulates chunk-at-a-time

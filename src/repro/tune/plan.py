@@ -34,13 +34,25 @@ SCHEMA_VERSION = 1
 
 @dataclasses.dataclass(frozen=True)
 class TileGeom:
-    """Block geometry for one kernel family (None = kernel heuristic)."""
+    """Block geometry + memory placement for one kernel family.
+
+    ``None`` row/pair tiles fall through to the kernel heuristic; a
+    ``None`` placement selects the family's default scheme
+    (``repro.tune.budget.FAMILY_PLACEMENTS``). Placement is
+    numerics-neutral — it decides where operands live, never what the
+    kernel computes — so plans may mix tuned geometry with any scheme.
+    """
 
     row_tile: int | None = None
     pair_tile: int | None = None
+    placement: str | None = None
 
     def as_args(self) -> dict:
-        return {"row_tile": self.row_tile, "pair_tile": self.pair_tile}
+        return {
+            "row_tile": self.row_tile,
+            "pair_tile": self.pair_tile,
+            "placement": self.placement,
+        }
 
 
 @dataclasses.dataclass(frozen=True)
@@ -61,16 +73,19 @@ class Plan:
     source: str = "heuristic"
 
     def tile_args(self, family: str) -> dict:
-        """ops-call kwargs for ``family`` (row_tile/pair_tile or Nones)."""
+        """ops-call kwargs for ``family`` (row_tile/pair_tile/placement)."""
         for fam, geom in self.tiles:
             if fam == family:
                 return geom.as_args()
-        return {"row_tile": None, "pair_tile": None}
+        return {"row_tile": None, "pair_tile": None, "placement": None}
 
     def describe(self) -> str:
         parts = [f"mode={self.mode}", f"source={self.source}"]
         for fam, geom in self.tiles:
-            parts.append(f"{fam}=({geom.row_tile},{geom.pair_tile})")
+            desc = f"{fam}=({geom.row_tile},{geom.pair_tile})"
+            if geom.placement is not None:
+                desc += f"@{geom.placement}"
+            parts.append(desc)
         if self.num_slots is not None:
             parts.append(f"num_slots={self.num_slots}")
         if self.frames_per_chunk is not None:

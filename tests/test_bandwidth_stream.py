@@ -1,0 +1,270 @@
+"""Quantized ingest end to end: the source emits narrow wire containers,
+every executor (inline / pipelined / banked / serve) streams them to the
+same bits, p12 is bit-identical to the u16 baseline on both backends, u8
+stays inside its quantization bound, the wire-byte accounting halves, the
+u8 jitted step compiles exactly once per stream, and every memory-space
+placement scheme of every kernel family is numerically interchangeable."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.denoise import DenoiseConfig, StreamingDenoiser
+from repro.core.streaming import run_inline, run_pipelined
+from repro.data.prism import PrismSource
+from repro.kernels import ops, quant
+from repro.serve import Session, SessionScheduler
+from repro.tune import budget
+
+NARROW = ("u8", "p12")
+
+
+def _cfg(**kw):
+    base = dict(
+        num_groups=4, frames_per_group=20, height=16, width=64, backend="xla"
+    )
+    base.update(kw)
+    return DenoiseConfig(**base)
+
+
+def _serial(cfg, groups):
+    den = StreamingDenoiser(cfg)
+    state = den.init()
+    for k, g in enumerate(groups):
+        state = den.ingest(state, jnp.asarray(g), step=k)
+    return np.asarray(den.finalize(state))
+
+
+# ---------------------------------------------------------------------------
+# The source emits wire containers; decoding recovers the u16 stream.
+# ---------------------------------------------------------------------------
+
+
+def test_prism_emits_wire_containers():
+    seed = 11
+    base = list(PrismSource(_cfg(), seed=seed).groups())
+    for sd in NARROW:
+        cfg = _cfg(stream_dtype=sd)
+        groups = list(PrismSource(cfg, seed=seed).groups())
+        for g16, gw in zip(base, groups):
+            assert gw.dtype == quant.container_dtype(sd)
+            assert gw.shape == g16.shape[:-1] + (cfg.wire_width,)
+            dec = quant.decode(gw, sd)
+            if sd == "p12":  # same mono12 pixels, exactly
+                np.testing.assert_array_equal(dec, g16)
+            else:
+                err = np.abs(dec.astype(np.float64) - g16.astype(np.float64))
+                assert err.max() <= quant.U8_SCALE / 2 + 1e-9
+
+
+def test_wire_byte_properties():
+    cfg16, cfg8, cfg12 = (_cfg(stream_dtype=sd) for sd in ("u16", "u8", "p12"))
+    assert cfg16.bytes_per_frame == 2 * cfg16.frame_pixels
+    assert cfg8.bytes_per_frame == cfg8.frame_pixels  # exactly half of u16
+    assert cfg12.bytes_per_frame == cfg12.frame_pixels * 3 // 2
+    assert cfg12.wire_width == cfg12.width // 2 * 3
+    assert cfg8.input_bytes * 2 == cfg16.input_bytes
+
+
+# ---------------------------------------------------------------------------
+# Numeric contracts vs the u16 baseline, per backend.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+def test_p12_bit_identical_to_u16(backend):
+    seed = 3
+    cfg16 = _cfg(backend=backend)
+    cfg12 = _cfg(backend=backend, stream_dtype="p12")
+    out16 = _serial(cfg16, PrismSource(cfg16, seed=seed).groups())
+    out12 = _serial(cfg12, PrismSource(cfg12, seed=seed).groups())
+    np.testing.assert_array_equal(out12, out16)
+
+
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+def test_u8_error_bounded_by_scale(backend):
+    seed = 3
+    cfg16 = _cfg(backend=backend)
+    cfg8 = _cfg(backend=backend, stream_dtype="u8")
+    out16 = _serial(cfg16, PrismSource(cfg16, seed=seed).groups())
+    out8 = _serial(cfg8, PrismSource(cfg8, seed=seed).groups())
+    # each pair diff dequantizes two pixels (S/2 each): bound is S, and
+    # averaging diffs never widens it
+    assert np.abs(out8 - out16).max() <= quant.U8_SCALE + 1e-3
+
+
+@pytest.mark.parametrize("sd", NARROW)
+def test_pallas_matches_xla_on_narrow_wire(sd):
+    """Both backends run the one shared dequant prologue: same stream up
+    to f32 summation order (the pre-tier cross-backend tolerance)."""
+    seed = 5
+    outs = {}
+    for backend in ("xla", "pallas"):
+        cfg = _cfg(backend=backend, stream_dtype=sd)
+        outs[backend] = _serial(cfg, PrismSource(cfg, seed=seed).groups())
+    np.testing.assert_allclose(outs["pallas"], outs["xla"], atol=1e-2)
+
+
+# ---------------------------------------------------------------------------
+# Executor invariance: the wire format never depends on the executor.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("sd", NARROW)
+def test_narrow_identical_across_executors(sd):
+    cfg = _cfg(stream_dtype=sd)
+    groups = list(PrismSource(cfg, seed=7).groups())
+    ref = _serial(cfg, groups)
+    out_inline, _ = run_inline(cfg, iter(groups), prefetch=False)
+    np.testing.assert_array_equal(np.asarray(out_inline), ref)
+    out_pipe, rep = run_pipelined(cfg, iter(groups), num_slots=3)
+    np.testing.assert_array_equal(np.asarray(out_pipe), ref)
+    assert rep.drops == 0
+    with SessionScheduler(slots_per_executor=1, max_executors=1) as sched:
+        handle = sched.submit(Session(config=cfg, source=iter(groups)))
+        out_serve, _ = handle.result(timeout=300)
+    np.testing.assert_array_equal(np.asarray(out_serve), ref)
+
+
+def test_banked_p12_matches_u16():
+    cfg12 = _cfg(stream_dtype="p12", num_banks=2)
+    cfg16 = _cfg(num_banks=2)
+    chunks12 = list(PrismSource(cfg12, seed=5).banked_groups())
+    chunks16 = list(PrismSource(cfg16, seed=5).banked_groups())
+    out12, rep12 = run_pipelined(cfg12, iter(chunks12))
+    out16, _ = run_pipelined(cfg16, iter(chunks16))
+    np.testing.assert_array_equal(np.asarray(out12), np.asarray(out16))
+    assert rep12.drops == 0
+
+
+def test_bytes_in_accounts_wire_not_logical_bytes():
+    cfg8, cfg16 = _cfg(stream_dtype="u8"), _cfg()
+    _, rep8 = run_pipelined(
+        cfg8, iter(PrismSource(cfg8, seed=1).groups())
+    )
+    _, rep16 = run_pipelined(
+        cfg16, iter(PrismSource(cfg16, seed=1).groups())
+    )
+    frames = cfg8.num_groups * cfg8.frames_per_group
+    assert rep8.bytes_in == frames * cfg8.bytes_per_frame
+    assert rep16.bytes_in == 2 * rep8.bytes_in
+
+
+# ---------------------------------------------------------------------------
+# Config validation: unusable wire/format combinations fail at config time.
+# ---------------------------------------------------------------------------
+
+
+def test_config_validation_errors():
+    with pytest.raises(ValueError, match="even"):
+        _cfg(stream_dtype="p12", width=63)
+    with pytest.raises(ValueError, match="floating accum_dtype"):
+        _cfg(stream_dtype="u8", accum_dtype="int32")
+    with pytest.raises(ValueError, match="pallas baseline"):
+        _cfg(stream_dtype="u8", backend="pallas", algorithm="alg1")
+    with pytest.raises(ValueError, match="stream_dtype must be one of"):
+        _cfg(stream_dtype="u12")
+
+
+def test_reference_u16_rejects_narrow_wire():
+    cfg = _cfg(stream_dtype="u8")
+    den = StreamingDenoiser(cfg)
+    frames = next(iter(PrismSource(cfg, seed=0).groups()))
+    with pytest.raises(ValueError, match="u16-container"):
+        den.reference_u16(jnp.asarray(frames)[None])
+
+
+# ---------------------------------------------------------------------------
+# Retrace guard: a narrow wire stream still compiles exactly once.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("filter_name,fn", [
+    ("pair_average", lambda: ops.stream_step),
+    ("ema_variance", lambda: ops.ema_welford_step),
+])
+def test_u8_stream_compiles_step_exactly_once(filter_name, fn):
+    cfg = _cfg(stream_dtype="u8", filter_name=filter_name, num_groups=5)
+    groups = list(PrismSource(cfg, seed=2).groups())
+    den = StreamingDenoiser(cfg)
+    jitted = fn()
+    if not hasattr(jitted, "_cache_size"):  # pragma: no cover - newer jax
+        pytest.skip("jax jit cache introspection not available")
+    state = den.init()
+    state = den.ingest(state, jnp.asarray(groups[0]), step=0)
+    after_first = jitted._cache_size()
+    for k, g in enumerate(groups[1:], start=1):
+        state = den.ingest(state, jnp.asarray(g), step=k)
+    jax.block_until_ready(den.finalize(state))
+    assert jitted._cache_size() == after_first  # zero mid-stream retraces
+
+
+# ---------------------------------------------------------------------------
+# Memory-space placement schemes are numerically interchangeable.
+# ---------------------------------------------------------------------------
+
+
+def _wire(shape, sd="u16", seed=0):
+    rng = np.random.default_rng(seed)
+    mono12 = rng.integers(0, 4096, shape).astype(np.uint16)
+    return jnp.asarray(quant.encode(mono12, sd))
+
+
+def test_placement_schemes_bitwise_equal_per_family():
+    """Placement moves blocks between VMEM/SMEM/ANY, never changes the
+    numeric stream: every scheme reproduces the family default exactly."""
+    n, h, w = 8, 16, 64
+    chunk = _wire((n, h, w), seed=1)
+    acc = jnp.float32
+    runs = {
+        "stream": lambda p: ops.subtract_average(
+            _wire((2, n, h, w), seed=2), offset=100.0, algorithm="alg3",
+            backend="pallas", accum_dtype=acc, placement=p,
+        ),
+        "median_insert": lambda p: ops.median_window_insert(
+            jnp.zeros((3, n // 2, h, w), acc), chunk, slot=1, offset=100.0,
+            backend="pallas", placement=p,
+        ),
+        "median_combine": lambda p: ops.median_combine(
+            jnp.asarray(
+                np.random.default_rng(3).normal(size=(3, n // 2, h, w))
+            ).astype(acc),
+            backend="pallas", placement=p,
+        ),
+        "ema": lambda p: jnp.concatenate(
+            [
+                jnp.ravel(x)
+                for x in ops.ema_welford_step(
+                    jnp.zeros((n // 2, h, w), acc),
+                    jnp.zeros((h, w), acc),
+                    jnp.zeros((h, w), acc),
+                    chunk,
+                    alpha=0.2, offset=100.0, prior_count=0,
+                    backend="pallas", placement=p,
+                )
+            ]
+        ),
+        "spatial": lambda p: ops.spatial_filter(
+            jnp.asarray(
+                np.random.default_rng(4).normal(size=(n // 2, h, w))
+            ).astype(acc),
+            mode="box", backend="pallas", placement=p,
+        ),
+    }
+    for family, fn in runs.items():
+        schemes = budget.placement_schemes(family)
+        assert schemes[-1] == "compiler"  # every family can opt out
+        ref = np.asarray(fn(schemes[0]))
+        for scheme in schemes[1:]:
+            np.testing.assert_array_equal(
+                np.asarray(fn(scheme)), ref, err_msg=f"{family}/{scheme}"
+            )
+
+
+def test_unknown_placement_scheme_raises():
+    with pytest.raises(ValueError, match="placement"):
+        ops.subtract_average(
+            _wire((2, 8, 16, 64)), offset=100.0, algorithm="alg3",
+            backend="pallas", accum_dtype=jnp.float32, placement="bram",
+        )

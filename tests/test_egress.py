@@ -1,0 +1,168 @@
+"""Compressed egress (repro.core.egress): per-packet wire accounting, the
+int8 error bound and topk exactness contracts, bit-exact "none" baseline,
+and drop-in use as the consumer stage of run_pipelined and a serve
+Session (the two ``consumer(step, partial)`` slots it targets)."""
+
+import numpy as np
+import pytest
+
+from repro.core import EGRESS_KINDS, CompressedEgress, EgressPacket
+from repro.core.denoise import DenoiseConfig, StreamingDenoiser
+from repro.core.streaming import run_pipelined
+from repro.data.prism import PrismSource
+from repro.serve import Session, SessionScheduler
+
+
+def _cfg(**kw):
+    base = dict(num_groups=4, frames_per_group=20, height=16, width=64)
+    base.update(kw)
+    return DenoiseConfig(**base)
+
+
+def _partials(cfg, seed=3):
+    """(partials, groups): the per-step running estimates a consumer sees."""
+    den = StreamingDenoiser(cfg)
+    groups = list(PrismSource(cfg, seed=seed).groups())
+    state, outs = den.init(), []
+    for k, g in enumerate(groups):
+        state = den.ingest(state, np.asarray(g), step=k)
+        outs.append(np.asarray(den.filter.partial(state, step_index=k)))
+    return outs, groups
+
+
+# ---------------------------------------------------------------------------
+# Construction and validation.
+# ---------------------------------------------------------------------------
+
+
+def test_bad_kind_and_k_fraction_raise():
+    with pytest.raises(ValueError, match="egress kind"):
+        CompressedEgress("zstd")
+    with pytest.raises(ValueError, match="k_fraction"):
+        CompressedEgress("topk", k_fraction=0.0)
+    with pytest.raises(ValueError, match="k_fraction"):
+        CompressedEgress("topk", k_fraction=1.5)
+    for kind in EGRESS_KINDS:  # every advertised kind constructs
+        CompressedEgress(kind)
+
+
+# ---------------------------------------------------------------------------
+# Per-kind wire contracts on real pipeline partials.
+# ---------------------------------------------------------------------------
+
+
+def test_none_round_trip_bit_exact():
+    cfg = _cfg()
+    parts, _ = _partials(cfg)
+    eg = CompressedEgress("none", center=cfg.offset)
+    for k, p in enumerate(parts):
+        eg(k, p)
+    assert len(eg.packets) == cfg.num_groups
+    for k, p in enumerate(parts):
+        np.testing.assert_array_equal(
+            eg.decompress(k), p.astype(np.float32)
+        )
+    assert eg.wire_bytes == eg.raw_bytes
+    assert eg.reduction == 1.0
+
+
+def test_int8_error_bounded_by_half_scale():
+    cfg = _cfg()
+    parts, _ = _partials(cfg)
+    eg = CompressedEgress("int8", center=cfg.offset)
+    for k, p in enumerate(parts):
+        eg(k, p)
+    for k, p in enumerate(parts):
+        pkt = eg.packets[k]
+        got = eg.decompress(k)
+        assert got.shape == p.shape
+        err = np.abs(got.astype(np.float64) - p.astype(np.float64))
+        # + 1e-3: f32 rounding when the ~4096 center is re-added
+        assert err.max() <= pkt.scale / 2 + 1e-3
+        # one f32 scale rides along with the int8 values
+        assert pkt.wire_bytes == p.size + 4
+        assert pkt.raw_bytes == p.size * 4
+    assert 3.5 < eg.reduction < 4.01  # ~4x minus the per-packet scale
+
+
+def test_topk_kept_pixels_exact_dropped_decode_to_center():
+    cfg = _cfg()
+    parts, _ = _partials(cfg)
+    frac = 0.1
+    eg = CompressedEgress("topk", center=cfg.offset, k_fraction=frac)
+    for k, p in enumerate(parts):
+        eg(k, p)
+    for k, p in enumerate(parts):
+        pkt = eg.packets[k]
+        vals, idx = pkt.payload
+        assert vals.size == max(1, int(p.size * frac))
+        assert pkt.wire_bytes == vals.size * 8  # f32 value + i32 index
+        got = eg.decompress(k)
+        flat_p, flat_g = p.reshape(-1), got.reshape(-1)
+        kept = np.zeros(p.size, bool)
+        kept[idx] = True
+        # kept pixels reconstruct exactly (center - center cancels in f32
+        # because partial values sit near the offset: assert exactly)
+        np.testing.assert_array_equal(
+            flat_g[kept], flat_p[kept].astype(np.float32)
+        )
+        np.testing.assert_array_equal(
+            flat_g[~kept], np.float32(cfg.offset)
+        )
+    # 4 raw bytes/pixel vs 8 wire bytes per kept pixel: 4/(8*frac)
+    assert eg.reduction == pytest.approx(4.0 / (8 * frac), rel=0.05)
+
+
+def test_packet_raw_bytes_is_f32_frame():
+    pkt = EgressPacket(
+        step=0, kind="none", shape=(10, 16, 64),
+        payload=(np.zeros(10 * 16 * 64, np.float32),),
+    )
+    assert pkt.raw_bytes == 10 * 16 * 64 * 4
+
+
+# ---------------------------------------------------------------------------
+# Drop-in consumer: run_pipelined and a serve Session.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kind", EGRESS_KINDS)
+def test_run_pipelined_consumer_integration(kind):
+    cfg = _cfg()
+    parts, groups = _partials(cfg)
+    eg = CompressedEgress(kind, center=cfg.offset, k_fraction=0.1)
+    out, rep = run_pipelined(cfg, iter(groups), consumer=eg)
+    assert rep.drops == 0
+    assert [p.step for p in eg.packets] == list(range(cfg.num_groups))
+    # the last packet decodes the final estimate: exact for "none",
+    # within the int8 bound otherwise; topk keeps the top pixels exact
+    final = np.asarray(out).astype(np.float32)
+    got = eg.decompress(-1)
+    if kind == "none":
+        np.testing.assert_array_equal(got, final)
+    elif kind == "int8":
+        assert np.abs(got - final).max() <= eg.packets[-1].scale / 2 + 1e-3
+    else:
+        _, idx = eg.packets[-1].payload
+        np.testing.assert_array_equal(
+            got.reshape(-1)[idx], final.reshape(-1)[idx]
+        )
+    if kind != "none":
+        assert eg.reduction > 3.0
+
+
+def test_serve_session_consumer_integration():
+    cfg = _cfg(backend="xla")
+    groups = list(PrismSource(cfg, seed=5).groups())
+    eg = CompressedEgress("int8", center=cfg.offset)
+    with SessionScheduler(slots_per_executor=1, max_executors=1) as sched:
+        handle = sched.submit(
+            Session(config=cfg, source=iter(groups), consumer=eg)
+        )
+        out, rep = handle.result(timeout=300)
+    assert len(eg.packets) == cfg.num_groups
+    final = np.asarray(out).astype(np.float32)
+    assert (
+        np.abs(eg.decompress(-1) - final).max()
+        <= eg.packets[-1].scale / 2 + 1e-3
+    )

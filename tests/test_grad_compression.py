@@ -71,3 +71,20 @@ def test_ef_residual_carries_dropped_mass():
         {"w": jnp.zeros(4)}, res, kind="topk", k_fraction=0.5
     )
     assert float(jnp.abs(sent2["w"]).sum()) > 0
+
+
+def test_topk_decompress_jit_compatible_nd_shape():
+    """The scatter target is sized from static python shape metadata, so
+    decompress works under jit for any rank (the egress path jits it)."""
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(3, 4, 5)), jnp.float32)
+    vals, idx = C.topk_compress(x.reshape(-1), 7)
+    jitted = jax.jit(C.topk_decompress, static_argnums=2)
+    dense = jitted(vals, idx, (3 * 4 * 5,)).reshape(3, 4, 5)
+    eager = C.topk_decompress(vals, idx, (3 * 4 * 5,)).reshape(3, 4, 5)
+    np.testing.assert_array_equal(np.asarray(dense), np.asarray(eager))
+    # kept entries match the source exactly; everything else is zero
+    np.testing.assert_array_equal(
+        np.asarray(dense).reshape(-1)[np.asarray(idx)],
+        np.asarray(x).reshape(-1)[np.asarray(idx)],
+    )
+    assert np.count_nonzero(np.asarray(dense)) <= 7

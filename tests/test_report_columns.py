@@ -135,3 +135,26 @@ def test_session_report_row_parses_for_every_field():
         "latency_p99_ms",
     ):
         assert required in names and required in header
+
+
+# ---------------------------------------------------------------------------
+# roofline_report achieved points: emitter and pinned schema stay in sync.
+# ---------------------------------------------------------------------------
+
+
+def test_roofline_achieved_derived_matches_schema():
+    import pytest
+
+    from benchmarks.roofline_report import ACHIEVED_FIELDS, _achieved_derived
+
+    fields = {k: str(i) for i, k in enumerate(ACHIEVED_FIELDS)}
+    derived = _achieved_derived(fields)
+    pairs = [kv.split("=", 1) for kv in derived.split(";")]
+    # every pinned field present, in schema order, nothing extra
+    assert [k for k, _ in pairs] == list(ACHIEVED_FIELDS)
+    assert dict(pairs) == fields
+    # a dropped or smuggled field fails loudly instead of desyncing rows
+    with pytest.raises(ValueError, match="ACHIEVED_FIELDS"):
+        _achieved_derived({k: "" for k in ACHIEVED_FIELDS[:-1]})
+    with pytest.raises(ValueError, match="ACHIEVED_FIELDS"):
+        _achieved_derived(dict(fields, extra=""))

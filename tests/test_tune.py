@@ -197,7 +197,9 @@ def test_heuristic_plan_is_default_and_empty():
     assert cfg.tile_plan == "heuristic"
     plan = tune.resolve_plan(cfg)
     assert plan is tune.HEURISTIC_PLAN
-    assert plan.tile_args("stream") == {"row_tile": None, "pair_tile": None}
+    assert plan.tile_args("stream") == {
+        "row_tile": None, "pair_tile": None, "placement": None
+    }
     assert plan.num_slots is None
 
 
@@ -211,7 +213,9 @@ def test_config_rejects_bad_tile_plan():
 def test_explicit_tile_overrides_beat_plan(tmp_path):
     cfg = _cfg(row_tile=8, pair_tile=2, tile_plan="auto")
     den = StreamingDenoiser(cfg)
-    assert den.filter.tile_args("stream") == {"row_tile": 8, "pair_tile": 2}
+    assert den.filter.tile_args("stream") == {
+        "row_tile": 8, "pair_tile": 2, "placement": None
+    }
 
 
 def test_auto_mode_tunes_caches_and_replays(tmp_path):
@@ -309,7 +313,8 @@ def test_plan_file_tiles_apply_and_stream_is_bit_identical(tmp_path):
     path.write_text(json.dumps({"version": SCHEMA_VERSION, "entries": entries}))
     planned = _cfg(backend="pallas", tile_plan=str(path))
     den = StreamingDenoiser(planned)
-    assert den.filter.tile_args("stream") == {"row_tile": 8, "pair_tile": 5}
+    args = den.filter.tile_args("stream")
+    assert (args["row_tile"], args["pair_tile"]) == (8, 5)
     groups = _groups(cfg)
     out_ref, _ = run_inline(cfg, iter(groups), prefetch=False)
     out, _ = run_inline(planned, iter(groups), prefetch=False)
@@ -349,7 +354,9 @@ def test_malformed_plan_file_falls_back_to_heuristic(tmp_path):
     planned = _cfg(tile_plan=str(path))
     with pytest.warns(RuntimeWarning, match="falling back to the heuristic"):
         plan = tune.resolve_plan(planned)
-    assert plan.tile_args("stream") == {"row_tile": None, "pair_tile": None}
+    assert plan.tile_args("stream") == {
+        "row_tile": None, "pair_tile": None, "placement": None
+    }
     # ...and the stream still runs, numerically identical to heuristic
     cfg = _cfg()
     groups = _groups(cfg)
@@ -395,7 +402,9 @@ def test_stale_plan_entry_with_non_dividing_tiles_is_skipped(tmp_path):
     path.write_text(json.dumps({"version": SCHEMA_VERSION, "entries": entries}))
     planned = _cfg(backend="pallas", tile_plan=str(path))
     plan = tune.resolve_plan(planned)
-    assert plan.tile_args("stream") == {"row_tile": None, "pair_tile": None}
+    assert plan.tile_args("stream") == {
+        "row_tile": None, "pair_tile": None, "placement": None
+    }
     groups = _groups(cfg)
     out, _ = run_inline(planned, iter(groups), prefetch=False)  # no crash
     out_ref, _ = run_inline(cfg, iter(groups), prefetch=False)
