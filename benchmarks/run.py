@@ -28,6 +28,7 @@ from benchmarks import (
     table11_multitenant,
     table12_autotune,
     table13_bandwidth,
+    table14_fleet,
 )
 
 MODULES = [
@@ -44,6 +45,7 @@ MODULES = [
     ("table11-multitenant", table11_multitenant),
     ("table12-autotune", table12_autotune),
     ("table13-bandwidth", table13_bandwidth),
+    ("table14-fleet", table14_fleet),
     ("fig8", fig8_denoise_snr),
     ("roofline", roofline_report),
 ]

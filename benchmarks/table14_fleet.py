@@ -1,0 +1,256 @@
+"""Table 14 (framework extension): fault-tolerant fleet serving.
+
+Table 11 measured what co-scheduling buys when tenants share one device;
+this table measures what the :class:`~repro.serve.FleetScheduler` layer
+on top of it *costs* and *guarantees*:
+
+* **scaling cells** — ``sessions`` uniform streams spread over
+  ``executors`` pool members (``slots_per_executor`` sized so placement
+  spills across the pool): aggregate fps and worst per-session p99
+  service latency vs executor count, with per-group checkpointing ON —
+  the steady-state overhead a fleet operator actually pays.
+* **kill cell** — a scripted :class:`~repro.serve.faults.FaultPlan`
+  crashes one executor mid-stream. Every hosted session must restore its
+  newest checkpoint, re-fold its replay log on a surviving executor and
+  finish with the bit-identical output contract the recovery tests pin
+  down; the point records the kill-to-recovered latency distribution
+  from ``fleet.recovery_latencies_s()`` (real clock here — the marks are
+  wall timestamps, unlike the ``FakeClock`` unit tests).
+
+Points land in ``BENCH_denoise.json`` as the ``fleet`` trajectory
+(``kind="fleet"``): aggregate fps, per-session p99, checkpoint counts,
+and — for the kill cell — ``kill_to_recovered_ms`` plus restart
+accounting. Run directly for the CI smoke cycle::
+
+    python -m benchmarks.table14_fleet --smoke --assert-recovery
+
+``--smoke`` shrinks the stream and runs only one scaling cell plus the
+kill cell; ``--assert-recovery`` exits non-zero unless the scripted kill
+recovered every session (restart counted, no give-ups) within
+``RECOVERY_BUDGET_S``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import tempfile
+import time
+from typing import Sequence
+
+import jax
+import numpy as np
+
+from benchmarks.common import (
+    PAPER_H,
+    PAPER_W,
+    bench_config,
+    bench_record,
+    emit,
+    emit_report,
+)
+from repro.data.prism import PrismSource
+from repro.serve import FaultPlan, FleetScheduler, Session
+
+EXECUTOR_SWEEP = (1, 2, 3)
+SESSIONS_PER_EXECUTOR = 2
+RING_SLOTS = 2
+KILL_AT_STEP = 2        # ex0 dies after folding groups 0 and 1
+RECOVERY_BUDGET_S = 15.0  # kill -> first post-recovery fold, wall clock
+
+
+def _run_cell(
+    cfg, chunks, *, executors: int, sessions: int, ckpt_dir: str,
+    faults: FaultPlan | None = None,
+):
+    """One fleet run: ``sessions`` uniform streams over an ``executors``-
+    wide pool, per-group checkpoints on. Returns (wall_s, reports, fleet
+    telemetry dict)."""
+    fleet = FleetScheduler(
+        checkpoint_dir=ckpt_dir,
+        faults=faults,
+        slots_per_executor=max(1, sessions // executors),
+        max_executors=executors,
+        max_sessions=sessions,
+    )
+    try:
+        t0 = time.perf_counter()
+        handles = [
+            fleet.submit(
+                Session(
+                    config=cfg,
+                    source=iter(chunks),
+                    name=f"s{i}",
+                    num_slots=RING_SLOTS,
+                )
+            )
+            for i in range(sessions)
+        ]
+        outs = [h.result(timeout=600) for h in handles]
+        wall = time.perf_counter() - t0
+        telemetry = {
+            "events": list(fleet.events),
+            "recovery_s": fleet.recovery_latencies_s(),
+        }
+    finally:
+        fleet.shutdown()
+    return wall, [rep for _, rep in outs], telemetry
+
+
+def run(
+    quick: bool = True,
+    *,
+    smoke: bool = False,
+    assert_recovery: bool = False,
+) -> None:
+    cfg = bench_config(
+        quick,
+        num_groups=6 if smoke else 10,
+        frames_per_group=40 if smoke else (240 if quick else 600),
+        height=16 if smoke else PAPER_H,
+        width=64 if smoke else PAPER_W,
+    )
+    chunks = [jax.device_put(np.asarray(c)) for c in PrismSource(cfg).groups()]
+    jax.block_until_ready(chunks)
+
+    sweep = (2,) if smoke else EXECUTOR_SWEEP
+    with tempfile.TemporaryDirectory(prefix="fleet-bench-") as root:
+        # -- scaling: fps / p99 vs executor count, checkpointing on ---------
+        for n_exec in sweep:
+            n_sessions = SESSIONS_PER_EXECUTOR * n_exec
+            wall, reports, _ = _run_cell(
+                cfg,
+                chunks,
+                executors=n_exec,
+                sessions=n_sessions,
+                ckpt_dir=f"{root}/scale{n_exec}",
+            )
+            tag = f"table14/scale/e{n_exec}/n{n_sessions}"
+            frames = sum(r.frames for r in reports)
+            agg_fps = frames / max(wall, 1e-9)
+            p99 = max(r.latency_p99_ms for r in reports)
+            ckpts = sum(r.checkpoints for r in reports)
+            for r in reports:
+                emit_report(f"{tag}/{r.session}", r)
+            emit(
+                tag,
+                wall * 1e6 / max(frames, 1),
+                f"agg_fps={agg_fps:.0f};p99_ms={p99:.1f};checkpoints={ckpts}",
+            )
+            bench_record(
+                "fleet",
+                kind="fleet",
+                cell="scale",
+                config={
+                    "G": cfg.num_groups,
+                    "N": cfg.frames_per_group,
+                    "H": cfg.height,
+                    "W": cfg.width,
+                    "backend": cfg.backend,
+                    "executors": n_exec,
+                    "sessions": n_sessions,
+                    "ring_slots": RING_SLOTS,
+                    "checkpoint_every": 1,
+                },
+                aggregate_fps=round(agg_fps, 1),
+                session_p99_ms=round(p99, 3),
+                checkpoints=ckpts,
+            )
+
+        # -- kill cell: scripted crash, checkpointed recovery ---------------
+        n_exec, n_sessions = 2, 2 * SESSIONS_PER_EXECUTOR
+        plan = FaultPlan().crash("ex0", at_step=KILL_AT_STEP)
+        wall, reports, telemetry = _run_cell(
+            cfg,
+            chunks,
+            executors=n_exec,
+            sessions=n_sessions,
+            ckpt_dir=f"{root}/kill",
+            faults=plan,
+        )
+        tag = f"table14/kill/e{n_exec}/n{n_sessions}"
+        frames = sum(r.frames for r in reports)
+        restarts = sum(r.restarts for r in reports)
+        recoveries = telemetry["recovery_s"]
+        give_ups = [e for e in telemetry["events"] if e.startswith("give-up@")]
+        kill_ms = max(recoveries) * 1e3 if recoveries else float("nan")
+        for r in reports:
+            emit_report(f"{tag}/{r.session}", r)
+        emit(
+            tag,
+            wall * 1e6 / max(frames, 1),
+            f"restarts={restarts};recovered={len(recoveries)};"
+            f"kill_to_recovered_ms={kill_ms:.1f}",
+        )
+        bench_record(
+            "fleet",
+            kind="fleet",
+            cell="kill",
+            config={
+                "G": cfg.num_groups,
+                "N": cfg.frames_per_group,
+                "H": cfg.height,
+                "W": cfg.width,
+                "backend": cfg.backend,
+                "executors": n_exec,
+                "sessions": n_sessions,
+                "ring_slots": RING_SLOTS,
+                "checkpoint_every": 1,
+                "kill_at_step": KILL_AT_STEP,
+            },
+            aggregate_fps=round(frames / max(wall, 1e-9), 1),
+            session_p99_ms=round(max(r.latency_p99_ms for r in reports), 3),
+            restarts=restarts,
+            recovered_sessions=len(recoveries),
+            give_ups=len(give_ups),
+            kill_to_recovered_ms=round(kill_ms, 2),
+        )
+        if assert_recovery:
+            # every session finished (result() above would have raised),
+            # the kill actually fired, nobody was given up on, and the
+            # first post-recovery fold landed inside the budget
+            if restarts < 1:
+                raise SystemExit(
+                    f"kill cell recorded no restarts (events={telemetry['events']})"
+                )
+            if give_ups:
+                raise SystemExit(f"kill cell gave up on sessions: {give_ups}")
+            if not recoveries:
+                raise SystemExit(
+                    "kill cell recorded no session-recovered marks "
+                    f"(events={telemetry['events']})"
+                )
+            if max(recoveries) > RECOVERY_BUDGET_S:
+                raise SystemExit(
+                    f"kill-to-recovered {max(recoveries):.2f}s exceeds "
+                    f"budget {RECOVERY_BUDGET_S}s"
+                )
+            print(
+                f"# recovery assertion ok: {len(recoveries)} sessions, "
+                f"worst {kill_ms:.1f}ms"
+            )
+
+
+def main(argv: Sequence[str] | None = None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--full", action="store_true", help="paper-scale streams")
+    ap.add_argument(
+        "--smoke",
+        action="store_true",
+        help="tiny stream, one scaling cell + the kill cell",
+    )
+    ap.add_argument(
+        "--assert-recovery",
+        action="store_true",
+        help="exit non-zero unless the scripted kill recovered every "
+        "session within the budget",
+    )
+    args = ap.parse_args(argv)
+    run(
+        quick=not args.full,
+        smoke=args.smoke,
+        assert_recovery=args.assert_recovery,
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,1 +1,6 @@
-from repro.checkpoint.checkpoint import CheckpointManager, restore_tree, save_tree  # noqa: F401
+from repro.checkpoint.checkpoint import (  # noqa: F401
+    CheckpointManager,
+    read_manifest,
+    restore_tree,
+    save_tree,
+)

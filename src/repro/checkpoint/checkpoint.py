@@ -25,7 +25,7 @@ import time
 import jax
 import numpy as np
 
-__all__ = ["save_tree", "restore_tree", "CheckpointManager"]
+__all__ = ["save_tree", "restore_tree", "read_manifest", "CheckpointManager"]
 
 
 def _flatten(tree):
@@ -75,6 +75,10 @@ def _container_kinds(tree):
 
 
 def _rebuild(paths, leaves, kinds):
+    if len(paths) == 1 and not paths[0]:
+        # bare-leaf tree (e.g. a filter slot state that is one array):
+        # the root has no container, the tree IS the leaf
+        return leaves[0]
     root: dict = {}
 
     def insert(container, path, value):
@@ -104,8 +108,16 @@ def _rebuild(paths, leaves, kinds):
     return finalize(root, "")
 
 
-def save_tree(path: str, tree, *, step: int | None = None) -> None:
-    """Atomic synchronous save of a pytree to ``path`` (a directory)."""
+def save_tree(
+    path: str, tree, *, step: int | None = None, extra: dict | None = None
+) -> None:
+    """Atomic synchronous save of a pytree to ``path`` (a directory).
+
+    ``extra`` is an optional JSON-able dict stored verbatim in the
+    manifest — callers (e.g. the fleet's session recovery) use it for
+    sidecar metadata like frame counters or a config fingerprint, read
+    back via :func:`read_manifest` without loading the arrays.
+    """
     paths, leaves = _paths(tree)
     host = [np.asarray(x) for x in leaves]
     parent = os.path.dirname(os.path.abspath(path)) or "."
@@ -121,6 +133,7 @@ def save_tree(path: str, tree, *, step: int | None = None) -> None:
         "num_leaves": len(host),
         "step": step,
         "time": time.time(),
+        "extra": extra or {},
     }
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump(manifest, f)
@@ -150,6 +163,13 @@ def restore_tree(path: str, *, shardings=None):
     return tree, manifest.get("step")
 
 
+def read_manifest(path: str) -> dict:
+    """The checkpoint's manifest (step, time, extra, leaf count) without
+    touching the array payload — cheap existence/metadata probing."""
+    with open(os.path.join(path, "manifest.json")) as f:
+        return json.load(f)
+
+
 class CheckpointManager:
     """Keep-N rotating checkpoints with an async writer thread."""
 
@@ -175,14 +195,16 @@ class CheckpointManager:
         return sorted(out)
 
     # ---- save ----
-    def save(self, step: int, tree, *, blocking: bool = False) -> None:
+    def save(
+        self, step: int, tree, *, blocking: bool = False, extra: dict | None = None
+    ) -> None:
         self.wait()  # one in-flight write at a time
         # snapshot to host NOW (so the caller may donate/overwrite buffers)
         host = jax.tree_util.tree_map(lambda x: np.asarray(x), tree)
 
         def write():
             try:
-                save_tree(self._step_dir(step), host, step=step)
+                save_tree(self._step_dir(step), host, step=step, extra=extra)
                 self._gc()
             except BaseException as e:  # surfaced on next wait()
                 self._error = e
@@ -221,3 +243,11 @@ class CheckpointManager:
         if step is None:
             return None, None
         return restore_tree(self._step_dir(step), shardings=shardings)
+
+    def manifest(self, step: int | None = None) -> dict | None:
+        """Manifest of ``step`` (default latest) or None if no checkpoint."""
+        self.wait()
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            return None
+        return read_manifest(self._step_dir(step))

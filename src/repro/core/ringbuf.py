@@ -159,6 +159,13 @@ class RingBuffer:
     def closed(self) -> bool:
         return self._closed
 
+    def set_notify_hook(self, hook: Callable[[], None] | None) -> None:
+        """Re-target the consumer-wake hook. The fleet layer moves a live
+        session's ring between executors (migration, crash recovery); the
+        new consumer must be the one woken by subsequent puts."""
+        with self._cond:
+            self._notify_hook = hook
+
     def __len__(self) -> int:
         """Occupied slots (racy outside the lock; exact for single threads)."""
         return self._tail - self._head

@@ -56,6 +56,7 @@ from typing import Any, ClassVar
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro import tune
@@ -156,6 +157,20 @@ class StreamingFilter:
         return treedef.unflatten(
             [jnp.take(leaf, index, axis=ax) for leaf, ax in zip(leaves, axes)]
         )
+
+    def slot_to_host(self, slot_state):
+        """Host (numpy) snapshot of a single-bank state, dtype-preserving.
+
+        The checkpoint/migration wire format: every leaf becomes a plain
+        ``np.ndarray`` (gathering sharded leaves), so the tree survives
+        ``repro.checkpoint`` serialization bit-exactly and can be revived
+        on any device/executor with :meth:`slot_from_host`.
+        """
+        return jax.tree.map(lambda leaf: np.asarray(leaf), slot_state)
+
+    def slot_from_host(self, slot_state):
+        """Revive a :meth:`slot_to_host` snapshot as device arrays."""
+        return jax.tree.map(lambda leaf: jnp.asarray(leaf), slot_state)
 
     def slot_insert(self, state, slot_state, index: int):
         """Write a single-bank ``slot_state`` into bank slot ``index``.

@@ -86,6 +86,12 @@ class StragglerDetector:
     def ewma(self, worker: str) -> float | None:
         return self._ewma.get(worker)
 
+    def forget(self, worker: str) -> None:
+        """Drop a worker's history (evicted workers must stop skewing the
+        fleet median their replacements are judged against)."""
+        self._ewma.pop(worker, None)
+        self._count.pop(worker, None)
+
 
 @dataclasses.dataclass
 class Supervisor:

@@ -7,12 +7,27 @@ compatible sessions through one banked device step per group (stacking
 them along the filter state's bank axis), with admission control and
 per-session latency/drop telemetry (:class:`SessionReport`).
 
+:class:`FleetScheduler` adds the fault-tolerance tier: heartbeat/straggler
+supervision over the pool, checkpointed crash recovery
+(:class:`SessionCheckpointer`) with exact replay, live session migration,
+and a deterministic fault-injection harness (:class:`FaultPlan`,
+:class:`FakeClock`) that scripts crashes/stalls/slow-steps by cohort step
+index — no wall-clock anywhere.
+
 A 1-session run is bit-identical to ``repro.core.streaming.run_pipelined``
 for every registered filter. Not to be confused with
 ``repro.launch.serve`` — the LM inference server of the model substrate;
 this package serves imaging streams. See docs/ARCHITECTURE.md.
 """
 
+from repro.serve.faults import (
+    Clock,
+    FakeClock,
+    FaultPlan,
+    InjectedExecutorFailure,
+)
+from repro.serve.fleet import FleetScheduler
+from repro.serve.recovery import CheckpointMismatch, SessionCheckpointer
 from repro.serve.scheduler import SessionScheduler
 from repro.serve.session import (
     AdmissionError,
@@ -23,7 +38,14 @@ from repro.serve.session import (
 
 __all__ = [
     "AdmissionError",
+    "CheckpointMismatch",
+    "Clock",
+    "FakeClock",
+    "FaultPlan",
+    "FleetScheduler",
+    "InjectedExecutorFailure",
     "Session",
+    "SessionCheckpointer",
     "SessionHandle",
     "SessionReport",
     "SessionScheduler",

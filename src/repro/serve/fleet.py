@@ -1,0 +1,453 @@
+"""FleetScheduler: fault-tolerant session serving over an executor pool.
+
+The plain :class:`~repro.serve.scheduler.SessionScheduler` treats an
+executor failure as fatal for every session it hosts. This subclass wires
+the dormant fault-tolerance runtime (``repro.runtime.fault_tolerance``)
+into the serving layer and turns executor death into a *recoverable*
+event:
+
+* **Heartbeats.** Every executor beats the :class:`HeartbeatMonitor` at
+  the top of each scheduling iteration and after each cohort fold, with
+  timestamps read from the injectable :class:`~repro.serve.faults.Clock`
+  (tests drive a ``FakeClock``; nothing here sleeps on wall time).
+  :meth:`check_faults` — the supervision pass, called by the operator's
+  pump loop or a test — first *probes* (bounded event-wait for each live
+  executor to beat at the current clock reading, so a fake-clock advance
+  cannot race a beat that simply had not happened yet), then evicts
+  anything ``monitor.dead(now)`` lists.
+* **Stragglers.** Per-cohort durations (including scripted *virtual*
+  slow-downs from a :class:`~repro.serve.faults.FaultPlan`) feed the
+  :class:`StragglerDetector` EWMA; ``check_faults`` evicts flagged
+  executors the same way it evicts silent ones. Evicted executors are
+  ``forget``-ten so they stop skewing the fleet median.
+* **Eviction.** ``FaultPlan.poison`` first (a zombie thread released from
+  a stall later raises instead of stepping sessions that moved), then
+  ``seize()`` lifts every hosted session off the executor atomically at
+  a fold boundary, then each is re-placed via :meth:`_recover`.
+* **Crash recovery.** An executor whose thread dies (scripted
+  ``InjectedExecutorFailure`` or a real exception) offers its sessions to
+  :meth:`_on_dead` from its own drain path — recovery is *synchronous*
+  with the failure, no supervision pass needed. Each session restores its
+  newest :class:`~repro.serve.recovery.SessionCheckpointer` snapshot
+  (slot state at fold ``k``) and re-folds its replay log — the chunks
+  folded since that snapshot, retained on the scheduler side — with the
+  original step indices at re-admission. Restore + replay reconstructs
+  the pre-crash state **bit-identically** for the exact filters, so the
+  resumed stream's final output equals the undisturbed run's.
+* **Live migration.** :meth:`migrate` asks the hosting executor to lift
+  the session's slot state out at the next group boundary
+  (``slot_extract``) and hands state + intact staging ring + counters to
+  the least-loaded compatible executor (``slot_insert`` on arrival).
+  The producer thread never notices: the ring merely re-targets its
+  consumer-wake hook.
+* **Bounded restarts.** A session is re-placed at most
+  ``max_session_restarts`` times (the :class:`Supervisor` contract);
+  after that — or when neither checkpoint nor replay can reconstruct its
+  state — its handle fails with the executor's error. Give-ups,
+  evictions, recoveries and migrations are appended to the supervisor-
+  style ``events`` history; ``timeline`` carries the clock-stamped marks
+  the table14 benchmark turns into kill-to-recovered latency.
+
+Everything observable is deterministic under a scripted
+:class:`FaultPlan` + ``FakeClock``: faults fire at cohort-step indices,
+stalls are events the test releases, and the only real-time waits are
+bounded event waits (see ``tests/test_fleet_recovery.py``).
+"""
+
+from __future__ import annotations
+
+import threading
+
+from repro.runtime.fault_tolerance import HeartbeatMonitor, StragglerDetector
+from repro.serve.faults import Clock, FaultPlan
+from repro.serve.recovery import SessionCheckpointer
+from repro.serve.scheduler import SessionScheduler
+from repro.serve.session import AdmissionError, SessionHandle
+
+__all__ = ["FleetScheduler"]
+
+
+class FleetScheduler(SessionScheduler):
+    """``SessionScheduler`` + heartbeats, eviction, checkpointed recovery
+    and live migration. See the module docstring for the architecture.
+
+    Typical use::
+
+        plan = FaultPlan().crash("ex0", at_step=3)
+        with FleetScheduler(
+            checkpoint_dir=ckpt, faults=plan, max_executors=3
+        ) as fleet:
+            h = fleet.submit(Session(cfg, src))
+            out, report = h.result(timeout=300)   # survives the crash
+            assert report.restarts == 1
+
+    ``checkpoint_dir=None`` disables snapshots; sessions then recover
+    only while their replay log still covers their whole history (i.e.
+    never, once a checkpoint would have been due) — pass a directory for
+    real fault tolerance. ``faults``/``clock`` default to no injected
+    faults and real monotonic time.
+    """
+
+    def __init__(
+        self,
+        *,
+        checkpoint_dir: str | None = None,
+        checkpoint_every: int = 1,
+        checkpoint_keep: int = 2,
+        clock: Clock | None = None,
+        faults: FaultPlan | None = None,
+        heartbeat_timeout_s: float = 60.0,
+        straggler_threshold: float = 2.5,
+        straggler_alpha: float = 0.2,
+        straggler_warmup: int = 3,
+        max_session_restarts: int = 2,
+        **kwargs,
+    ):
+        super().__init__(**kwargs)
+        if max_session_restarts < 0:
+            raise ValueError(
+                f"max_session_restarts must be >= 0, got {max_session_restarts}"
+            )
+        self.clock = clock or Clock()
+        self.faults = faults
+        self.checkpointer = (
+            SessionCheckpointer(
+                checkpoint_dir, every=checkpoint_every, keep=checkpoint_keep
+            )
+            if checkpoint_dir is not None
+            else None
+        )
+        self.monitor = HeartbeatMonitor(timeout_s=heartbeat_timeout_s)
+        self.stragglers = StragglerDetector(
+            alpha=straggler_alpha,
+            threshold=straggler_threshold,
+            warmup_steps=straggler_warmup,
+        )
+        self.max_session_restarts = max_session_restarts
+        # fault-tolerance state shares one small lock; never held while
+        # taking the scheduler lock or an executor cond (no nesting out)
+        self._ft_lock = threading.Lock()
+        self._acts: dict[int, object] = {}  # id(handle) -> _Active
+        self._awaiting_recovery: set[str] = set()
+        self._evicted_names: set[str] = set()
+        self._beat_flags: dict[str, threading.Event] = {}
+        #: supervisor-style history strings (evict@…, recover@…, …)
+        self.events: list[str] = []
+        #: clock-stamped marks: (kind, name, t) — kinds are
+        #: executor-dead, session-replaced, session-recovered,
+        #: session-migrated. Feeds recovery_latencies_s().
+        self.timeline: list[tuple[str, str, float]] = []
+
+    # -- executor wiring -----------------------------------------------------
+    def _executor_hooks(self) -> dict:
+        return dict(
+            clock=self.clock,
+            faults=self.faults,
+            on_beat=self._on_beat,
+            on_step=self._on_step,
+            on_session_step=self._on_session_step,
+            on_dead=self._on_dead,
+            on_migrate=self._on_migrate,
+        )
+
+    def _on_submitted(self, handle, act, ex) -> None:
+        self._acts[id(handle)] = act  # under self._lock (submit holds it)
+
+    def _session_done(self, act) -> None:
+        act.migrate_done.set()  # wake migrate() waiters; target stays None
+        with self._lock:
+            self._acts.pop(id(act.handle), None)
+        super()._session_done(act)
+
+    # -- executor-thread callbacks -------------------------------------------
+    def _on_beat(self, name: str, now: float) -> None:
+        with self._ft_lock:
+            if name in self._evicted_names:
+                return  # a zombie's last gasp must not resurrect it
+            self.monitor.beat(name, now)
+            ev = self._beat_flags.get(name)
+            if ev is not None:
+                ev.set()
+
+    def _on_step(self, ex, duration_s: float) -> None:
+        with self._ft_lock:
+            if ex.name in self._evicted_names:
+                return
+            self.monitor.beat(ex.name, self.clock.now())
+            self.stragglers.record(ex.name, duration_s)
+
+    def _on_session_step(self, ex, act, slot: int, chunk) -> None:
+        """Post-fold bookkeeping: replay log + cadenced checkpoint.
+
+        ``act.steps`` already counts this fold; the replay log holds the
+        chunks folded since the last snapshot, so snapshot + replay always
+        reconstructs the current state exactly.
+        """
+        if self.checkpointer is not None:
+            act.replay.append(chunk)
+            if act.steps % self.checkpointer.every == 0:
+                self.checkpointer.save(
+                    act.name,
+                    ex.filt,
+                    ex.filt.slot_extract(ex.state, slot),
+                    steps=act.steps,
+                    frames=act.frames,
+                )
+                act.checkpoints += 1
+                act.replay.clear()
+        with self._ft_lock:
+            if act.name in self._awaiting_recovery:
+                self._awaiting_recovery.discard(act.name)
+                self.timeline.append(
+                    ("session-recovered", act.name, self.clock.now())
+                )
+
+    def _on_dead(self, ex, acts, err) -> list:
+        """Crash path: the dying executor offers its sessions from its own
+        drain; everything re-placed here is skipped by its terminal fail
+        loop. Synchronous — no supervision pass involved."""
+        t = self.clock.now()
+        with self._ft_lock:
+            self._evicted_names.add(ex.name)
+            self.monitor.evict(ex.name)
+            self.stragglers.forget(ex.name)
+            self._beat_flags.pop(ex.name, None)
+            self.events.append(f"dead@{ex.name}:{type(err).__name__}")
+            self.timeline.append(("executor-dead", ex.name, t))
+        return [act for act in acts if self._recover(act, ex)]
+
+    def _on_migrate(self, ex, act) -> None:
+        """Migration path: ``_retire`` already lifted the slot state into
+        ``act.resume_state``; place the session elsewhere (or re-seat it
+        at home when the pool has nowhere better)."""
+        cfg = act.session.config
+        key = cfg.stream_key()
+        target = None
+        with self._lock:
+            try:
+                cand = self._place(key, cfg, exclude=[ex])
+            except AdmissionError:
+                cand = ex  # nowhere else to go: home is still a clean seat
+            if cand.enqueue(act):
+                target = cand
+            elif cand is not ex and ex.enqueue(act):
+                target = ex
+            if target is not None:
+                act.ring.set_notify_hook(target.notify)
+                act.handle._leave_hook = target.notify
+        if target is None:
+            err = RuntimeError(
+                f"migration of {act.name} found no live executor"
+            )
+            with self._ft_lock:
+                self.events.append(f"give-up@{act.name}:migration-stranded")
+            act.ring.close()
+            act.handle._fail(act.error or err)
+            self._session_done(act)
+            return
+        with self._ft_lock:
+            self.events.append(f"migrate@{act.name}:{ex.name}->{target.name}")
+            self.timeline.append(
+                ("session-migrated", act.name, self.clock.now())
+            )
+        act.migrate_target = target.name
+        act.migrate_done.set()
+
+    # -- recovery ------------------------------------------------------------
+    def _recover(self, act, src_ex) -> bool:
+        """Reconstruct a detached session's resume state and re-place it.
+
+        True when the session was taken over (its handle stays pending);
+        False when the caller must fail it. Resume state priority: an
+        in-flight migration state (already exact) > newest checkpoint +
+        replay log > fresh init (never folded anything). The replay
+        coverage check makes silent data loss impossible — a session
+        whose history cannot be reconstructed fails loudly instead of
+        resuming with a gap.
+        """
+        handle = act.handle
+        if act.error is not None or handle._leave.is_set() or handle.done():
+            return False
+        if act.restarts >= self.max_session_restarts:
+            with self._ft_lock:
+                self.events.append(
+                    f"give-up@{act.name}:restarts={act.restarts}"
+                )
+            return False
+        if act.resume_state is None and act.steps > 0:
+            state, steps, frames = None, 0, 0
+            if self.checkpointer is not None:
+                try:
+                    state, steps, frames = self.checkpointer.restore_latest(
+                        act.name, src_ex.filt
+                    )
+                except Exception:  # torn/mismatched checkpoint: replay-only
+                    state, steps, frames = None, 0, 0
+            if steps + len(act.replay) < act.steps:
+                with self._ft_lock:
+                    self.events.append(f"give-up@{act.name}:unrecoverable")
+                return False
+            act.resume_state = state
+            act.pending_replay = list(act.replay)
+            act.steps = steps
+            act.frames = frames
+        act.slot = None
+        act.restarts += 1
+        cfg = act.session.config
+        key = cfg.stream_key()
+        with self._lock:
+            if self._closed:
+                return False
+            try:
+                ex2 = self._place(key, cfg, exclude=[src_ex])
+                while not ex2.enqueue(act):
+                    ex2 = self._place(key, cfg, exclude=[src_ex, ex2])
+            except AdmissionError:
+                with self._ft_lock:
+                    self.events.append(f"give-up@{act.name}:no-placement")
+                return False
+            act.ring.set_notify_hook(ex2.notify)
+            handle._leave_hook = ex2.notify
+        with self._ft_lock:
+            self._awaiting_recovery.add(act.name)
+            self.events.append(
+                f"recover@{act.name}->{ex2.name}:"
+                f"steps={act.steps}+{len(act.pending_replay)}"
+            )
+            self.timeline.append(
+                ("session-replaced", act.name, self.clock.now())
+            )
+        return True
+
+    # -- supervision ---------------------------------------------------------
+    def _probe(self, executors, timeout_s: float) -> None:
+        """Bounded chance for each live executor to beat at the current
+        clock reading before silence is judged: clear its beat flag, wake
+        it, event-wait. A healthy executor beats within milliseconds; a
+        held one times out (the wait is bounded, and a spurious timeout
+        only triggers an eviction recovery handles — never a hang)."""
+        flagged = []
+        with self._ft_lock:
+            for ex in executors:
+                ev = self._beat_flags.setdefault(ex.name, threading.Event())
+                ev.clear()
+                flagged.append((ex, ev))
+        for ex, _ in flagged:
+            ex.notify()
+        for _, ev in flagged:
+            ev.wait(timeout_s)
+
+    def check_faults(
+        self, *, probe: bool = True, probe_timeout_s: float = 5.0
+    ) -> dict:
+        """One supervision pass: probe beats, evict the silent and the
+        straggling, recover their sessions. Returns what happened::
+
+            {"dead": [...], "stragglers": [...], "evicted": [...],
+             "recovered": [session, ...], "failed": [session, ...]}
+
+        Idempotent when healthy. ``probe=False`` skips the beat probe —
+        straggler-only checks need no clock coordination at all.
+        """
+        with self._lock:
+            executors = [ex for ex in self._executors if ex.alive]
+        if probe and executors:
+            self._probe(executors, probe_timeout_s)
+        now = self.clock.now()
+        with self._ft_lock:
+            dead = list(self.monitor.dead(now))
+            slow = list(self.stragglers.stragglers())
+        evicted: list[str] = []
+        recovered: list[str] = []
+        failed: list[str] = []
+        for ex in executors:
+            if ex.name in dead or ex.name in slow:
+                reason = "heartbeat" if ex.name in dead else "straggler"
+                r, f = self._evict(ex, reason)
+                evicted.append(ex.name)
+                recovered += r
+                failed += f
+        return {
+            "dead": dead,
+            "stragglers": slow,
+            "evicted": evicted,
+            "recovered": recovered,
+            "failed": failed,
+        }
+
+    def _evict(self, ex, reason: str) -> tuple[list[str], list[str]]:
+        """Poison → seize → recover each seized session (fail the rest)."""
+        t = self.clock.now()
+        if self.faults is not None:
+            self.faults.poison(ex.name)
+        acts = ex.seize()
+        with self._ft_lock:
+            self._evicted_names.add(ex.name)
+            self.monitor.evict(ex.name)
+            self.stragglers.forget(ex.name)
+            self._beat_flags.pop(ex.name, None)
+            self.events.append(f"evict@{ex.name}:{reason}")
+            self.timeline.append(("executor-dead", ex.name, t))
+        err = RuntimeError(f"executor {ex.name} evicted ({reason})")
+        recovered: list[str] = []
+        failed: list[str] = []
+        for act in acts:
+            if self._recover(act, ex):
+                recovered.append(act.name)
+            else:
+                act.ring.close()
+                act.handle._fail(act.error or err)
+                self._session_done(act)
+                failed.append(act.name)
+        return recovered, failed
+
+    # -- migration -----------------------------------------------------------
+    def migrate(
+        self, handle: SessionHandle, *, timeout: float | None = 60.0
+    ) -> str | None:
+        """Live-migrate a session at its next group boundary.
+
+        Blocks (bounded event wait) until the session is re-enqueued and
+        returns the target executor's name — or ``None`` if the session
+        finished/failed before the boundary arrived. ``timeout=None``
+        returns immediately (fire-and-forget)."""
+        with self._lock:
+            act = self._acts.get(id(handle))
+        if act is None or handle.done():
+            return None
+        act.migrate_done.clear()
+        act.migrate_target = None
+        handle._migrate.set()
+        ex = act.executor
+        if ex is not None:
+            ex.notify()
+        if timeout is not None:
+            act.migrate_done.wait(timeout)
+        return act.migrate_target
+
+    # -- telemetry -----------------------------------------------------------
+    def recovery_latencies_s(self) -> list[float]:
+        """Kill-to-recovered spans: each ``session-recovered`` mark minus
+        the latest ``executor-dead`` before it (clock units — virtual
+        under a ``FakeClock``, real seconds in the benchmark)."""
+        with self._ft_lock:
+            marks = list(self.timeline)
+        out: list[float] = []
+        last_dead: float | None = None
+        for kind, _, t in marks:
+            if kind == "executor-dead":
+                last_dead = t
+            elif kind == "session-recovered" and last_dead is not None:
+                out.append(t - last_dead)
+        return out
+
+    def stats(self) -> dict:
+        snap = super().stats()
+        with self._ft_lock:
+            snap["fleet"] = {
+                "events": list(self.events),
+                "awaiting_recovery": sorted(self._awaiting_recovery),
+                "evicted": sorted(self._evicted_names),
+                "workers": self.monitor.workers(),
+            }
+        return snap

@@ -91,6 +91,7 @@ from repro.core.ringbuf import (
     RingClosed,
     nearest_rank_s,
 )
+from repro.serve.faults import Clock
 from repro.serve.session import (
     AdmissionError,
     Session,
@@ -138,6 +139,16 @@ class _Active:
         self.deadline_misses = 0
         self.discarded = 0       # staged chunks dropped by leave()
         self.error: BaseException | None = None
+        # -- fleet bookkeeping (inert under the plain scheduler) ------------
+        self.executor = None          # the _SlotExecutor currently hosting us
+        self.resume_state = None      # slot state to seat instead of init()
+        self.pending_replay: list = []  # chunks to re-fold at (re)admission
+        self.replay: list = []        # chunks folded since the last checkpoint
+        self.migrations = 0
+        self.restarts = 0
+        self.checkpoints = 0
+        self.migrate_done = threading.Event()  # set when a migrate() lands
+        self.migrate_target: str | None = None  # executor that took us
         self.t_submit = time.perf_counter()
         self.t_joined: float | None = None
         self.producer = threading.Thread(
@@ -194,7 +205,9 @@ class _SlotExecutor:
 
     def __init__(
         self, key, config: DenoiseConfig, capacity, mesh, name, on_done,
-        coalesce_s: float = 0.005,
+        coalesce_s: float = 0.005, *, clock: Clock | None = None, faults=None,
+        on_step=None, on_session_step=None, on_dead=None, on_migrate=None,
+        on_beat=None,
     ):
         self.key = key
         self.config = config
@@ -203,6 +216,14 @@ class _SlotExecutor:
         self.name = name
         self.coalesce_s = coalesce_s
         self.on_done = on_done  # scheduler callback, called lock-free
+        # -- fleet hooks (all optional; None under the plain scheduler) -----
+        self.clock = clock or Clock()
+        self.faults = faults              # FaultPlan.apply(name, step) source
+        self.on_step = on_step            # (executor, duration_s) per cohort
+        self.on_session_step = on_session_step  # (ex, act, slot, chunk)
+        self.on_dead = on_dead            # (ex, acts, err) -> acts taken over
+        self.on_migrate = on_migrate      # (ex, act) after slot extraction
+        self.on_beat = on_beat            # (name, clock.now()) liveness beat
         self.filt, self.state = banked_filter_init(config, mesh, banks=capacity)
         self._chunk_buf = None  # persistent staging buffer, filled in place
         self.slots: list[_Active | None] = [None] * capacity
@@ -211,6 +232,9 @@ class _SlotExecutor:
         self.failed: BaseException | None = None
         self._shutdown = False
         self._abort = False
+        self._dead = False     # set (under cond) once this executor will
+        self._folding = False  # never drain pending again / is mid-fold
+        self._seized = False   # a fleet evictor owns the drain, not us
         self.cohort_steps = 0  # device steps issued (cohorts, not groups)
         self.thread = threading.Thread(
             target=self._loop, name=f"serve-{name}", daemon=True
@@ -226,10 +250,20 @@ class _SlotExecutor:
             self.cond.notify_all()
 
     # -- scheduler side ------------------------------------------------------
-    def enqueue(self, act: _Active) -> None:
+    def enqueue(self, act: _Active) -> bool:
+        """Queue a session for a slot; ``False`` when this executor can no
+        longer host it. The dead-check and the append are one atomic
+        section: an executor that failed *after* placement chose it (but
+        before the enqueue landed) refuses the session instead of parking
+        it in a queue nobody will ever drain again — the caller re-places.
+        """
         with self.cond:
+            if self._dead or self.failed is not None or self._abort:
+                return False
+            act.executor = self
             self.pending.append(act)
             self.cond.notify_all()
+            return True
 
     def has_room(self) -> bool:
         """A vacant slot not already promised to a queued session."""
@@ -266,6 +300,7 @@ class _SlotExecutor:
                 len(a.ring) > 0
                 or a.finished_stream()
                 or a.handle._leave.is_set()
+                or a.handle._migrate.is_set()
                 or a.error is not None
             )
             for a in self.slots
@@ -273,6 +308,8 @@ class _SlotExecutor:
 
     def _loop(self) -> None:
         while True:
+            if self.on_beat is not None:
+                self.on_beat(self.name, self.clock.now())
             with self.cond:
                 # hooks (ring put/close, enqueue, leave) wake us; the
                 # timeout is a safety net against a lost edge, not a poll
@@ -291,29 +328,79 @@ class _SlotExecutor:
         self._drain_failed()
 
     def _drain_failed(self) -> None:
-        """Terminal cleanup: fail whatever is still attached."""
+        """Terminal cleanup: offer survivors to the fleet, fail the rest.
+
+        Marks the executor dead FIRST (under the cond, in the same
+        critical section that empties the queues) so a concurrently
+        racing ``enqueue`` can never land a session after the final
+        drain — the enqueue-after-death hang this ordering exists to
+        prevent. ``on_dead`` fires only on *failure* (not graceful or
+        aborted shutdown) and returns the sessions it re-placed; everyone
+        else gets a terminal error so joins/``result()`` never hang.
+        """
         err = self.failed or RuntimeError(f"executor {self.name} shut down")
         done = []
         with self.cond:
+            self._dead = True
+            if self._seized:
+                # a fleet evictor claimed the drain (seize may still be
+                # waiting on our in-flight fold): the sessions are its to
+                # recover — racing it here would fail them first
+                return
             for idx, act in enumerate(self.slots):
                 if act is not None:
                     self.slots[idx] = None
                     done.append(act)
             while self.pending:
                 done.append(self.pending.popleft())
+        recovered: list = []
+        if self.on_dead is not None and self.failed is not None and done:
+            recovered = list(self.on_dead(self, done, err))
         for act in done:
+            if any(act is r for r in recovered):
+                continue
             act.ring.close()
             act.handle._fail(act.error or err)
             self.on_done(act)
 
+    def seize(self, timeout: float = 5.0) -> list[_Active]:
+        """Forcibly detach every hosted session (fleet eviction of a
+        stalled or straggling executor) and mark the executor dead.
+
+        Waits briefly for an in-flight cohort fold to finish so no
+        session is taken mid-step. A thread held inside the fault hook
+        holds no staged chunks yet (faults fire before any ring item is
+        consumed), so eviction during an injected stall is always clean;
+        the evictor must poison the fault plan so a later release
+        terminates the zombie thread instead of letting it touch
+        sessions that now live elsewhere.
+        """
+        with self.cond:
+            self._shutdown = True
+            self._abort = True
+            self._dead = True
+            self._seized = True
+            self.cond.notify_all()
+            self.cond.wait_for(lambda: not self._folding, timeout=timeout)
+            acts = []
+            for idx, act in enumerate(self.slots):
+                if act is not None:
+                    self.slots[idx] = None
+                    acts.append(act)
+            while self.pending:
+                acts.append(self.pending.popleft())
+        return acts
+
     def _can_join(self) -> bool:
         """Mesh executors gang-schedule, so a phase-sensitive filter can
-        only accept a (phase-0) newcomer while every occupied slot is
-        still at phase 0; single-device executors cohort by phase and
+        only accept a newcomer whose phase matches every occupied slot
+        (a fresh join is phase 0; a fleet-resumed session carries its
+        checkpointed phase); single-device executors cohort by phase and
         accept joins at any group boundary."""
         if self.mesh is None or self.filt.phase_invariant:
             return True
-        return all(a is None or a.steps == 0 for a in self.slots)
+        phase = self.pending[0].steps if self.pending else 0
+        return all(a is None or a.steps == phase for a in self.slots)
 
     def _admit(self) -> None:
         joins = []
@@ -325,10 +412,28 @@ class _SlotExecutor:
                 self.slots[idx] = act
                 joins.append((idx, act))
         for idx, act in joins:
-            # fresh single-bank state into the vacant slot: same banked
-            # shapes, so the batched step is NOT retraced by the join
-            self.state = self._insert_slot(self.state, self.filt.init(), idx)
-            act.t_joined = time.perf_counter()
+            # fresh single-bank state into the vacant slot — or, for a
+            # fleet-resumed/migrated session, its checkpointed slot state.
+            # Either way the banked shapes are unchanged, so the batched
+            # step is NOT retraced by the join.
+            seed = act.resume_state
+            act.resume_state = None
+            self.state = self._insert_slot(
+                self.state, seed if seed is not None else self.filt.init(), idx
+            )
+            # re-fold the chunks the crash lost between the last
+            # checkpoint and the failure — same chunks, same order, same
+            # step indices, so the resumed state is bit-identical to the
+            # pre-crash one before any new chunk is touched
+            while act.pending_replay:
+                chunk = act.pending_replay.pop(0)
+                sub = self.filt.slot_extract(self.state, idx)
+                new = self.filt.step(sub, chunk, step_index=act.steps)
+                self.state = self._insert_slot(self.state, new, idx)
+                act.steps += 1
+                act.frames += int(np.prod(chunk.shape[:-2]))
+            if act.t_joined is None:
+                act.t_joined = time.perf_counter()
             act.handle.status = "active"
 
     def _insert_slot(self, state, slot_state, index: int):
@@ -351,6 +456,26 @@ class _SlotExecutor:
     def _retire(self) -> None:
         for idx, act in enumerate(self.slots):
             if act is None:
+                continue
+            if (
+                act.handle._migrate.is_set()
+                and self.on_migrate is not None
+                and act.error is None
+                and not act.handle._leave.is_set()
+                and not act.finished_stream()
+            ):
+                # live migration: lift the slot state out at this group
+                # boundary and hand the session (state + intact ring +
+                # counters) to the fleet for re-placement. slot_extract
+                # is non-destructive; clearing the slot frees it here.
+                sub = self.filt.slot_extract(self.state, idx)
+                with self.cond:
+                    self.slots[idx] = None
+                act.slot = None
+                act.resume_state = sub
+                act.handle._migrate.clear()
+                act.migrations += 1
+                self.on_migrate(self, act)
                 continue
             if act.error is not None:
                 act.ring.close()
@@ -469,6 +594,34 @@ class _SlotExecutor:
 
     def _fold_cohort(self, group: Sequence[tuple[int, _Active]], gang=False) -> None:
         """One device step folding one staged chunk per cohort member."""
+        if self.faults is not None:
+            # scripted faults fire HERE, before any ring item is consumed:
+            # a crash or stall at cohort step k never half-eats a staged
+            # chunk, which is what makes eviction + replay exact. May
+            # raise (crash/poison), may block (stall), returns the
+            # virtual slow-down to add to this step's reported duration.
+            fault_extra_s = self.faults.apply(self.name, self.cohort_steps)
+        else:
+            fault_extra_s = 0.0
+        with self.cond:
+            # revalidate under the lock: a fleet seize() may have detached
+            # these sessions while the fault hook held us — their chunks
+            # now belong to another executor, so touch nothing
+            if any(self.slots[i] is not a for i, a in group):
+                return
+            self._folding = True
+        try:
+            self._fold_cohort_inner(group, gang, fault_extra_s)
+        finally:
+            with self.cond:
+                self._folding = False
+                self.cond.notify_all()
+
+    def _fold_cohort_inner(
+        self, group: Sequence[tuple[int, _Active]], gang: bool,
+        fault_extra_s: float,
+    ) -> None:
+        t_clock0 = self.clock.now()
         items = []  # (dev, transfer_dt, dwell_s): len>0 held, never blocks
         for _, a in group:
             dwell0 = a.ring.stats.dwell_s
@@ -557,6 +710,18 @@ class _SlotExecutor:
                     act.session.consumer(act.steps - 1, partial)
                 except BaseException as e:  # consumer failure fails the session
                     act.error = e
+            if self.on_session_step is not None:
+                # fleet checkpoint/replay bookkeeping; a failure (disk
+                # full, mismatched state) fails this session, not the
+                # executor and its co-tenants
+                try:
+                    self.on_session_step(self, act, i, dev)
+                except BaseException as e:
+                    act.error = e
+        if self.on_step is not None:
+            self.on_step(
+                self, (self.clock.now() - t_clock0) + fault_extra_s
+            )
 
     def _report(self, act: _Active) -> SessionReport:
         now = time.perf_counter()
@@ -585,6 +750,9 @@ class _SlotExecutor:
             deadline_misses=act.deadline_misses,
             queue_wait_s=(act.t_joined - act.t_submit) if act.t_joined else 0.0,
             groups=act.steps,
+            migrations=act.migrations,
+            restarts=act.restarts,
+            checkpoints=act.checkpoints,
         )
 
 
@@ -651,6 +819,7 @@ class SessionScheduler:
         self._inflight = 0
         self._completed = 0
         self._seq = 0
+        self._ex_seq = 0  # monotonically unique executor names
         self._closed = False
 
     # -- public API ----------------------------------------------------------
@@ -674,11 +843,21 @@ class SessionScheduler:
             # admission in the permissive direction)
             act = _Active(handle, self._seq, notify_hook=ex.notify)
             handle._leave_hook = ex.notify
+            # an executor can fail between placement and enqueue; a dead
+            # one refuses the session, so re-place until one accepts (a
+            # fresh _place never returns the refuser — it is not alive)
+            while not ex.enqueue(act):
+                ex = self._place(key, session.config)
+                act.ring.set_notify_hook(ex.notify)
+                handle._leave_hook = ex.notify
             self._seq += 1
             self._inflight += 1
-            ex.enqueue(act)
+            self._on_submitted(handle, act, ex)
         act.producer.start()
         return handle
+
+    def _on_submitted(self, handle, act, ex) -> None:
+        """Post-admission hook (fleet bookkeeping); base: no-op."""
 
     def stats(self) -> dict:
         """Live telemetry snapshot (sessions in flight, per-executor load)."""
@@ -729,27 +908,48 @@ class SessionScheduler:
         self.shutdown(wait=exc_type is None)
 
     # -- placement (under self._lock) ----------------------------------------
-    def _place(self, key, config: DenoiseConfig) -> _SlotExecutor:
-        alive = [ex for ex in self._executors if ex.alive]
+    def _new_executor(self, key, config: DenoiseConfig) -> _SlotExecutor:
+        """Construct one pool executor (fleet subclasses add hooks)."""
+        ex = _SlotExecutor(
+            key,
+            config,
+            capacity=self.slots_per_executor,
+            mesh=self.mesh,
+            name=f"ex{self._ex_seq}",
+            on_done=self._session_done,
+            coalesce_s=self.coalesce_ms * 1e-3,
+            **self._executor_hooks(),
+        )
+        self._ex_seq += 1
+        return ex
+
+    def _executor_hooks(self) -> dict:
+        """Extra ``_SlotExecutor`` kwargs (clock/faults/fleet callbacks)."""
+        return {}
+
+    def _place(
+        self, key, config: DenoiseConfig, exclude: Sequence = ()
+    ) -> _SlotExecutor:
+        all_alive = [ex for ex in self._executors if ex.alive]
+        alive = [
+            ex for ex in all_alive if not any(ex is e for e in exclude)
+        ]
         matching = [ex for ex in alive if ex.key == key]
-        for ex in matching:
-            if ex.has_room():
-                return ex
-        if len(alive) < self.max_executors:
-            ex = _SlotExecutor(
-                key,
-                config,
-                capacity=self.slots_per_executor,
-                mesh=self.mesh,
-                name=f"ex{len(self._executors)}",
-                on_done=self._session_done,
-                coalesce_s=self.coalesce_ms * 1e-3,
-            )
+        with_room = [ex for ex in matching if ex.has_room()]
+        if with_room:
+            # least-loaded placement: fewest hosted+queued sessions wins,
+            # ties broken by pool order (stable, deterministic)
+            return min(with_room, key=lambda e: e.session_count())
+        # pool headroom counts every live executor, including excluded
+        # ones — an exclusion (migration source) must not let the pool
+        # exceed max_executors
+        if len(all_alive) < self.max_executors:
+            ex = self._new_executor(key, config)
             self._executors.append(ex)
             return ex
         if not matching:
             raise AdmissionError(
-                f"executor pool is full ({len(alive)}/{self.max_executors}) "
+                f"executor pool is full ({len(all_alive)}/{self.max_executors}) "
                 "and none matches this session's stream_key"
             )
         ex = min(matching, key=lambda e: e.queue_depth())

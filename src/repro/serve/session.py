@@ -117,6 +117,11 @@ class SessionReport(StreamReport):
     deadline_misses: int = 0
     queue_wait_s: float = 0.0  # submit -> slot join (admission queueing)
     groups: int = 0            # groups folded into the final output
+    # fleet columns (zero outside a FleetScheduler): live migrations,
+    # crash/eviction re-placements, and checkpoints written
+    migrations: int = 0
+    restarts: int = 0
+    checkpoints: int = 0
 
     @staticmethod
     def header() -> str:
@@ -125,6 +130,7 @@ class SessionReport(StreamReport):
         return (
             StreamReport.header()
             + ",session,mode,deadline_ms,deadline_misses,queue_wait_s,groups"
+            + ",migrations,restarts,checkpoints"
         )
 
     def row(self, name: str) -> str:
@@ -132,6 +138,7 @@ class SessionReport(StreamReport):
             super().row(name)
             + f",{self.session},{self.mode},{self.deadline_ms:.1f},"
             f"{self.deadline_misses},{self.queue_wait_s:.4f},{self.groups}"
+            + f",{self.migrations},{self.restarts},{self.checkpoints}"
         )
 
 
@@ -151,6 +158,9 @@ class SessionHandle:
         self._error: BaseException | None = None
         self._leave = threading.Event()
         self._leave_hook: Callable[[], None] | None = None  # executor wake-up
+        # fleet-side migration request; picked up at the next group
+        # boundary by the hosting executor (FleetScheduler.migrate sets it)
+        self._migrate = threading.Event()
         self.status = "queued"
 
     # -- caller side --------------------------------------------------------

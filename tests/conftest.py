@@ -1,0 +1,52 @@
+"""Shared fixtures: the deterministic fault-injection harness.
+
+The fleet tests script executor crashes/stalls/slow-steps against cohort
+step indices (never wall-clock) and drive supervision time through an
+injectable clock. These fixtures hand every test a fresh fault plan and
+clock, plus a ``FleetScheduler`` factory that guarantees teardown: any
+scheduler a test builds is aborted (and its scripted stalls poisoned
+free) even when the test body raises, so a failing assertion can never
+leave a stalled executor thread holding the session.
+"""
+
+import pytest
+
+from repro.serve import FakeClock, FaultPlan, FleetScheduler
+
+
+@pytest.fixture
+def fake_clock():
+    """Virtual time: only ``advance()`` moves it."""
+    return FakeClock()
+
+
+@pytest.fixture
+def fault_plan():
+    """Empty fault script; tests chain ``.crash/.stall/.slow`` onto it."""
+    return FaultPlan()
+
+
+@pytest.fixture
+def fleet_factory(tmp_path):
+    """Build ``FleetScheduler``\\ s wired to a per-test checkpoint
+    directory (pass ``checkpoint_dir=None`` to opt out); everything built
+    here is torn down unconditionally."""
+    created = []
+
+    def make(**kwargs):
+        kwargs.setdefault("checkpoint_dir", str(tmp_path / "ckpt"))
+        fleet = FleetScheduler(**kwargs)
+        created.append(fleet)
+        return fleet
+
+    yield make
+    for fleet in created:
+        if fleet.faults is not None:
+            # free any stall a failing test left held, and make sure the
+            # released thread terminates instead of folding anything
+            for ex in list(fleet._executors):
+                fleet.faults.poison(ex.name)
+        try:
+            fleet.shutdown(wait=False)
+        except Exception:
+            pass

@@ -42,12 +42,14 @@ def test_select_substring_matches():
     assert [n for n, _ in bench_run.select("table11")] == ["table11-multitenant"]
     assert [n for n, _ in bench_run.select("table12")] == ["table12-autotune"]
     assert [n for n, _ in bench_run.select("table13")] == ["table13-bandwidth"]
+    assert [n for n, _ in bench_run.select("table14")] == ["table14-fleet"]
     assert [n for n, _ in bench_run.select("table1")] == [
         "table1",
         "table10-zoo",
         "table11-multitenant",
         "table12-autotune",
         "table13-bandwidth",
+        "table14-fleet",
     ]
     assert bench_run.select(None) == bench_run.MODULES
 

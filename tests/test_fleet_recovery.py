@@ -1,0 +1,373 @@
+"""Fleet fault tolerance under the deterministic fault-injection harness.
+
+Every scenario here is scripted: crashes/stalls/slow-steps fire at cohort
+step indices (``FaultPlan``), supervision time is a ``FakeClock`` the test
+advances, and every wait is a *bounded event wait* — there are no
+wall-clock sleeps anywhere in this file. Covered: kill-executor recovery
+(bit-identical resume for every filter), migrate-under-load, straggler
+eviction, heartbeat-dead eviction of a stalled executor, double faults
+against the restart budget, sparse-checkpoint replay, and the
+abort-vs-held-fold drain regression."""
+
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core.denoise import DenoiseConfig, StreamingDenoiser
+from repro.data.prism import PrismSource
+from repro.denoise import FILTERS
+from repro.serve import (
+    FaultPlan,
+    InjectedExecutorFailure,
+    Session,
+    SessionHandle,
+)
+from repro.serve.scheduler import _Active
+
+ALL_FILTERS = sorted(FILTERS)
+WAIT = 300  # generous bounded waits: first step pays jit compile
+
+
+def _cfg(**kw):
+    base = dict(
+        num_groups=6,
+        frames_per_group=20,
+        height=16,
+        width=64,
+        backend="xla",
+        median_window=3,
+    )
+    base.update(kw)
+    return DenoiseConfig(**base)
+
+
+def _groups(cfg, seed=3):
+    return list(PrismSource(cfg, seed=seed).groups())
+
+
+def _serial(cfg, groups, steps=None):
+    """Oracle: the direct filter calls on the same chunk sequence."""
+    den = StreamingDenoiser(cfg)
+    state = den.init()
+    for k, g in enumerate(groups):
+        state = den.ingest(state, np.asarray(g), step=k)
+    return np.asarray(den.finalize(state, steps=steps))
+
+
+def _assert_recovered_output(name, out, ref):
+    """Recovery is bit-identical for the exact filters; ema_variance's
+    running mean/variance recurrence is still exact under checkpoint +
+    replay (same ops, same order, same dtypes), so it gets the same
+    assertion — any future divergence should fail loudly here."""
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+# ---------------------------------------------------------------------------
+# Kill-executor recovery: crash mid-stream, resume bit-identically.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", ALL_FILTERS)
+def test_kill_executor_recovery_bit_identical(name, fleet_factory):
+    cfg = _cfg(filter_name=name)
+    groups = _groups(cfg)
+    plan = FaultPlan().crash("ex0", at_step=3)
+    fleet = fleet_factory(slots_per_executor=1, max_executors=2, faults=plan)
+    with fleet:
+        h = fleet.submit(Session(config=cfg, source=iter(groups), name="k0"))
+        out, rep = h.result(timeout=WAIT)
+    assert plan.crashed("ex0")
+    _assert_recovered_output(name, out, _serial(cfg, groups))
+    assert rep.groups == cfg.num_groups
+    assert rep.frames == cfg.num_groups * cfg.frames_per_group
+    assert rep.restarts == 1
+    assert rep.checkpoints >= 1
+    assert any(e.startswith("recover@k0->ex1") for e in fleet.events)
+    assert fleet.recovery_latencies_s(), "no kill-to-recovered mark recorded"
+
+
+def test_kill_executor_recovers_all_cotenants(fleet_factory):
+    """Both sessions sharing the crashed executor resume exactly."""
+    cfg = _cfg()
+    ga, gb = _groups(cfg, seed=1), _groups(cfg, seed=2)
+    plan = FaultPlan().crash("ex0", at_step=4)
+    fleet = fleet_factory(slots_per_executor=2, max_executors=2, faults=plan)
+    with fleet:
+        ha = fleet.submit(Session(config=cfg, source=iter(ga), name="A"))
+        hb = fleet.submit(Session(config=cfg, source=iter(gb), name="B"))
+        oa, ra = ha.result(timeout=WAIT)
+        ob, rb = hb.result(timeout=WAIT)
+    np.testing.assert_array_equal(np.asarray(oa), _serial(cfg, ga))
+    np.testing.assert_array_equal(np.asarray(ob), _serial(cfg, gb))
+    assert ra.restarts == 1 and rb.restarts == 1
+
+
+def test_crash_before_first_fold_recovers_fresh(fleet_factory):
+    """A session that never folded anything resumes from a fresh init —
+    no checkpoint, no replay, still exactly the reference output."""
+    cfg = _cfg()
+    groups = _groups(cfg)
+    plan = FaultPlan().crash("ex0", at_step=0)
+    fleet = fleet_factory(slots_per_executor=1, max_executors=2, faults=plan)
+    with fleet:
+        h = fleet.submit(Session(config=cfg, source=iter(groups), name="f0"))
+        out, rep = h.result(timeout=WAIT)
+    np.testing.assert_array_equal(np.asarray(out), _serial(cfg, groups))
+    assert rep.restarts == 1 and rep.groups == cfg.num_groups
+
+
+@pytest.mark.parametrize("name", ["temporal_median", "ema_variance"])
+def test_recovery_replays_past_sparse_checkpoint(name, fleet_factory):
+    """``checkpoint_every=3``: the crash lands two folds past the newest
+    snapshot, so recovery must restore @3 and re-fold the replay log."""
+    cfg = _cfg(filter_name=name, num_groups=7)
+    groups = _groups(cfg)
+    plan = FaultPlan().crash("ex0", at_step=5)
+    fleet = fleet_factory(
+        slots_per_executor=1, max_executors=2, faults=plan, checkpoint_every=3
+    )
+    with fleet:
+        h = fleet.submit(Session(config=cfg, source=iter(groups), name="R"))
+        out, rep = h.result(timeout=WAIT)
+    _assert_recovered_output(name, out, _serial(cfg, groups))
+    assert rep.restarts == 1
+    # folded 0..4 before the crash, newest snapshot at steps=3: exactly
+    # the two post-snapshot chunks ride the replay log
+    assert any("recover@R->" in e and "steps=3+2" in e for e in fleet.events)
+
+
+# ---------------------------------------------------------------------------
+# Live migration at a group boundary, mid-stream, with staged load.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", ["pair_average", "temporal_median"])
+def test_migrate_under_load_bit_identical(name, fleet_factory):
+    cfg = _cfg(filter_name=name)
+    groups = _groups(cfg)
+    gb = _groups(cfg, seed=11)
+    gate = threading.Event()
+    fed = threading.Event()
+
+    def src():
+        yield groups[0]
+        yield groups[1]
+        fed.set()
+        gate.wait(WAIT)
+        yield from groups[2:]
+
+    fleet = fleet_factory(slots_per_executor=2, max_executors=2)
+    with fleet:
+        h = fleet.submit(Session(config=cfg, source=src(), name="m0"))
+        hb = fleet.submit(Session(config=cfg, source=iter(gb), name="m1"))
+        assert fed.wait(WAIT), "source never staged its pre-gate chunks"
+        target = fleet.migrate(h, timeout=WAIT)
+        assert target == "ex1"
+        gate.set()
+        out, rep = h.result(timeout=WAIT)
+        ob, rb = hb.result(timeout=WAIT)
+    np.testing.assert_array_equal(np.asarray(out), _serial(cfg, groups))
+    np.testing.assert_array_equal(np.asarray(ob), _serial(cfg, gb))
+    assert rep.migrations == 1 and rep.restarts == 0
+    assert rb.migrations == 0  # the co-tenant never noticed
+    assert any(e.startswith("migrate@m0:ex0->ex1") for e in fleet.events)
+
+
+def test_migrate_finished_session_returns_none(fleet_factory):
+    cfg = _cfg()
+    groups = _groups(cfg)
+    fleet = fleet_factory(slots_per_executor=1, max_executors=2)
+    with fleet:
+        h = fleet.submit(Session(config=cfg, source=iter(groups)))
+        out, _ = h.result(timeout=WAIT)
+        assert fleet.migrate(h, timeout=WAIT) is None
+    np.testing.assert_array_equal(np.asarray(out), _serial(cfg, groups))
+
+
+# ---------------------------------------------------------------------------
+# Supervision: straggler eviction and heartbeat death, virtual time only.
+# ---------------------------------------------------------------------------
+
+
+def _counting_consumer(event, at):
+    """Set ``event`` once fold index ``at`` has completed (the consumer
+    hook runs on the executor thread after each fold)."""
+
+    def consumer(step, _partial):
+        if step >= at:
+            event.set()
+
+    return consumer
+
+
+def test_straggler_evicted_and_session_recovers(fleet_factory, fake_clock):
+    """Two 1-slot executors with scripted *virtual* step durations: the
+    5x-slower one is flagged against the fleet median and evicted; its
+    session resumes elsewhere and the output is untouched."""
+    cfg = _cfg()
+    ga, gb = _groups(cfg, seed=1), _groups(cfg, seed=2)
+    plan = (
+        FaultPlan()
+        .slow("ex0", extra_s=0.1, from_step=0)
+        .slow("ex1", extra_s=0.5, from_step=0)
+    )
+    fleet = fleet_factory(
+        slots_per_executor=1,
+        max_executors=3,
+        faults=plan,
+        clock=fake_clock,
+        straggler_threshold=1.5,
+        straggler_warmup=3,
+    )
+    gate_a, gate_b = threading.Event(), threading.Event()
+    warm_a, warm_b = threading.Event(), threading.Event()
+
+    def gated(groups, gate):
+        def src():
+            yield from groups[:4]
+            gate.wait(WAIT)
+            yield from groups[4:]
+
+        return src()
+
+    with fleet:
+        ha = fleet.submit(
+            Session(
+                config=cfg,
+                source=gated(ga, gate_a),
+                name="A",
+                consumer=_counting_consumer(warm_a, 3),
+            )
+        )
+        hb = fleet.submit(
+            Session(
+                config=cfg,
+                source=gated(gb, gate_b),
+                name="B",
+                consumer=_counting_consumer(warm_b, 3),
+            )
+        )
+        # fold index 3 completing guarantees folds 0..2 fully recorded
+        # their EWMA samples — past warmup on both executors
+        assert warm_a.wait(WAIT) and warm_b.wait(WAIT)
+        res = fleet.check_faults(probe=False)
+        assert res["dead"] == []
+        assert res["stragglers"] == ["ex1"]
+        assert res["evicted"] == ["ex1"]
+        assert res["recovered"] == ["B"]
+        gate_a.set()
+        gate_b.set()
+        oa, ra = ha.result(timeout=WAIT)
+        ob, rb = hb.result(timeout=WAIT)
+    np.testing.assert_array_equal(np.asarray(oa), _serial(cfg, ga))
+    np.testing.assert_array_equal(np.asarray(ob), _serial(cfg, gb))
+    assert ra.restarts == 0 and rb.restarts == 1
+    assert any(e == "evict@ex1:straggler" for e in fleet.events)
+
+
+def test_stalled_executor_evicted_by_heartbeat(fleet_factory, fake_clock):
+    """A stalled executor stops beating; advancing the fake clock past
+    the heartbeat timeout gets it evicted and its session recovered —
+    zero real seconds of waiting on silence."""
+    cfg = _cfg()
+    groups = _groups(cfg)
+    plan = FaultPlan().stall("ex0", at_step=2)
+    fleet = fleet_factory(
+        slots_per_executor=1,
+        max_executors=2,
+        faults=plan,
+        clock=fake_clock,
+        heartbeat_timeout_s=60.0,
+    )
+    with fleet:
+        h = fleet.submit(Session(config=cfg, source=iter(groups), name="S"))
+        assert plan.wait_stalled("ex0", timeout=WAIT)
+        fake_clock.advance(61.0)
+        res = fleet.check_faults(probe=False)
+        assert res["dead"] == ["ex0"]
+        assert res["evicted"] == ["ex0"]
+        assert res["recovered"] == ["S"]
+        out, rep = h.result(timeout=WAIT)
+    np.testing.assert_array_equal(np.asarray(out), _serial(cfg, groups))
+    assert rep.restarts == 1 and rep.groups == cfg.num_groups
+    assert any(e == "evict@ex0:heartbeat" for e in fleet.events)
+    # the zombie thread raised on release instead of folding anything
+    ex0 = fleet._executors[0]
+    ex0.thread.join(WAIT)
+    assert not ex0.thread.is_alive()
+
+
+# ---------------------------------------------------------------------------
+# Double faults vs the restart budget.
+# ---------------------------------------------------------------------------
+
+
+def test_double_fault_recovers_within_budget(fleet_factory):
+    cfg = _cfg(num_groups=8)
+    groups = _groups(cfg)
+    plan = FaultPlan().crash("ex0", at_step=2).crash("ex1", at_step=2)
+    fleet = fleet_factory(
+        slots_per_executor=1, max_executors=3, faults=plan,
+        max_session_restarts=2,
+    )
+    with fleet:
+        h = fleet.submit(Session(config=cfg, source=iter(groups), name="D"))
+        out, rep = h.result(timeout=WAIT)
+    np.testing.assert_array_equal(np.asarray(out), _serial(cfg, groups))
+    assert rep.restarts == 2
+    assert sum(e.startswith("recover@D->") for e in fleet.events) == 2
+
+
+def test_double_fault_exhausts_restart_budget(fleet_factory):
+    cfg = _cfg(num_groups=8)
+    groups = _groups(cfg)
+    plan = FaultPlan().crash("ex0", at_step=2).crash("ex1", at_step=2)
+    fleet = fleet_factory(
+        slots_per_executor=1, max_executors=3, faults=plan,
+        max_session_restarts=1,
+    )
+    with fleet:
+        h = fleet.submit(Session(config=cfg, source=iter(groups), name="D"))
+        with pytest.raises(InjectedExecutorFailure):
+            h.result(timeout=WAIT)
+    assert any(e.startswith("give-up@D") for e in fleet.events)
+
+
+# ---------------------------------------------------------------------------
+# Regression: abort racing a held fold must drain queued sessions.
+# ---------------------------------------------------------------------------
+
+
+def test_abort_with_held_fold_drains_queued_sessions(fleet_factory):
+    """``stop(abort=True)`` while the executor thread is held inside a
+    fold must still terminally fail both the seated and the *queued*
+    session — the queued ``_Active`` used to be left unnotified, hanging
+    its ``result()`` forever. Also pins the enqueue-after-death refusal."""
+    cfg = _cfg(num_groups=4)
+    ga, gb = _groups(cfg, seed=1), _groups(cfg, seed=2)
+    plan = FaultPlan().stall("ex0", at_step=1)
+    fleet = fleet_factory(
+        slots_per_executor=1, max_executors=1, faults=plan,
+        max_session_restarts=0,
+    )
+    ha = fleet.submit(Session(config=cfg, source=iter(ga), name="A"))
+    hb = fleet.submit(Session(config=cfg, source=iter(gb), name="B"))
+    assert plan.wait_stalled("ex0", timeout=WAIT)
+    ex0 = fleet._executors[0]
+    ex0.stop(abort=True)  # abort lands while the fold is still held
+    plan.poison("ex0")    # release the thread: it must raise, not fold
+    ex0.thread.join(WAIT)
+    assert not ex0.thread.is_alive()
+    with pytest.raises(RuntimeError):
+        ha.result(timeout=WAIT)
+    with pytest.raises(RuntimeError):
+        hb.result(timeout=WAIT)
+    # a dead executor refuses new sessions instead of parking them
+    spare = _Active(
+        SessionHandle(Session(config=cfg, source=iter(gb))),
+        99,
+        notify_hook=lambda: None,
+    )
+    assert ex0.enqueue(spare) is False
+    fleet.shutdown(wait=False)
