@@ -29,6 +29,7 @@ from benchmarks import (
     table12_autotune,
     table13_bandwidth,
     table14_fleet,
+    table15_observability,
 )
 
 MODULES = [
@@ -46,6 +47,7 @@ MODULES = [
     ("table12-autotune", table12_autotune),
     ("table13-bandwidth", table13_bandwidth),
     ("table14-fleet", table14_fleet),
+    ("table15-observability", table15_observability),
     ("fig8", fig8_denoise_snr),
     ("roofline", roofline_report),
 ]

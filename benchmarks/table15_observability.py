@@ -1,0 +1,414 @@
+"""Table 15 (framework extension): observability overhead + sample trace.
+
+The telemetry layer (``repro.obs``) claims its disabled mode is a no-op:
+``run_pipelined``'s per-chunk spans collapse to one preallocated null
+context manager and its counters to a dict-get + float-add. This table
+measures that claim with the repo's paired-ratio discipline (order-
+balanced A/B repeats, per-pair ratios, median — the table9/table12
+idiom) on the bursty-readout replay:
+
+* ``ratio_disabled`` — ``run_pipelined`` (tracer disabled, the
+  production default) vs a benchmark-local *telemetry-free replica* of
+  the same 2-stage pipeline (same ring, same staging thread, same fold
+  calls, zero obs/metrics calls). This is the cost every user pays.
+* ``ratio_enabled``  — tracer enabled vs disabled: what turning the
+  trace ring on costs.
+* ``span_ns``        — direct per-call cost of the disabled
+  ``obs.span()`` fast path.
+
+``--assert-overhead`` exits non-zero unless the disabled-mode median
+paired ratio stays <= ``OVERHEAD_BUDGET`` (1.02). The replica's output
+is checked bit-identical to ``run_pipelined``'s before any timing is
+trusted.
+
+The table also emits a *sample trace artifact*: an enabled-mode
+4-session fleet run with one injected executor kill, exported as
+Chrome-trace JSON (``--trace-out``, default ``table15_trace.json``) and
+schema-validated in-process — load it at chrome://tracing or
+https://ui.perfetto.dev. Run directly for the CI smoke cycle::
+
+    python -m benchmarks.table15_observability --smoke --assert-overhead
+"""
+
+from __future__ import annotations
+
+import argparse
+import math
+import statistics
+import tempfile
+import threading
+import time
+from typing import Sequence
+
+import jax
+import numpy as np
+
+from benchmarks.common import (
+    PAPER_N,
+    bench_config,
+    bench_record,
+    emit,
+)
+from benchmarks.table9_ring_depth import bursty
+from repro import obs
+from repro.core.denoise import StreamingDenoiser
+from repro.core.ringbuf import RingBuffer, RingClosed
+from repro.core.streaming import run_pipelined
+from repro.data.prism import PrismSource
+from repro.serve import FaultPlan, FleetScheduler, Session
+
+RING_SLOTS = 2
+OVERHEAD_BUDGET = 1.02   # disabled-mode median paired ratio ceiling
+BURST_COMPUTE_MULT = 2.5  # same bursty-readout shape table9 sweeps
+BURST_EVERY = 4
+SPAN_CALLS = 100_000     # disabled-path microbench population
+KILL_AT_STEP = 3  # one fold past the every-2 checkpoint: recovery must replay
+
+
+def _control_pipeline(cfg, source, num_slots=RING_SLOTS):
+    """Obs-free replica of ``run_pipelined``'s 2-stage pipeline with the
+    *hand-maintained* accounting the metrics registry replaced.
+
+    Same ring, same staging thread, same per-step fold and finalize, and
+    the same bookkeeping the pre-telemetry executor carried (per-chunk
+    transfer timing, frame counting, dwell samples, end-of-run percentile
+    columns) — kept as plain locals instead of registry instruments. The
+    paired ratio against this isolates what routing that accounting
+    through ``repro.obs`` (plus the disabled-mode span calls) costs,
+    which is exactly the disabled-path contract under test. Returns
+    ``(out, elapsed_s)``.
+    """
+    den = StreamingDenoiser(cfg)
+    ring = RingBuffer(num_slots)
+    source = iter(source)
+    errors: list[BaseException] = []
+
+    def produce():
+        try:
+            while True:
+                t0 = time.perf_counter()
+                try:
+                    chunk = next(source)
+                except StopIteration:
+                    break
+                dev = jax.device_put(jax.numpy.asarray(chunk))
+                jax.block_until_ready(dev)
+                ring.put((dev, time.perf_counter() - t0))
+        except RingClosed:
+            pass
+        except BaseException as e:
+            errors.append(e)
+        finally:
+            ring.close()
+
+    t0 = time.perf_counter()
+    state = den.init()
+    step = frames = 0
+    transfer_s = 0.0
+    latencies: list[float] = []
+    producer = threading.Thread(target=produce, name="control-stage", daemon=True)
+    producer.start()
+    try:
+        while True:
+            try:
+                dev, dt = ring.get()
+            except RingClosed:
+                break
+            transfer_s += dt
+            latencies.append(ring.stats.last_dwell_s)
+            state = den.ingest(state, dev, step=step)
+            frames += math.prod(dev.shape[:-2])
+            step += 1
+    finally:
+        ring.close()
+        producer.join()
+    if errors:
+        raise errors[0]
+    out = den.finalize(state)
+    jax.block_until_ready(out)
+    elapsed = time.perf_counter() - t0
+    # the hand-rolled report columns the snapshot-derived path replaced
+    _ = {
+        "frames": frames,
+        "bytes_in": frames * cfg.bytes_per_frame,
+        "transfer_s": transfer_s,
+        "stall_s": ring.stats.get_wait_s,
+        "p50_ms": obs.nearest_rank(latencies, 50.0) * 1e3,
+        "p99_ms": obs.nearest_rank(latencies, 99.0) * 1e3,
+    }
+    return out, elapsed
+
+
+def _calibrate_burst_s(cfg, chunks) -> float:
+    """Size the readout burst in compute-intervals, like table9."""
+    den = StreamingDenoiser(cfg)
+    state = den.init()
+    state = den.ingest(state, chunks[0], step=0)  # warm the jit cache
+    t0 = time.perf_counter()
+    for k, g in enumerate(chunks):
+        state = den.ingest(state, g, step=k + 1)
+    jax.block_until_ready(den.partial(state, len(chunks)))
+    per_chunk = (time.perf_counter() - t0) / len(chunks)
+    return BURST_COMPUTE_MULT * per_chunk
+
+
+def _paired_ratios(run_a, run_b, pairs: int, k: int = 4):
+    """Order-balanced min-of-``k`` paired ratios b/a, plus the floor ratio.
+
+    Each pair interleaves ``k`` runs of each side (alternating which goes
+    first) and takes the per-side *minimum* before forming the ratio: on
+    a shared host the run-time distribution is floor + contention spikes,
+    and the telemetry delta under test lives at the floor — medians of
+    single runs would measure the machine, not the layer. Order balance
+    spreads slow drift across both sides. Returns ``(ratios, floor)``
+    where ``floor`` is the global-min ratio over every interleaved run —
+    the most drift-immune single estimate (a load spike that lands on
+    *both* sides of a late pair inflates that pair's ratio but cannot
+    touch the global floors), so it is what ``--assert-overhead`` gates
+    on while the per-pair ratios populate the recorded distribution."""
+    ratios = []
+    all_a, all_b = [], []
+    for i in range(pairs):
+        ta, tb = [], []
+        for j in range(k):
+            if (i + j) % 2 == 0:
+                ta.append(run_a())
+                tb.append(run_b())
+            else:
+                tb.append(run_b())
+                ta.append(run_a())
+        ratios.append(min(tb) / min(ta))
+        all_a += ta
+        all_b += tb
+    return ratios, min(all_b) / min(all_a)
+
+
+def _span_fast_path_ns() -> float:
+    """Per-call cost of the disabled ``obs.span()`` path."""
+    tr = obs.get_tracer()
+    assert not tr.enabled, "microbench must run against the disabled tracer"
+    span = obs.span
+    t0 = time.perf_counter()
+    for _ in range(SPAN_CALLS):
+        with span("bench.noop", "bench"):
+            pass
+    return (time.perf_counter() - t0) / SPAN_CALLS * 1e9
+
+
+def _trace_artifact(cfg, chunks, path: str, ckpt_dir: str) -> dict:
+    """Enabled-mode 4-session fleet run with one injected kill, exported
+    as validated Chrome-trace JSON. Returns summary stats."""
+    tr = obs.get_tracer()
+    was_enabled = tr.enabled
+    tr.clear()
+    obs.configure(enabled=True)
+    plan = FaultPlan().crash("ex0", at_step=KILL_AT_STEP)
+    fleet = FleetScheduler(
+        checkpoint_dir=ckpt_dir,
+        checkpoint_every=2,  # sparse: the recovery replays past a snapshot
+        faults=plan,
+        slots_per_executor=2,
+        max_executors=2,
+        max_sessions=4,
+    )
+    try:
+        handles = [
+            fleet.submit(
+                Session(
+                    config=cfg,
+                    source=iter(chunks),
+                    name=f"s{i}",
+                    num_slots=RING_SLOTS,
+                )
+            )
+            for i in range(4)
+        ]
+        reports = [h.result(timeout=600)[1] for h in handles]
+    finally:
+        fleet.shutdown()
+        doc = tr.export_chrome(path)
+        obs.configure(enabled=was_enabled)
+        tr.clear()
+    events = obs.validate_chrome_trace(doc)
+    names = {e["name"] for e in events}
+    # the crash path: executor-dead (not heartbeat/evict, which need a
+    # fake clock — the test suite covers that sequence) -> restore -> replay
+    required = {"fleet.executor_dead", "fleet.restore", "serve.replay",
+                "fleet.checkpoint", "serve.submit", "serve.join"}
+    missing = required - names
+    if missing:
+        raise SystemExit(
+            f"trace artifact missing expected events: {sorted(missing)}"
+        )
+    return {
+        "events": len(events),
+        "restarts": sum(r.restarts for r in reports),
+        "sessions": len(reports),
+    }
+
+
+def run(
+    quick: bool = True,
+    *,
+    smoke: bool = False,
+    assert_overhead: bool = False,
+    trace_out: str = "table15_trace.json",
+) -> None:
+    # paper-shaped chunks even in smoke: the <= 2% contract is stated at
+    # paper defaults, and tiny frames would measure Python dispatch jitter
+    # rather than the telemetry layer (per-chunk fold must dwarf the
+    # per-chunk accounting for the ratio to carry signal)
+    cfg = bench_config(
+        quick,
+        num_groups=6 if smoke else 8,
+        frames_per_group=200 if (smoke or quick) else PAPER_N,
+    )
+    chunks = [jax.device_put(np.asarray(c)) for c in PrismSource(cfg).groups()]
+    jax.block_until_ready(chunks)
+    burst_s = _calibrate_burst_s(cfg, chunks)
+    pairs = 5 if smoke else 6
+
+    # -- bit-identity gate: the replica must compute the same stream ---------
+    ref, _ = run_pipelined(cfg, iter(chunks), num_slots=RING_SLOTS)
+    out, _ = _control_pipeline(cfg, iter(chunks))
+    if not np.array_equal(np.asarray(out), np.asarray(ref)):
+        raise SystemExit("control replica diverged from run_pipelined")
+
+    def timed_control() -> float:
+        _, dt = _control_pipeline(cfg, bursty(chunks, burst_s, BURST_EVERY))
+        return dt
+
+    def timed_pipelined() -> float:
+        t0 = time.perf_counter()
+        run_pipelined(
+            cfg, bursty(chunks, burst_s, BURST_EVERY), num_slots=RING_SLOTS
+        )
+        return time.perf_counter() - t0
+
+    # -- disabled mode: the cost every user pays -----------------------------
+    tr = obs.get_tracer()
+    was_enabled = tr.enabled
+    obs.configure(enabled=False)
+    try:
+        ratios_disabled, floor_disabled = _paired_ratios(
+            timed_control, timed_pipelined, pairs
+        )
+        span_ns = _span_fast_path_ns()
+        # -- enabled mode: what turning the trace ring on costs --------------
+        def timed_enabled() -> float:
+            obs.configure(enabled=True)
+            try:
+                return timed_pipelined()
+            finally:
+                obs.configure(enabled=False)
+                tr.clear()
+
+        ratios_enabled, floor_enabled = _paired_ratios(
+            timed_pipelined, timed_enabled, pairs
+        )
+    finally:
+        obs.configure(enabled=was_enabled)
+        tr.clear()
+
+    med_disabled = statistics.median(ratios_disabled)
+    med_enabled = statistics.median(ratios_enabled)
+    emit(
+        "table15/overhead",
+        span_ns * 1e-3,
+        f"ratio_disabled={med_disabled:.4f};floor_disabled={floor_disabled:.4f};"
+        f"ratio_enabled={med_enabled:.4f};span_ns={span_ns:.0f}",
+    )
+
+    # -- sample trace artifact ----------------------------------------------
+    # small frames: the artifact documents the *event vocabulary* of a
+    # kill + recovery, which is shape-independent — no reason to drag
+    # paper-sized chunks through a 4-session fleet here
+    art_cfg = bench_config(
+        True, num_groups=6, frames_per_group=40, height=16, width=64
+    )
+    art_chunks = [
+        jax.device_put(np.asarray(c)) for c in PrismSource(art_cfg).groups()
+    ]
+    jax.block_until_ready(art_chunks)
+    with tempfile.TemporaryDirectory(prefix="table15-ckpt-") as root:
+        artifact = _trace_artifact(art_cfg, art_chunks, trace_out, f"{root}/ckpt")
+    emit(
+        "table15/trace",
+        0.0,
+        f"path={trace_out};events={artifact['events']};"
+        f"restarts={artifact['restarts']}",
+    )
+
+    bench_record(
+        "obs_overhead",
+        kind="obs_overhead",
+        config={
+            "G": cfg.num_groups,
+            "N": cfg.frames_per_group,
+            "H": cfg.height,
+            "W": cfg.width,
+            "backend": cfg.backend,
+            "ring_slots": RING_SLOTS,
+            "pairs": pairs,
+            "burst_every": BURST_EVERY,
+            "burst_compute_mult": BURST_COMPUTE_MULT,
+        },
+        ratio_disabled=round(med_disabled, 4),
+        floor_disabled=round(floor_disabled, 4),
+        ratio_enabled=round(med_enabled, 4),
+        floor_enabled=round(floor_enabled, 4),
+        span_ns=round(span_ns, 1),
+        trace_events=artifact["events"],
+    )
+
+    if assert_overhead:
+        # two independent estimators of the same delta: the pair-ratio
+        # median and the global floor ratio. Host noise (a contention
+        # spike, one lucky run) moves them in *different* directions; a
+        # real systematic overhead moves both up. Gate on the smaller so
+        # a shared-runner hiccup cannot fail the build while a genuine
+        # >2% regression still trips both.
+        estimate = min(med_disabled, floor_disabled)
+        if estimate > OVERHEAD_BUDGET:
+            raise SystemExit(
+                f"disabled-mode telemetry overhead {estimate:.4f} "
+                f"(median {med_disabled:.4f}, floor {floor_disabled:.4f}, "
+                f"pairs {ratios_disabled}) exceeds budget {OVERHEAD_BUDGET}"
+            )
+        print(
+            f"# overhead assertion ok: disabled ratio {estimate:.4f} "
+            f"<= {OVERHEAD_BUDGET} (median {med_disabled:.4f}, floor "
+            f"{floor_disabled:.4f}), span fast path {span_ns:.0f}ns"
+        )
+
+
+def main(argv: Sequence[str] | None = None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--full", action="store_true", help="paper-scale streams")
+    ap.add_argument(
+        "--smoke",
+        action="store_true",
+        help="tiny stream, fewer pairs — the CI cycle",
+    )
+    ap.add_argument(
+        "--assert-overhead",
+        action="store_true",
+        help="exit non-zero unless the disabled-mode floor paired ratio "
+        f"stays <= {OVERHEAD_BUDGET}",
+    )
+    ap.add_argument(
+        "--trace-out",
+        default="table15_trace.json",
+        help="where to write the sample Chrome-trace artifact",
+    )
+    args = ap.parse_args(argv)
+    run(
+        quick=not args.full,
+        smoke=args.smoke,
+        assert_overhead=args.assert_overhead,
+        trace_out=args.trace_out,
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -42,10 +42,10 @@ import jax
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro import tune
+from repro import obs, tune
 from repro.core.denoise import DenoiseConfig
-from repro.core.ringbuf import RingBuffer, RingClosed, nearest_rank_s
-from repro.core.streaming import StreamReport
+from repro.core.ringbuf import RingBuffer, RingClosed
+from repro.core.streaming import _stream_report
 from repro.denoise import get_filter
 from repro.jax_compat import shard_map
 from repro.kernels import ops
@@ -254,7 +254,9 @@ def run_pipelined_banked(
             f"gather barrier cannot tolerate per-bank loss (got {policy!r})"
         )
 
-    rings = [RingBuffer(num_slots, policy=policy) for _ in range(banks)]
+    rings = [
+        RingBuffer(num_slots, policy=policy, name=f"bank{i}") for i in range(banks)
+    ]
     errors: list[BaseException] = []
 
     def _produce(ring: RingBuffer, source: Iterator[np.ndarray]) -> None:
@@ -263,7 +265,8 @@ def run_pipelined_banked(
             while True:
                 t0 = time.perf_counter()  # time the pull (camera) + the copy
                 try:
-                    chunk = next(it)
+                    with obs.span("stream.stage", "banks", ring=ring.name):
+                        chunk = next(it)
                 except StopIteration:
                     break
                 staged = np.ascontiguousarray(chunk)
@@ -284,13 +287,17 @@ def run_pipelined_banked(
     for t in threads:
         t.start()
 
+    reg = obs.MetricsRegistry()
+    c_frames = reg.counter("stream.frames")
+    c_transfer = reg.counter("stream.transfer_s")
+    c_stall = reg.counter("stream.stall_s")
+    h_latency = reg.histogram("stream.latency_s")
+    reg.gauge("stream.num_slots").set(num_slots)
+
     sharding = NamedSharding(mesh, _chunk_spec())
     c = config
     t_start = time.perf_counter()
     filt, state = banked_filter_init(c, mesh)
-    frames = 0
-    transfer_s = 0.0
-    stall_s = 0.0
     step = 0
     try:
         while True:
@@ -299,14 +306,20 @@ def run_pipelined_banked(
                 items = [ring.get() for ring in rings]
             except RingClosed:
                 break  # sources drained (or an error closed the rings)
-            stall_s += time.perf_counter() - t_wait
-            transfer_s += sum(dt for _, dt in items)
-            dev = jax.device_put(np.stack([chunk for chunk, _ in items]), sharding)
-            state = banked_filter_step(
-                state, dev, mesh, config=config, step_index=step, filt=filt
-            )
+            c_stall.inc(time.perf_counter() - t_wait)
+            c_transfer.inc(sum(dt for _, dt in items))
+            # each chunk's wait from staged to the gather barrier picking
+            # it up — pooled across the per-bank rings
+            h_latency.observe_many(r.stats.last_dwell_s for r in rings)
+            with obs.span("banks.step", "banks", step=step, banks=banks):
+                dev = jax.device_put(
+                    np.stack([chunk for chunk, _ in items]), sharding
+                )
+                state = banked_filter_step(
+                    state, dev, mesh, config=config, step_index=step, filt=filt
+                )
             step += 1
-            frames += banks * items[0][0].shape[0]
+            c_frames.inc(banks * items[0][0].shape[0])
     finally:
         for ring in rings:
             ring.close()
@@ -322,27 +335,16 @@ def run_pipelined_banked(
             "needs one chunk per bank per step"
         )
 
-    out = filt.finalize(state)
-    jax.block_until_ready(out)
+    with obs.span("stream.finalize", "banks", steps=step):
+        out = filt.finalize(state)
+        jax.block_until_ready(out)
     elapsed = time.perf_counter() - t_start
     stats = [ring.stats for ring in rings]
-    dwell_all = [d for s in stats for d in s.dwell_samples]
-    return out, StreamReport(
-        elapsed_s=elapsed,
-        buffering_s=0.0,
-        compute_s=elapsed - stall_s,
-        frames=frames,
-        bytes_in=frames * c.bytes_per_frame,
-        transfer_s=transfer_s,
-        stall_s=stall_s,
-        num_slots=num_slots,
-        produce_wait_s=sum(s.put_wait_s for s in stats),
-        drops=sum(s.drops for s in stats),
-        ring_occupancy_mean=sum(s.occupancy_mean for s in stats) / banks,
-        ring_occupancy_max=max(s.occupancy_max for s in stats),
-        # stage-queue latency pooled across the per-bank rings (each
-        # chunk's wait from staged to the gather barrier picking it up)
-        latency_p50_ms=nearest_rank_s(dwell_all, 50) * 1e3,
-        latency_p95_ms=nearest_rank_s(dwell_all, 95) * 1e3,
-        latency_p99_ms=nearest_rank_s(dwell_all, 99) * 1e3,
+    reg.counter("stream.bytes_in").inc(int(c_frames.value) * c.bytes_per_frame)
+    reg.counter("stream.produce_wait_s").inc(sum(s.put_wait_s for s in stats))
+    reg.counter("stream.drops").inc(sum(s.drops for s in stats))
+    reg.gauge("stream.ring_occupancy_mean").set(
+        sum(s.occupancy_mean for s in stats) / banks
     )
+    reg.gauge("stream.ring_occupancy_max").set(max(s.occupancy_max for s in stats))
+    return out, _stream_report(reg, elapsed)

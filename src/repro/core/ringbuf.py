@@ -50,10 +50,12 @@ the slots hold data already resident where the kernel can read it.
 from __future__ import annotations
 
 import dataclasses
-import math
 import threading
 import time
 from typing import Any, Callable, Iterator
+
+from repro.obs import metrics as _obs_metrics
+from repro.obs import trace as _obs_trace
 
 __all__ = [
     "RingBuffer",
@@ -86,6 +88,7 @@ class RingStats:
     dwell_s: float = 0.0     # total put->get residency of delivered items
     occupancy_sum: int = 0   # depth sampled just after each put ...
     occupancy_max: int = 0   # ... and its running maximum
+    last_dwell_s: float = 0.0  # dwell of the most recently delivered item
     #: per-item dwell times, newest MAX_DWELL_SAMPLES kept (round-robin)
     dwell_samples: list[float] = dataclasses.field(default_factory=list)
 
@@ -101,8 +104,11 @@ class RingStats:
     def dwell_percentile_s(self, q: float) -> float:
         """Nearest-rank percentile of the retained dwell samples.
 
-        ``q`` in [0, 100]; 0.0 with no samples yet. Dependency-free (this
-        module deliberately imports neither numpy nor JAX), which is why
+        ``q`` in [0, 100] (``ValueError`` otherwise); well-defined on
+        every buffer state — 0.0 with no samples yet, the sample itself
+        for a single-sample buffer, never NaN (non-finite samples are
+        filtered) and never IndexError. Dependency-free (this module
+        deliberately imports neither numpy nor JAX), which is why
         nearest-rank, not interpolation — ample for the p50/p95/p99
         telemetry columns.
         """
@@ -110,12 +116,13 @@ class RingStats:
 
 
 def nearest_rank_s(samples: list[float], q: float) -> float:
-    """Nearest-rank percentile over raw (unsorted) seconds samples."""
-    if not samples:
-        return 0.0
-    ordered = sorted(samples)
-    rank = min(len(ordered), max(1, math.ceil(q / 100.0 * len(ordered))))
-    return ordered[rank - 1]
+    """Nearest-rank percentile over raw (unsorted) seconds samples.
+
+    Thin alias of :func:`repro.obs.metrics.nearest_rank` (kept for the
+    many existing call sites in the serve/banks layers): validates ``q``,
+    drops non-finite samples, returns 0.0 on empty input.
+    """
+    return _obs_metrics.nearest_rank(samples, q)
 
 
 class RingBuffer:
@@ -131,6 +138,7 @@ class RingBuffer:
         *,
         policy: str = "block",
         notify_hook: Callable[[], None] | None = None,
+        name: str = "",
     ):
         if num_slots < 1:
             raise ValueError(f"num_slots must be >= 1, got {num_slots}")
@@ -144,6 +152,7 @@ class RingBuffer:
         self._closed = False
         self._cond = threading.Condition()
         self._notify_hook = notify_hook
+        self.name = name  # trace attribution: which ring blocked, not just that one did
         self.stats = RingStats()
 
     # -- introspection ------------------------------------------------------
@@ -190,25 +199,26 @@ class RingBuffer:
                 self._head += 1
                 self.stats.drops += 1
             if self._tail - self._head == n:  # only time actual blocking:
-                # an always-on timer would smear epsilon over every call and
-                # make "did backpressure engage?" (put_wait_s > 0) vacuous
-                t0 = time.perf_counter()
-                deadline = None if timeout is None else t0 + timeout
-                while not self._closed and self._tail - self._head == n:
-                    # single deadline across wakeups (notify_all means a
-                    # losing waiter would otherwise re-arm a fresh timeout
-                    # forever), and time out only with the ring still full
-                    # at the loop top — a slot freed concurrently with the
-                    # deadline must win, as in queue.Queue
-                    left = None if deadline is None else deadline - time.perf_counter()
-                    if left is not None and left <= 0:
-                        self.stats.put_wait_s += time.perf_counter() - t0
-                        raise TimeoutError(
-                            f"put timed out after {timeout}s (ring full, "
-                            f"backpressure held for the whole wait)"
-                        )
-                    self._cond.wait(left)
-                self.stats.put_wait_s += time.perf_counter() - t0
+                # an always-on timer/span would smear epsilon over every call
+                # and make "did backpressure engage?" (put_wait_s > 0) vacuous
+                with _obs_trace.span("ring.put_wait", "ring", ring=self.name):
+                    t0 = time.perf_counter()
+                    deadline = None if timeout is None else t0 + timeout
+                    while not self._closed and self._tail - self._head == n:
+                        # single deadline across wakeups (notify_all means a
+                        # losing waiter would otherwise re-arm a fresh timeout
+                        # forever), and time out only with the ring still full
+                        # at the loop top — a slot freed concurrently with the
+                        # deadline must win, as in queue.Queue
+                        left = None if deadline is None else deadline - time.perf_counter()
+                        if left is not None and left <= 0:
+                            self.stats.put_wait_s += time.perf_counter() - t0
+                            raise TimeoutError(
+                                f"put timed out after {timeout}s (ring full, "
+                                f"backpressure held for the whole wait)"
+                            )
+                        self._cond.wait(left)
+                    self.stats.put_wait_s += time.perf_counter() - t0
             if self._closed:
                 raise RingClosed("put on closed ring")
             slot = self._tail % n
@@ -235,17 +245,18 @@ class RingBuffer:
         n = len(self._slots)
         with self._cond:
             if not self._closed and self._tail == self._head:
-                t0 = time.perf_counter()
-                deadline = None if timeout is None else t0 + timeout
-                while not self._closed and self._tail == self._head:
-                    left = None if deadline is None else deadline - time.perf_counter()
-                    if left is not None and left <= 0:
-                        self.stats.get_wait_s += time.perf_counter() - t0
-                        raise TimeoutError(
-                            f"get timed out after {timeout}s (ring empty)"
-                        )
-                    self._cond.wait(left)
-                self.stats.get_wait_s += time.perf_counter() - t0
+                with _obs_trace.span("ring.get_wait", "ring", ring=self.name):
+                    t0 = time.perf_counter()
+                    deadline = None if timeout is None else t0 + timeout
+                    while not self._closed and self._tail == self._head:
+                        left = None if deadline is None else deadline - time.perf_counter()
+                        if left is not None and left <= 0:
+                            self.stats.get_wait_s += time.perf_counter() - t0
+                            raise TimeoutError(
+                                f"get timed out after {timeout}s (ring empty)"
+                            )
+                        self._cond.wait(left)
+                    self.stats.get_wait_s += time.perf_counter() - t0
             if self._tail == self._head:  # closed and drained
                 raise RingClosed("get on closed, drained ring")
             slot = self._head % n
@@ -253,6 +264,7 @@ class RingBuffer:
             self._slots[slot] = None  # drop the reference: slot is free DRAM
             dwell = time.perf_counter() - self._t_put[slot]
             self.stats.dwell_s += dwell
+            self.stats.last_dwell_s = dwell
             if len(self.stats.dwell_samples) < MAX_DWELL_SAMPLES:
                 self.stats.dwell_samples.append(dwell)
             else:  # overwrite oldest: gets counts delivered items so far

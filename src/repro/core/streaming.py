@@ -43,6 +43,7 @@ the ring-buffer contract.
 from __future__ import annotations
 
 import dataclasses
+import math
 import threading
 import time
 from typing import Callable, Iterator
@@ -51,6 +52,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core.denoise import DenoiseConfig, StreamingDenoiser
 from repro.core.ringbuf import RingBuffer, RingClosed
 
@@ -145,6 +147,57 @@ class StreamReport:
         )
 
 
+def _stream_report(
+    reg: obs.MetricsRegistry, elapsed_s: float, *, buffering_s: float = 0.0
+) -> StreamReport:
+    """Derive a :class:`StreamReport` from a metrics snapshot.
+
+    The executors accumulate *only* into their run-local
+    ``MetricsRegistry`` (counters under ``stream.*`` plus the
+    ``stream.latency_s`` histogram); every report column is read back
+    here, so the CSV row and a ``registry.snapshot()`` can never
+    disagree — there is no second hand-maintained accounting path.
+    """
+    v = reg.value
+    stall_s = v("stream.stall_s")
+    deliver_wait_s = v("stream.deliver_wait_s")
+    return StreamReport(
+        elapsed_s=elapsed_s,
+        buffering_s=buffering_s,
+        # compute = elapsed minus time blocked on EITHER ring, else a
+        # consumer-bottlenecked run masquerades as denoise-bound
+        compute_s=elapsed_s - stall_s - deliver_wait_s,
+        frames=int(v("stream.frames")),
+        bytes_in=int(v("stream.bytes_in")),
+        transfer_s=v("stream.transfer_s"),
+        stall_s=stall_s,
+        num_slots=int(v("stream.num_slots")),
+        produce_wait_s=v("stream.produce_wait_s"),
+        consume_wait_s=v("stream.consume_wait_s"),
+        consume_s=v("stream.consume_s"),
+        deliver_wait_s=deliver_wait_s,
+        drops=int(v("stream.drops")),
+        ring_occupancy_mean=v("stream.ring_occupancy_mean"),
+        ring_occupancy_max=int(v("stream.ring_occupancy_max")),
+        latency_p50_ms=reg.percentile("stream.latency_s", 50) * 1e3,
+        latency_p95_ms=reg.percentile("stream.latency_s", 95) * 1e3,
+        latency_p99_ms=reg.percentile("stream.latency_s", 99) * 1e3,
+    )
+
+
+def _ingest_ring_stats(reg: obs.MetricsRegistry, stage_ring, out_ring) -> None:
+    """Fold end-of-run ring counters into the run registry (the rings
+    accumulate their own stats internally; this is the one bridge)."""
+    reg.counter("stream.stall_s").inc(stage_ring.stats.get_wait_s)
+    reg.counter("stream.produce_wait_s").inc(stage_ring.stats.put_wait_s)
+    reg.counter("stream.drops").inc(stage_ring.stats.drops)
+    reg.gauge("stream.ring_occupancy_mean").set(stage_ring.stats.occupancy_mean)
+    reg.gauge("stream.ring_occupancy_max").set(stage_ring.stats.occupancy_max)
+    if out_ring is not None:
+        reg.counter("stream.deliver_wait_s").inc(out_ring.stats.put_wait_s)
+        reg.counter("stream.consume_wait_s").inc(out_ring.stats.get_wait_s)
+
+
 def rate_limited(
     source: Iterator[np.ndarray], interval_us: float, frames_per_chunk: int
 ) -> Iterator[np.ndarray]:
@@ -205,6 +258,7 @@ def run_pipelined(
     policy: str | None = None,
     consumer: Callable[[int, jnp.ndarray], None] | None = None,
     consumer_slots: int | None = None,
+    metrics: obs.MetricsRegistry | None = None,
 ) -> tuple[jnp.ndarray, StreamReport]:
     """Three-stage ring-pipelined executor (paper §5 generalized).
 
@@ -243,6 +297,13 @@ def run_pipelined(
     Output is bit-identical for any ``num_slots`` and any consumer under
     the ``block`` policy — depth and consumers change only wall-clock
     accounting, never numerics.
+
+    Telemetry: the run accumulates into a :class:`repro.obs.MetricsRegistry`
+    (``metrics=`` to inject one — e.g. the serve layer's shared registry —
+    else a fresh run-local registry) and the returned ``StreamReport`` is
+    *derived from its snapshot*; stage boundaries additionally emit
+    ``stream.stage``/``stream.ingest``/``stream.consume``/``stream.finalize``
+    spans on the process tracer (``repro.obs.span``, no-op unless enabled).
     """
     if num_slots is None:
         num_slots = config.num_slots
@@ -259,17 +320,27 @@ def run_pipelined(
         source = rate_limited(source, interval_us, config.frames_per_group)
     source = iter(source)
 
-    stage_ring = RingBuffer(num_slots, policy=policy)
+    reg = metrics if metrics is not None else obs.MetricsRegistry()
+    c_frames = reg.counter("stream.frames")
+    c_bytes = reg.counter("stream.bytes_in")
+    c_transfer = reg.counter("stream.transfer_s")
+    c_consume = reg.counter("stream.consume_s")
+    h_latency = reg.histogram("stream.latency_s")
+    reg.gauge("stream.num_slots").set(num_slots)
+
+    stage_ring = RingBuffer(num_slots, policy=policy, name="stage")
     out_ring = (
-        RingBuffer(consumer_slots or num_slots) if consumer is not None else None
+        RingBuffer(consumer_slots or num_slots, name="deliver")
+        if consumer is not None
+        else None
     )
     errors: list[BaseException] = []
-    consume_busy = [0.0]
 
     def _produce() -> None:
         try:
             while True:
-                item = _stage_next(source)
+                with obs.span("stream.stage", "stream"):
+                    item = _stage_next(source)
                 if item is _DONE:
                     break
                 stage_ring.put(item)
@@ -284,16 +355,15 @@ def run_pipelined(
         try:
             for step, partial in out_ring:
                 t0 = time.perf_counter()
-                consumer(step, partial)
-                consume_busy[0] += time.perf_counter() - t0
+                with obs.span("stream.consume", "stream", step=step):
+                    consumer(step, partial)
+                c_consume.inc(time.perf_counter() - t0)
         except BaseException as e:
             errors.append(e)
             out_ring.close()  # unblock the compute stage's put
 
     t0 = time.perf_counter()
     state = den.init()
-    frames = 0  # counted from chunk shapes: (N, H, W) or (B, N, H, W)
-    transfer_s = 0.0
     step = 0
 
     producer = threading.Thread(target=_produce, name="prism-stage", daemon=True)
@@ -311,9 +381,14 @@ def run_pipelined(
                 dev, dt = stage_ring.get()
             except RingClosed:
                 break
-            transfer_s += dt
-            state = den.ingest(state, dev, step=step)
-            frames += int(np.prod(dev.shape[:-2]))
+            c_transfer.inc(dt)
+            # stage-queue latency: how long this staged chunk waited in the
+            # ring before ingest picked it up (compute dispatch is async, so
+            # pickup — not completion — is the observable per-group latency)
+            h_latency.observe(stage_ring.stats.last_dwell_s)
+            with obs.span("stream.ingest", "stream", step=step):
+                state = den.ingest(state, dev, step=step)
+            c_frames.inc(math.prod(dev.shape[:-2]))
             if out_ring is not None:
                 try:
                     out_ring.put((step, den.partial(state, step)))
@@ -332,45 +407,23 @@ def run_pipelined(
     if errors:
         raise errors[0]
 
-    if policy == "drop_oldest" and step:
-        # average over the groups that actually survived: finalize over the
-        # configured G would bias the output low by drops/G. This is also
-        # what keeps the consumer's last partial identical to the final
-        # output under loss.
-        out = den.finalize(state, steps=step)
-    else:
-        out = den.finalize(state)
-    jax.block_until_ready(out)
+    with obs.span("stream.finalize", "stream", steps=step):
+        if policy == "drop_oldest" and step:
+            # average over the groups that actually survived: finalize over
+            # the configured G would bias the output low by drops/G. This is
+            # also what keeps the consumer's last partial identical to the
+            # final output under loss.
+            out = den.finalize(state, steps=step)
+        else:
+            out = den.finalize(state)
+        jax.block_until_ready(out)
     elapsed = time.perf_counter() - t0
-    stall_s = stage_ring.stats.get_wait_s
-    # `is not None`, not truthiness: RingBuffer defines __len__, so a
-    # drained ring is falsy and would silently zero these fields
-    deliver_wait_s = out_ring.stats.put_wait_s if out_ring is not None else 0.0
-    return out, StreamReport(
-        elapsed_s=elapsed,
-        buffering_s=0.0,  # inline: no staging phase at all
-        # compute = elapsed minus time blocked on EITHER ring, else a
-        # consumer-bottlenecked run masquerades as denoise-bound
-        compute_s=elapsed - stall_s - deliver_wait_s,
-        frames=frames,
-        bytes_in=frames * config.bytes_per_frame,
-        transfer_s=transfer_s,
-        stall_s=stall_s,
-        num_slots=num_slots,
-        produce_wait_s=stage_ring.stats.put_wait_s,
-        consume_wait_s=out_ring.stats.get_wait_s if out_ring is not None else 0.0,
-        consume_s=consume_busy[0],
-        deliver_wait_s=deliver_wait_s,
-        drops=stage_ring.stats.drops,
-        ring_occupancy_mean=stage_ring.stats.occupancy_mean,
-        ring_occupancy_max=stage_ring.stats.occupancy_max,
-        # stage-queue latency: how long each staged chunk waited in the
-        # ring before ingest picked it up (compute dispatch is async here,
-        # so pickup — not completion — is the observable per-group latency)
-        latency_p50_ms=stage_ring.stats.dwell_percentile_s(50) * 1e3,
-        latency_p95_ms=stage_ring.stats.dwell_percentile_s(95) * 1e3,
-        latency_p99_ms=stage_ring.stats.dwell_percentile_s(99) * 1e3,
-    )
+    c_bytes.inc(int(c_frames.value) * config.bytes_per_frame)
+    # `out_ring is not None` inside the helper, not truthiness: RingBuffer
+    # defines __len__, so a drained ring is falsy and would silently zero
+    # the deliver/consume fields
+    _ingest_ring_stats(reg, stage_ring, out_ring)
+    return out, _stream_report(reg, elapsed)
 
 
 def run_inline(
@@ -379,6 +432,7 @@ def run_inline(
     *,
     interval_us: float | None = None,
     prefetch: bool = True,
+    metrics: obs.MetricsRegistry | None = None,
 ) -> tuple[jnp.ndarray, StreamReport]:
     """Denoise inline with acquisition (the paper's FPGA workflow).
 
@@ -387,6 +441,8 @@ def run_inline(
     chunk k computes, the paper's ping-pong double-buffer. ``prefetch=
     False`` runs the serial stage-then-compute schedule on one thread.
     Output is bit-identical either way; only wall-clock accounting differs.
+    Like ``run_pipelined``, the report is derived from the run's metrics
+    registry (injectable via ``metrics=``).
     """
     if prefetch:
         return run_pipelined(
@@ -396,6 +452,7 @@ def run_inline(
             num_slots=2,
             policy="block",
             consumer=None,
+            metrics=metrics,
         )
 
     den = StreamingDenoiser(config)
@@ -403,39 +460,37 @@ def run_inline(
         source = rate_limited(source, interval_us, config.frames_per_group)
     source = iter(source)
 
+    reg = metrics if metrics is not None else obs.MetricsRegistry()
+    c_frames = reg.counter("stream.frames")
+    c_transfer = reg.counter("stream.transfer_s")
+    c_stall = reg.counter("stream.stall_s")
+
     t0 = time.perf_counter()
     state = den.init()
-    frames = 0
-    transfer_s = 0.0
-    stall_s = 0.0
     step = 0
     while True:
         t_wait = time.perf_counter()
-        item = _stage_next(source)
+        with obs.span("stream.stage", "stream"):
+            item = _stage_next(source)
         dt = time.perf_counter() - t_wait
-        stall_s += dt
+        c_stall.inc(dt)
         if item is _DONE:
             break
         dev, _ = item
-        transfer_s += dt
+        c_transfer.inc(dt)
         # no per-step block: async dispatch is the pre-PR behaviour the
         # sync mode preserves — only the staging runs on-thread here
-        state = den.ingest(state, dev, step=step)
+        with obs.span("stream.ingest", "stream", step=step):
+            state = den.ingest(state, dev, step=step)
         step += 1
-        frames += int(np.prod(dev.shape[:-2]))
+        c_frames.inc(math.prod(dev.shape[:-2]))
 
-    out = den.finalize(state)
-    jax.block_until_ready(out)
+    with obs.span("stream.finalize", "stream", steps=step):
+        out = den.finalize(state)
+        jax.block_until_ready(out)
     elapsed = time.perf_counter() - t0
-    return out, StreamReport(
-        elapsed_s=elapsed,
-        buffering_s=0.0,
-        compute_s=elapsed - stall_s,
-        frames=frames,
-        bytes_in=frames * config.bytes_per_frame,
-        transfer_s=transfer_s,
-        stall_s=stall_s,
-    )
+    reg.counter("stream.bytes_in").inc(int(c_frames.value) * config.bytes_per_frame)
+    return out, _stream_report(reg, elapsed)
 
 
 def run_buffered(
@@ -458,12 +513,11 @@ def run_buffered(
     jax.block_until_ready(out)
     t2 = time.perf_counter()
     frames = buffer.shape[0] * buffer.shape[1]
-    return out, StreamReport(
-        elapsed_s=t2 - t0,
-        buffering_s=t1 - t0,
-        compute_s=t2 - t1,
-        frames=frames,
-        bytes_in=frames * config.bytes_per_frame,
-        transfer_s=t1 - t0,
-        stall_s=t1 - t0,
-    )
+    reg = obs.MetricsRegistry()
+    reg.counter("stream.frames").inc(frames)
+    reg.counter("stream.bytes_in").inc(frames * config.bytes_per_frame)
+    reg.counter("stream.transfer_s").inc(t1 - t0)
+    reg.counter("stream.stall_s").inc(t1 - t0)
+    # elapsed - stall collapses to the processing phase t2-t1 here:
+    # buffering and compute are disjoint by design in this schedule
+    return out, _stream_report(reg, t2 - t0, buffering_s=t1 - t0)

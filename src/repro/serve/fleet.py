@@ -58,6 +58,7 @@ from __future__ import annotations
 
 import threading
 
+from repro import obs
 from repro.runtime.fault_tolerance import HeartbeatMonitor, StragglerDetector
 from repro.serve.faults import Clock, FaultPlan
 from repro.serve.recovery import SessionCheckpointer
@@ -195,12 +196,23 @@ class FleetScheduler(SessionScheduler):
                 )
                 act.checkpoints += 1
                 act.replay.clear()
+                obs.instant(
+                    "fleet.checkpoint", "fleet", session=act.name,
+                    executor=ex.name, steps=act.steps,
+                )
+        recovered = False
         with self._ft_lock:
             if act.name in self._awaiting_recovery:
                 self._awaiting_recovery.discard(act.name)
                 self.timeline.append(
                     ("session-recovered", act.name, self.clock.now())
                 )
+                recovered = True
+        if recovered:
+            obs.instant(
+                "fleet.recovered", "fleet", session=act.name, executor=ex.name,
+                steps=act.steps,
+            )
 
     def _on_dead(self, ex, acts, err) -> list:
         """Crash path: the dying executor offers its sessions from its own
@@ -214,6 +226,10 @@ class FleetScheduler(SessionScheduler):
             self._beat_flags.pop(ex.name, None)
             self.events.append(f"dead@{ex.name}:{type(err).__name__}")
             self.timeline.append(("executor-dead", ex.name, t))
+        obs.instant(
+            "fleet.executor_dead", "fleet", executor=ex.name,
+            error=type(err).__name__, sessions=len(acts),
+        )
         return [act for act in acts if self._recover(act, ex)]
 
     def _on_migrate(self, ex, act) -> None:
@@ -241,6 +257,10 @@ class FleetScheduler(SessionScheduler):
             )
             with self._ft_lock:
                 self.events.append(f"give-up@{act.name}:migration-stranded")
+            obs.instant(
+                "fleet.give_up", "fleet", session=act.name,
+                reason="migration-stranded",
+            )
             act.ring.close()
             act.handle._fail(act.error or err)
             self._session_done(act)
@@ -250,6 +270,10 @@ class FleetScheduler(SessionScheduler):
             self.timeline.append(
                 ("session-migrated", act.name, self.clock.now())
             )
+        obs.instant(
+            "fleet.migrate", "fleet", session=act.name, source=ex.name,
+            target=target.name,
+        )
         act.migrate_target = target.name
         act.migrate_done.set()
 
@@ -273,6 +297,10 @@ class FleetScheduler(SessionScheduler):
                 self.events.append(
                     f"give-up@{act.name}:restarts={act.restarts}"
                 )
+            obs.instant(
+                "fleet.give_up", "fleet", session=act.name,
+                reason=f"restarts={act.restarts}",
+            )
             return False
         if act.resume_state is None and act.steps > 0:
             state, steps, frames = None, 0, 0
@@ -286,11 +314,19 @@ class FleetScheduler(SessionScheduler):
             if steps + len(act.replay) < act.steps:
                 with self._ft_lock:
                     self.events.append(f"give-up@{act.name}:unrecoverable")
+                obs.instant(
+                    "fleet.give_up", "fleet", session=act.name,
+                    reason="unrecoverable",
+                )
                 return False
             act.resume_state = state
             act.pending_replay = list(act.replay)
             act.steps = steps
             act.frames = frames
+            obs.instant(
+                "fleet.restore", "fleet", session=act.name,
+                checkpoint_steps=steps, replay_chunks=len(act.pending_replay),
+            )
         act.slot = None
         act.restarts += 1
         cfg = act.session.config
@@ -363,6 +399,12 @@ class FleetScheduler(SessionScheduler):
         for ex in executors:
             if ex.name in dead or ex.name in slow:
                 reason = "heartbeat" if ex.name in dead else "straggler"
+                obs.instant(
+                    "fleet.heartbeat_miss" if ex.name in dead
+                    else "fleet.straggler",
+                    "fleet",
+                    executor=ex.name,
+                )
                 r, f = self._evict(ex, reason)
                 evicted.append(ex.name)
                 recovered += r
@@ -388,6 +430,10 @@ class FleetScheduler(SessionScheduler):
             self._beat_flags.pop(ex.name, None)
             self.events.append(f"evict@{ex.name}:{reason}")
             self.timeline.append(("executor-dead", ex.name, t))
+        obs.instant(
+            "fleet.evict", "fleet", executor=ex.name, reason=reason,
+            sessions=len(acts),
+        )
         err = RuntimeError(f"executor {ex.name} evicted ({reason})")
         recovered: list[str] = []
         failed: list[str] = []

@@ -74,6 +74,7 @@ from __future__ import annotations
 
 import collections
 import functools
+import math
 import threading
 import time
 from typing import Sequence
@@ -83,14 +84,10 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import obs
 from repro.core.banks import banked_filter_init, banked_filter_step
 from repro.core.denoise import DenoiseConfig
-from repro.core.ringbuf import (
-    MAX_DWELL_SAMPLES,
-    RingBuffer,
-    RingClosed,
-    nearest_rank_s,
-)
+from repro.core.ringbuf import RingBuffer, RingClosed
 from repro.serve.faults import Clock
 from repro.serve.session import (
     AdmissionError,
@@ -118,7 +115,13 @@ def _write_slot(buf, val, slot: int, axis: int = 0):
 class _Active:
     """One submitted session's scheduler-side bookkeeping."""
 
-    def __init__(self, handle: SessionHandle, seq: int, notify_hook):
+    def __init__(
+        self,
+        handle: SessionHandle,
+        seq: int,
+        notify_hook,
+        metrics: obs.MetricsRegistry | None = None,
+    ):
         self.handle = handle
         self.session = handle.session
         self.seq = seq
@@ -126,18 +129,25 @@ class _Active:
             self.session.ring_slots,
             policy=self.session.qos_mode,
             notify_hook=notify_hook,
+            name=self.name,
         )
         self.slot: int | None = None
+        # steps/frames are *operational state*, not telemetry: crash
+        # recovery rewinds them to the checkpointed values (fleet._recover)
+        # and replay re-advances them, so they must stay plain fields —
+        # monotonic counters could not be rewound.
         self.steps = 0           # groups folded so far (this session's phase)
         self.frames = 0
-        self.transfer_s = 0.0
-        self.compute_s = 0.0     # share of batched step time
+        # Append-only accounting lives in the scheduler's MetricsRegistry,
+        # labeled by session; SessionReport columns derive from it (_report).
+        self.metrics = metrics if metrics is not None else obs.MetricsRegistry()
+        self.c_transfer = self.metrics.counter("serve.transfer_s", session=self.name)
+        self.c_compute = self.metrics.counter("serve.compute_s", session=self.name)
+        self.c_misses = self.metrics.counter("serve.deadline_misses", session=self.name)
+        self.c_discarded = self.metrics.counter("serve.discarded", session=self.name)
         # per-group service latency samples (staged -> step done), bounded
-        # like the ring's dwell samples so endless streams stay O(1)
-        self.latencies: list[float] = []
-        self._lat_next = 0
-        self.deadline_misses = 0
-        self.discarded = 0       # staged chunks dropped by leave()
+        # reservoir so endless streams stay O(1)
+        self.h_latency = self.metrics.histogram("serve.latency_s", session=self.name)
         self.error: BaseException | None = None
         # -- fleet bookkeeping (inert under the plain scheduler) ------------
         self.executor = None          # the _SlotExecutor currently hosting us
@@ -190,11 +200,7 @@ class _Active:
             self.ring.close()
 
     def record_latency(self, lat: float) -> None:
-        if len(self.latencies) < MAX_DWELL_SAMPLES:
-            self.latencies.append(lat)
-        else:  # overwrite oldest round-robin
-            self.latencies[self._lat_next % MAX_DWELL_SAMPLES] = lat
-        self._lat_next += 1
+        self.h_latency.observe(lat)
 
     def finished_stream(self) -> bool:
         return self.ring.closed and len(self.ring) == 0
@@ -207,7 +213,7 @@ class _SlotExecutor:
         self, key, config: DenoiseConfig, capacity, mesh, name, on_done,
         coalesce_s: float = 0.005, *, clock: Clock | None = None, faults=None,
         on_step=None, on_session_step=None, on_dead=None, on_migrate=None,
-        on_beat=None,
+        on_beat=None, metrics: obs.MetricsRegistry | None = None,
     ):
         self.key = key
         self.config = config
@@ -224,6 +230,7 @@ class _SlotExecutor:
         self.on_dead = on_dead            # (ex, acts, err) -> acts taken over
         self.on_migrate = on_migrate      # (ex, act) after slot extraction
         self.on_beat = on_beat            # (name, clock.now()) liveness beat
+        self.metrics = metrics if metrics is not None else obs.MetricsRegistry()
         self.filt, self.state = banked_filter_init(config, mesh, banks=capacity)
         self._chunk_buf = None  # persistent staging buffer, filled in place
         self.slots: list[_Active | None] = [None] * capacity
@@ -425,16 +432,29 @@ class _SlotExecutor:
             # checkpoint and the failure — same chunks, same order, same
             # step indices, so the resumed state is bit-identical to the
             # pre-crash one before any new chunk is touched
+            if act.pending_replay:
+                obs.instant(
+                    "serve.replay",
+                    "serve",
+                    session=act.name,
+                    executor=self.name,
+                    chunks=len(act.pending_replay),
+                    from_step=act.steps,
+                )
             while act.pending_replay:
                 chunk = act.pending_replay.pop(0)
                 sub = self.filt.slot_extract(self.state, idx)
                 new = self.filt.step(sub, chunk, step_index=act.steps)
                 self.state = self._insert_slot(self.state, new, idx)
                 act.steps += 1
-                act.frames += int(np.prod(chunk.shape[:-2]))
+                act.frames += math.prod(chunk.shape[:-2])
             if act.t_joined is None:
                 act.t_joined = time.perf_counter()
             act.handle.status = "active"
+            obs.instant(
+                "serve.join", "serve", session=act.name, executor=self.name,
+                slot=idx,
+            )
 
     def _insert_slot(self, state, slot_state, index: int):
         """Donating variant of ``StreamingFilter.slot_insert``: the
@@ -492,7 +512,7 @@ class _SlotExecutor:
                         act.ring.get(timeout=0)
                     except (RingClosed, TimeoutError):
                         break
-                    act.discarded += 1
+                    act.c_discarded.inc()
             if not act.finished_stream():
                 continue
             sub = self.filt.slot_extract(self.state, idx)
@@ -506,6 +526,10 @@ class _SlotExecutor:
             report = self._report(act)
             with self.cond:
                 self.slots[idx] = None
+            obs.instant(
+                "serve.retire", "serve", session=act.name, executor=self.name,
+                groups=act.steps, leave=leaving,
+            )
             act.handle._finish(out, report)
             self.on_done(act)
 
@@ -535,14 +559,19 @@ class _SlotExecutor:
         if len(ready) == len(active) or self.coalesce_s <= 0:
             return ready
         deadline = time.perf_counter() + self.coalesce_s
-        with self.cond:
-            while True:
-                left = deadline - time.perf_counter()
-                active = self._steppable()  # a stream may end mid-window
-                ready = self._ready(active)
-                if len(ready) == len(active) or left <= 0 or self._shutdown:
-                    return ready
-                self.cond.wait(left)
+        with obs.span(
+            "serve.coalesce", "serve", executor=self.name, ready=len(ready),
+            active=len(active),
+        ) as sp:
+            with self.cond:
+                while True:
+                    left = deadline - time.perf_counter()
+                    active = self._steppable()  # a stream may end mid-window
+                    ready = self._ready(active)
+                    if len(ready) == len(active) or left <= 0 or self._shutdown:
+                        sp.set(ready_after=len(ready))
+                        return ready
+                    self.cond.wait(left)
 
     def _step_ready(self) -> None:
         active = self._steppable()
@@ -638,69 +667,83 @@ class _SlotExecutor:
         ):
             raise RuntimeError("phase-mixed cohort for a phase-sensitive filter")
         t0 = time.perf_counter()
-        if len(group) == 1 and not gang:
-            # lone slot: the SINGLE-BANK step path — a 1-session scheduler
-            # run makes exactly the calls run_pipelined makes, which is
-            # what keeps it bit-identical for every filter
-            i = idxs[0]
-            sub = self.filt.slot_extract(self.state, i)
-            new = self.filt.step(sub, items[0][0], step_index=phase)
-            self.state = self._insert_slot(self.state, new, i)
-        elif gang:
-            # full-capacity sharded step; vacant slots ride along on a
-            # dummy chunk (their junk state is re-initialized at join)
-            by_slot = dict(zip(idxs, items))
-            dummy = items[0][0]
-            stacked = jnp.stack(
-                [by_slot[i][0] if i in by_slot else dummy for i in range(self.capacity)]
-            )
-            if self.mesh is not None:
-                stacked = jax.device_put(
-                    stacked, NamedSharding(self.mesh, P("bank", None, None, None))
+        with obs.span(
+            "serve.cohort", "serve", executor=self.name, size=len(group),
+            gang=gang, phase=phase,
+        ):
+            if len(group) == 1 and not gang:
+                # lone slot: the SINGLE-BANK step path — a 1-session
+                # scheduler run makes exactly the calls run_pipelined
+                # makes, which is what keeps it bit-identical for every
+                # filter
+                i = idxs[0]
+                sub = self.filt.slot_extract(self.state, i)
+                new = self.filt.step(sub, items[0][0], step_index=phase)
+                self.state = self._insert_slot(self.state, new, i)
+            elif gang:
+                # full-capacity sharded step; vacant slots ride along on a
+                # dummy chunk (their junk state is re-initialized at join)
+                by_slot = dict(zip(idxs, items))
+                dummy = items[0][0]
+                stacked = jnp.stack(
+                    [
+                        by_slot[i][0] if i in by_slot else dummy
+                        for i in range(self.capacity)
+                    ]
                 )
-            self.state = banked_filter_step(
-                self.state,
-                stacked,
-                self.mesh,
-                config=self.config,
-                step_index=phase,
-                filt=self.filt,
-            )
-        elif len(group) == self.capacity:
-            # whole slot array ready: fill the persistent staging buffer
-            # with donated slice writes and step the resident state in
-            # place — zero whole-array copies on the full-cohort fast path
-            self.state = banked_filter_step(
-                self.state,
-                self._stage_chunks(idxs, items),
-                None,
-                config=self.config,
-                step_index=phase,
-                filt=self.filt,
-            )
-        else:
-            sub = self.filt.slot_gather(self.state, idxs)
-            stacked = jnp.stack([it[0] for it in items])
-            new = self.filt.step(sub, stacked, step_index=phase)
-            self.state = self.filt.slot_scatter(self.state, new, idxs)
-        # block per cohort: per-group service latency must be the time the
-        # result actually exists, not async-dispatch time
-        jax.block_until_ready(self.state)
+                if self.mesh is not None:
+                    stacked = jax.device_put(
+                        stacked,
+                        NamedSharding(self.mesh, P("bank", None, None, None)),
+                    )
+                self.state = banked_filter_step(
+                    self.state,
+                    stacked,
+                    self.mesh,
+                    config=self.config,
+                    step_index=phase,
+                    filt=self.filt,
+                )
+            elif len(group) == self.capacity:
+                # whole slot array ready: fill the persistent staging
+                # buffer with donated slice writes and step the resident
+                # state in place — zero whole-array copies on the
+                # full-cohort fast path
+                self.state = banked_filter_step(
+                    self.state,
+                    self._stage_chunks(idxs, items),
+                    None,
+                    config=self.config,
+                    step_index=phase,
+                    filt=self.filt,
+                )
+            else:
+                sub = self.filt.slot_gather(self.state, idxs)
+                stacked = jnp.stack([it[0] for it in items])
+                new = self.filt.step(sub, stacked, step_index=phase)
+                self.state = self.filt.slot_scatter(self.state, new, idxs)
+            # block per cohort: per-group service latency must be the time
+            # the result actually exists, not async-dispatch time
+            jax.block_until_ready(self.state)
         t_done = time.perf_counter()
         share = (t_done - t0) / len(group)
         self.cohort_steps += 1
         for (i, act), (dev, dt, dwell) in zip(group, items):
             act.steps += 1
-            act.frames += int(np.prod(dev.shape[:-2]))
-            act.transfer_s += dt
-            act.compute_s += share
+            act.frames += math.prod(dev.shape[:-2])
+            act.c_transfer.inc(dt)
+            act.c_compute.inc(share)
             # service latency: in-ring wait (from actual insertion) plus
             # this cohort's fetch-to-step-done span
             lat = dwell + (t_done - t_fetch)
             act.record_latency(lat)
             d = act.session.deadline_ms
             if d is not None and lat * 1e3 > d:
-                act.deadline_misses += 1
+                act.c_misses.inc()
+                obs.instant(
+                    "serve.deadline_miss", "serve", session=act.name,
+                    executor=self.name, lat_ms=lat * 1e3, deadline_ms=d,
+                )
             if act.session.consumer is not None:
                 try:
                     partial = self.filt.partial(
@@ -724,30 +767,40 @@ class _SlotExecutor:
             )
 
     def _report(self, act: _Active) -> SessionReport:
+        """Build the session's report from its metric instruments.
+
+        Everything time/latency-shaped reads back out of the session's
+        ``serve.*`` instruments in the scheduler registry (the same values
+        ``SessionScheduler.metrics.snapshot()`` exposes) — the report is a
+        *view* over the metrics, not a second accounting path. Only
+        operational state (steps/frames, which crash recovery rewinds) and
+        identity fields come from the ``_Active`` itself.
+        """
         now = time.perf_counter()
         s = act.ring.stats
         c = act.session.config
-        lat = act.latencies
+        reg = act.metrics
+        sn = dict(session=act.name)
         return SessionReport(
             elapsed_s=now - (act.t_joined or now),
             buffering_s=0.0,
-            compute_s=act.compute_s,
+            compute_s=reg.value("serve.compute_s", **sn),
             frames=act.frames,
             bytes_in=act.frames * c.bytes_per_frame,
-            transfer_s=act.transfer_s,
+            transfer_s=reg.value("serve.transfer_s", **sn),
             stall_s=s.get_wait_s,
             num_slots=act.session.ring_slots,
             produce_wait_s=s.put_wait_s,
-            drops=s.drops + act.discarded,
+            drops=s.drops + int(reg.value("serve.discarded", **sn)),
             ring_occupancy_mean=s.occupancy_mean,
             ring_occupancy_max=s.occupancy_max,
-            latency_p50_ms=nearest_rank_s(lat, 50) * 1e3,
-            latency_p95_ms=nearest_rank_s(lat, 95) * 1e3,
-            latency_p99_ms=nearest_rank_s(lat, 99) * 1e3,
+            latency_p50_ms=reg.percentile("serve.latency_s", 50, **sn) * 1e3,
+            latency_p95_ms=reg.percentile("serve.latency_s", 95, **sn) * 1e3,
+            latency_p99_ms=reg.percentile("serve.latency_s", 99, **sn) * 1e3,
             session=act.name,
             mode=act.session.qos_mode,
             deadline_ms=act.session.deadline_ms or 0.0,
-            deadline_misses=act.deadline_misses,
+            deadline_misses=int(reg.value("serve.deadline_misses", **sn)),
             queue_wait_s=(act.t_joined - act.t_submit) if act.t_joined else 0.0,
             groups=act.steps,
             migrations=act.migrations,
@@ -814,6 +867,10 @@ class SessionScheduler:
         if self.max_sessions < 1:
             raise ValueError(f"max_sessions must be >= 1, got {self.max_sessions}")
         self.mesh = mesh
+        #: service-wide metrics registry: per-session ``serve.*`` series
+        #: (labeled ``session=``) land here, and ``SessionReport``s are
+        #: derived from it. Scrape via ``self.metrics.prometheus_text()``.
+        self.metrics = obs.MetricsRegistry()
         self._executors: list[_SlotExecutor] = []
         self._lock = threading.Condition()
         self._inflight = 0
@@ -841,7 +898,9 @@ class SessionScheduler:
             # pending counts that a concurrent submit cannot invalidate
             # (the executor thread only ever *drains* pending, which moves
             # admission in the permissive direction)
-            act = _Active(handle, self._seq, notify_hook=ex.notify)
+            act = _Active(
+                handle, self._seq, notify_hook=ex.notify, metrics=self.metrics
+            )
             handle._leave_hook = ex.notify
             # an executor can fail between placement and enqueue; a dead
             # one refuses the session, so re-place until one accepts (a
@@ -853,6 +912,7 @@ class SessionScheduler:
             self._seq += 1
             self._inflight += 1
             self._on_submitted(handle, act, ex)
+        obs.instant("serve.submit", "serve", session=act.name, executor=ex.name)
         act.producer.start()
         return handle
 
@@ -918,6 +978,7 @@ class SessionScheduler:
             name=f"ex{self._ex_seq}",
             on_done=self._session_done,
             coalesce_s=self.coalesce_ms * 1e-3,
+            metrics=self.metrics,
             **self._executor_hooks(),
         )
         self._ex_seq += 1

@@ -37,6 +37,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.kernels import ops, quant
 from repro.tune import budget
 from repro.tune.cache import PlanCache
@@ -266,6 +267,13 @@ def tune_exec_knobs(config) -> dict:
     pinned to ``tile_plan='heuristic'``, which also breaks the resolve ->
     tune -> executor -> resolve recursion).
     """
+    with obs.span(
+        "tune.exec_knobs", "tune", filter=getattr(config, "filter_name", "?")
+    ):
+        return _tune_exec_knobs(config)
+
+
+def _tune_exec_knobs(config) -> dict:
     from repro.core.streaming import run_pipelined  # lazy: avoids cycle
 
     base = dataclasses.replace(config, tile_plan="heuristic", num_banks=1)
@@ -372,6 +380,15 @@ def _exec_valid(entry: dict) -> dict:
 
 def tune_plan(config, cache: PlanCache | None = None) -> Plan:
     """Tune-or-cache-hit: the ``tile_plan='auto'`` resolution path."""
+    with obs.span(
+        "tune.search", "tune", filter=getattr(config, "filter_name", "?")
+    ) as sp:
+        plan = _tune_plan(config, cache)
+        sp.set(source=plan.source)
+        return plan
+
+
+def _tune_plan(config, cache: PlanCache | None = None) -> Plan:
     cache = cache or PlanCache()
     backend = _resolved_backend(config)
     n = int(config.frames_per_group)
@@ -406,14 +423,18 @@ def tune_plan(config, cache: PlanCache | None = None) -> Plan:
                 # Mosaic rejects on real TPU) is dropped, never fatal —
                 # only the heuristic itself failing propagates.
                 timed = {geom: float("inf") for geom in cands}
-                for _ in range(2):
-                    for geom in list(timed):
-                        try:
-                            timed[geom] = min(timed[geom], timer(*geom))
-                        except Exception:
-                            if geom == heur:
-                                raise
-                            del timed[geom]
+                with obs.span(
+                    "tune.measure", "tune", family=family,
+                    candidates=len(cands),
+                ):
+                    for _ in range(2):
+                        for geom in list(timed):
+                            try:
+                                timed[geom] = min(timed[geom], timer(*geom))
+                            except Exception:
+                                if geom == heur:
+                                    raise
+                                del timed[geom]
                 best = min(timed, key=timed.get)
                 # conservative selection: replacing the heuristic needs a
                 # real margin, or measurement noise gets cached as a "win"

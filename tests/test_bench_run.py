@@ -50,6 +50,7 @@ def test_select_substring_matches():
         "table12-autotune",
         "table13-bandwidth",
         "table14-fleet",
+        "table15-observability",
     ]
     assert bench_run.select(None) == bench_run.MODULES
 

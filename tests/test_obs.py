@@ -1,0 +1,391 @@
+"""Unit tests for ``repro.obs``: metrics registry and span tracer."""
+
+import json
+import threading
+
+import pytest
+
+from repro import obs
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
+
+
+class TickClock:
+    """Deterministic injectable clock (duck-typed like serve.FakeClock)."""
+
+    def __init__(self, start=0.0):
+        self.t = start
+
+    def now(self):
+        return self.t
+
+    def advance(self, dt):
+        self.t += dt
+
+
+# ---------------------------------------------------------------------------
+# nearest_rank
+# ---------------------------------------------------------------------------
+
+
+def test_nearest_rank_empty_is_zero():
+    assert obs.nearest_rank([], 50.0) == 0.0
+    assert obs.nearest_rank([], 0.0) == 0.0
+    assert obs.nearest_rank([], 100.0) == 0.0
+
+
+def test_nearest_rank_single_sample_is_every_percentile():
+    for q in (0.0, 1.0, 50.0, 99.0, 100.0):
+        assert obs.nearest_rank([7.5], q) == 7.5
+
+
+def test_nearest_rank_rejects_out_of_range_q():
+    with pytest.raises(ValueError, match=r"\[0, 100\]"):
+        obs.nearest_rank([1.0], -0.1)
+    with pytest.raises(ValueError, match=r"\[0, 100\]"):
+        obs.nearest_rank([1.0], 100.5)
+
+
+def test_nearest_rank_filters_non_finite():
+    assert obs.nearest_rank([float("nan"), 3.0, float("inf")], 100.0) == 3.0
+    assert obs.nearest_rank([float("nan")], 50.0) == 0.0
+
+
+def test_nearest_rank_known_values():
+    samples = [10.0, 20.0, 30.0, 40.0]
+    assert obs.nearest_rank(samples, 0.0) == 10.0
+    assert obs.nearest_rank(samples, 25.0) == 10.0
+    assert obs.nearest_rank(samples, 50.0) == 20.0
+    assert obs.nearest_rank(samples, 75.0) == 30.0
+    assert obs.nearest_rank(samples, 100.0) == 40.0
+
+
+# ---------------------------------------------------------------------------
+# Counter / Gauge / Histogram / registry
+# ---------------------------------------------------------------------------
+
+
+def test_counter_basic_and_negative_rejected():
+    reg = obs.MetricsRegistry()
+    c = reg.counter("frames")
+    c.inc()
+    c.inc(2.5)
+    assert c.value == 3.5
+    with pytest.raises(ValueError, match="only go up"):
+        c.inc(-1.0)
+
+
+def test_counter_per_thread_cells_merge():
+    reg = obs.MetricsRegistry()
+    c = reg.counter("work")
+
+    def worker(n):
+        for _ in range(n):
+            c.inc()
+
+    threads = [threading.Thread(target=worker, args=(100,)) for _ in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=30)
+    c.inc(1.0)  # main thread's own cell
+    assert c.value == 401.0
+
+
+def test_gauge_set_and_add():
+    reg = obs.MetricsRegistry()
+    g = reg.gauge("occupancy")
+    assert g.value == 0.0
+    g.set(3.0)
+    g.add(1.5)
+    assert g.value == 4.5
+    g.set(1.0)  # last-write-wins
+    assert g.value == 1.0
+
+
+def test_registry_get_or_create_identity_by_name_and_labels():
+    reg = obs.MetricsRegistry()
+    a = reg.counter("x", session="s0")
+    b = reg.counter("x", session="s0")
+    c = reg.counter("x", session="s1")
+    assert a is b
+    assert a is not c
+    # label order does not matter
+    h1 = reg.histogram("lat", session="s0", executor="e0")
+    h2 = reg.histogram("lat", executor="e0", session="s0")
+    assert h1 is h2
+
+
+def test_registry_value_and_percentile_lookups():
+    reg = obs.MetricsRegistry()
+    reg.counter("n", s="a").inc(4)
+    reg.gauge("depth").set(7)
+    reg.histogram("lat").observe_many([1.0, 2.0, 3.0])
+    assert reg.value("n", s="a") == 4.0
+    assert reg.value("n", s="missing", default=-1.0) == -1.0
+    assert reg.value("depth") == 7.0
+    assert reg.percentile("lat", 50.0) == 2.0
+    assert reg.percentile("nope", 50.0) == 0.0
+
+
+def test_histogram_stats_and_reservoir_overwrite():
+    reg = obs.MetricsRegistry(reservoir=4)
+    h = reg.histogram("lat")
+    h.observe_many(float(i) for i in range(10))  # retains newest window
+    s = h.stats()
+    assert s["count"] == 10
+    assert s["sum"] == sum(range(10))
+    assert s["min"] == 0.0 and s["max"] == 9.0
+    # bounded retention: only 4 samples kept, all from the tail
+    assert h.percentile(100.0) == 9.0
+    assert h.percentile(0.0) >= 6.0
+
+
+def test_histogram_per_thread_merge():
+    reg = obs.MetricsRegistry()
+    h = reg.histogram("lat")
+
+    def worker(base):
+        h.observe_many([base, base + 1.0])
+
+    threads = [threading.Thread(target=worker, args=(10.0 * i,)) for i in range(3)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=30)
+    assert h.count == 6
+    assert h.percentile(0.0) == 0.0
+    assert h.percentile(100.0) == 21.0
+
+
+def test_snapshot_shape():
+    reg = obs.MetricsRegistry()
+    reg.counter("frames", session="s0").inc(5)
+    reg.gauge("slots").set(3)
+    reg.histogram("lat").observe(0.25)
+    snap = reg.snapshot()
+    assert snap["frames{session=s0}"] == {"type": "counter", "value": 5.0}
+    assert snap["slots"] == {"type": "gauge", "value": 3.0}
+    lat = snap["lat"]
+    assert lat["type"] == "histogram"
+    assert lat["count"] == 1
+    assert lat["p50"] == lat["p95"] == lat["p99"] == 0.25
+
+
+def test_prometheus_text_exposition():
+    reg = obs.MetricsRegistry()
+    reg.counter("serve.frames", session='s"0').inc(2)
+    reg.gauge("ring.depth").set(4)
+    reg.histogram("serve.latency_s", session="s0").observe_many([0.1, 0.2])
+    text = reg.prometheus_text()
+    assert "# TYPE serve_frames counter" in text
+    assert 'serve_frames_total{session="s\\"0"} 2.0' in text
+    assert "# TYPE ring_depth gauge" in text
+    assert "ring_depth 4.0" in text
+    assert "# TYPE serve_latency_s summary" in text
+    assert 'serve_latency_s{quantile="0.5",session="s0"} 0.1' in text
+    assert 'serve_latency_s_count{session="s0"} 2' in text
+    assert text.endswith("\n")
+
+
+# ---------------------------------------------------------------------------
+# Tracer
+# ---------------------------------------------------------------------------
+
+
+def test_span_records_duration_and_args():
+    clk = TickClock()
+    tr = obs.Tracer(clk)
+    with tr.span("work", "test", job=3) as sp:
+        clk.advance(0.5)
+        sp.set(result="ok")
+    (ev,) = tr.events()
+    assert ev["kind"] == "span"
+    assert ev["name"] == "work"
+    assert ev["cat"] == "test"
+    assert ev["t1"] - ev["t0"] == pytest.approx(0.5)
+    assert ev["args"] == {"job": 3, "result": "ok"}
+
+
+def test_instant_and_names_filtering():
+    tr = obs.Tracer(TickClock())
+    tr.instant("evict", "fleet", executor="ex0")
+    with tr.span("step", "serve"):
+        pass
+    assert tr.names() == ["evict", "step"]
+    assert tr.names(kind="instant") == ["evict"]
+    assert tr.names(kind="span") == ["step"]
+    tr.clear()
+    assert tr.events() == []
+
+
+def test_trace_decorator():
+    tr = obs.Tracer(TickClock())
+
+    @tr.trace(cat="test")
+    def add(a, b):
+        return a + b
+
+    assert add(2, 3) == 5
+    assert tr.names() == [add.__qualname__]
+
+
+def test_bounded_ring_keeps_newest():
+    tr = obs.Tracer(TickClock(), max_events=3)
+    for i in range(10):
+        tr.instant(f"ev{i}")
+    assert tr.names() == ["ev7", "ev8", "ev9"]
+
+
+def test_disabled_tracer_returns_null_span_singleton():
+    tr = obs.Tracer(TickClock(), enabled=False)
+    s1 = tr.span("a")
+    s2 = tr.span("b", x=1)
+    assert s1 is s2  # one preallocated object: the whole disabled-mode cost
+    with s1 as sp:
+        sp.set(anything="ignored")
+    tr.instant("nope")
+    assert tr.events() == []
+
+
+def test_span_recorded_even_when_body_raises():
+    tr = obs.Tracer(TickClock())
+    with pytest.raises(RuntimeError):
+        with tr.span("boom"):
+            raise RuntimeError("x")
+    assert tr.names() == ["boom"]
+
+
+def test_export_chrome_valid_and_nested_under_frozen_clock():
+    # A frozen clock is the adversarial case: every ts is equal, so only
+    # the B/E sequence numbers keep the nesting sorted correctly.
+    tr = obs.Tracer(TickClock())
+    with tr.span("outer", "t"):
+        with tr.span("inner", "t"):
+            pass
+    tr.instant("mark", "t")
+    doc = tr.export_chrome()
+    events = obs.validate_chrome_trace(doc)
+    assert doc["displayTimeUnit"] == "ms"
+    named = [(e["name"], e["ph"]) for e in events if e["ph"] != "M"]
+    assert named == [
+        ("outer", "B"),
+        ("inner", "B"),
+        ("inner", "E"),
+        ("outer", "E"),
+        ("mark", "i"),
+    ]
+    meta = [e for e in events if e["ph"] == "M"]
+    assert meta and meta[0]["name"] == "thread_name"
+
+
+def test_export_chrome_writes_file(tmp_path):
+    tr = obs.Tracer(TickClock())
+    with tr.span("s"):
+        pass
+    path = tmp_path / "sub" / "trace.json"
+    tr.export_chrome(str(path))
+    doc = json.loads(path.read_text())
+    obs.validate_chrome_trace(doc)
+
+
+def test_export_chrome_thread_attribution():
+    clk = TickClock()
+    tr = obs.Tracer(clk)
+
+    def worker():
+        with tr.span("w"):
+            clk.advance(0.1)
+
+    t = threading.Thread(target=worker, name="worker-thread")
+    t.start()
+    t.join(timeout=30)
+    with tr.span("m"):
+        pass
+    doc = tr.export_chrome()
+    names = {
+        e["args"]["name"] for e in doc["traceEvents"] if e["ph"] == "M"
+    }
+    assert "worker-thread" in names
+    tids = {e["tid"] for e in doc["traceEvents"]}
+    assert tids == {0, 1}  # small stable ints, first-appearance order
+
+
+def test_validate_rejects_malformed_traces():
+    with pytest.raises(ValueError, match="JSON object"):
+        obs.validate_chrome_trace([])
+    with pytest.raises(ValueError, match="traceEvents"):
+        obs.validate_chrome_trace({})
+    base = {"pid": 1, "tid": 0, "cat": "t"}
+    with pytest.raises(ValueError, match="missing required key"):
+        obs.validate_chrome_trace({"traceEvents": [{"ph": "B", "ts": 0}]})
+    with pytest.raises(ValueError, match="decreases"):
+        obs.validate_chrome_trace(
+            {
+                "traceEvents": [
+                    {**base, "name": "a", "ph": "i", "ts": 5, "s": "t"},
+                    {**base, "name": "b", "ph": "i", "ts": 1, "s": "t"},
+                ]
+            }
+        )
+    with pytest.raises(ValueError, match="no open B"):
+        obs.validate_chrome_trace(
+            {"traceEvents": [{**base, "name": "a", "ph": "E", "ts": 0}]}
+        )
+    with pytest.raises(ValueError, match="unclosed B"):
+        obs.validate_chrome_trace(
+            {"traceEvents": [{**base, "name": "a", "ph": "B", "ts": 0}]}
+        )
+    with pytest.raises(ValueError, match="non-negative"):
+        obs.validate_chrome_trace(
+            {"traceEvents": [{**base, "name": "a", "ph": "i", "ts": -1}]}
+        )
+
+
+def test_default_tracer_configure_roundtrip():
+    tr = obs.get_tracer()
+    was_enabled, old_clock = tr.enabled, tr.clock
+    clk = TickClock()
+    try:
+        obs.configure(enabled=True, clock=clk)
+        with obs.span("cfg.test"):
+            clk.advance(1.0)
+        obs.instant("cfg.mark")
+        assert obs.get_tracer() is tr
+        assert "cfg.test" in tr.names()
+        assert "cfg.mark" in tr.names(kind="instant")
+        obs.configure(max_events=2)
+        assert len(tr.events()) <= 2
+    finally:
+        obs.configure(enabled=was_enabled, clock=old_clock, max_events=obs_trace.DEFAULT_MAX_EVENTS)
+        tr.clear()
+
+
+def test_default_tracer_disabled_by_default_is_noop():
+    tr = obs.get_tracer()
+    if tr.enabled:  # REPRO_OBS set in the environment: nothing to assert
+        pytest.skip("default tracer enabled via REPRO_OBS")
+    before = len(tr.events())
+    with obs.span("should.not.record"):
+        pass
+    obs.instant("nor.this")
+    assert len(tr.events()) == before
+
+
+def test_annotate_bridge_tolerates_missing_or_present_jax():
+    # Either jax.profiler.TraceAnnotation loads (and spans still record)
+    # or it is absent and the tracer degrades to annotation-free spans.
+    tr = obs.Tracer(TickClock(), annotate=True)
+    with tr.span("annotated"):
+        pass
+    assert tr.names() == ["annotated"]
+
+
+def test_ring_buffer_alias_delegates_to_obs():
+    from repro.core import ringbuf
+
+    # thin wrapper: same semantics, including the ValueError contract
+    assert ringbuf.nearest_rank_s([], 50.0) == 0.0
+    assert ringbuf.nearest_rank_s([3.0], 99.0) == 3.0
+    with pytest.raises(ValueError, match=r"\[0, 100\]"):
+        ringbuf.nearest_rank_s([1.0], 101.0)

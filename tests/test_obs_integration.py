@@ -1,0 +1,220 @@
+"""Telemetry integration: snapshot-derived report columns, bit-identical
+output with tracing enabled, and the acceptance scenario — a deterministic
+FakeClock trace of a 4-session fleet run with one injected kill whose
+Chrome-trace export carries the heartbeat-miss -> evict -> restore ->
+replay event sequence."""
+
+import json
+
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.core.denoise import DenoiseConfig, StreamingDenoiser
+from repro.core.streaming import run_inline, run_pipelined
+from repro.data.prism import PrismSource
+from repro.serve import FaultPlan, Session, SessionScheduler
+
+WAIT = 300  # generous bounded waits: first step pays jit compile
+
+
+def _cfg(**kw):
+    base = dict(
+        num_groups=6,
+        frames_per_group=20,
+        height=16,
+        width=64,
+        backend="xla",
+        median_window=3,
+    )
+    base.update(kw)
+    return DenoiseConfig(**base)
+
+
+def _groups(cfg, seed=3):
+    return list(PrismSource(cfg, seed=seed).groups())
+
+
+def _serial(cfg, groups):
+    den = StreamingDenoiser(cfg)
+    state = den.init()
+    for k, g in enumerate(groups):
+        state = den.ingest(state, np.asarray(g), step=k)
+    return np.asarray(den.finalize(state))
+
+
+@pytest.fixture
+def enabled_tracer(fake_clock):
+    """Enable the process-default tracer on the test's FakeClock; restore
+    the previous configuration unconditionally so no other test sees it."""
+    tr = obs.get_tracer()
+    was_enabled, old_clock = tr.enabled, tr.clock
+    tr.clear()
+    obs.configure(enabled=True, clock=fake_clock)
+    yield tr
+    obs.configure(enabled=was_enabled, clock=old_clock)
+    tr.clear()
+
+
+def _subsequence(needles, haystack):
+    it = iter(haystack)
+    return all(any(n == h for h in it) for n in needles)
+
+
+# ---------------------------------------------------------------------------
+# Report columns are views over the metrics registry.
+# ---------------------------------------------------------------------------
+
+
+def test_pipelined_report_derived_from_metrics_snapshot():
+    cfg = _cfg()
+    groups = _groups(cfg)
+    reg = obs.MetricsRegistry()
+    out, rep = run_pipelined(cfg, iter(groups), num_slots=3, metrics=reg)
+    snap = reg.snapshot()
+    assert rep.frames == int(snap["stream.frames"]["value"])
+    assert rep.bytes_in == int(snap["stream.bytes_in"]["value"])
+    assert rep.transfer_s == snap["stream.transfer_s"]["value"]
+    assert rep.num_slots == int(snap["stream.num_slots"]["value"])
+    assert rep.drops == int(snap["stream.drops"]["value"])
+    assert rep.latency_p50_ms == reg.percentile("stream.latency_s", 50.0) * 1e3
+    assert rep.latency_p99_ms == reg.percentile("stream.latency_s", 99.0) * 1e3
+    assert snap["stream.latency_s"]["count"] == cfg.num_groups
+
+
+def test_inline_report_derived_from_metrics_snapshot():
+    cfg = _cfg()
+    groups = _groups(cfg)
+    reg = obs.MetricsRegistry()
+    out, rep = run_inline(cfg, iter(groups), prefetch=False, metrics=reg)
+    assert rep.frames == int(reg.value("stream.frames"))
+    assert rep.transfer_s == reg.value("stream.transfer_s")
+    assert rep.stall_s == reg.value("stream.stall_s")
+    assert rep.compute_s == pytest.approx(
+        rep.elapsed_s - rep.stall_s - reg.value("stream.deliver_wait_s")
+    )
+
+
+def test_session_report_derived_from_scheduler_registry():
+    cfg = _cfg()
+    groups = _groups(cfg)
+    with SessionScheduler(slots_per_executor=1, max_executors=1) as sched:
+        h = sched.submit(Session(config=cfg, source=iter(groups), name="m0"))
+        out, rep = h.result(timeout=WAIT)
+        reg = sched.metrics
+        assert rep.transfer_s == reg.value("serve.transfer_s", session="m0")
+        assert rep.compute_s == reg.value("serve.compute_s", session="m0")
+        assert rep.deadline_misses == int(
+            reg.value("serve.deadline_misses", session="m0")
+        )
+        assert (
+            rep.latency_p50_ms
+            == reg.percentile("serve.latency_s", 50.0, session="m0") * 1e3
+        )
+        text = reg.prometheus_text()
+    assert '# TYPE serve_latency_s summary' in text
+    assert 'serve_transfer_s_total{session="m0"}' in text
+    np.testing.assert_array_equal(np.asarray(out), _serial(cfg, groups))
+
+
+# ---------------------------------------------------------------------------
+# Enabled-mode tracing never changes the numerics.
+# ---------------------------------------------------------------------------
+
+
+def test_tracing_enabled_is_bit_identical_and_spans_recorded(
+    enabled_tracer, fake_clock
+):
+    cfg = _cfg()
+    groups = _groups(cfg)
+    ref, _ = run_inline(cfg, iter(groups), prefetch=False)
+    enabled_tracer.clear()
+    out, _ = run_pipelined(cfg, iter(groups), num_slots=2)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+    names = set(enabled_tracer.names())
+    assert {"stream.stage", "stream.ingest", "stream.finalize"} <= names
+    doc = enabled_tracer.export_chrome()
+    obs.validate_chrome_trace(doc)
+
+
+# ---------------------------------------------------------------------------
+# Acceptance: 4-session fleet, one injected kill, exported + asserted trace.
+# ---------------------------------------------------------------------------
+
+
+def test_fleet_kill_trace_sequence_and_chrome_export(
+    enabled_tracer, fake_clock, fleet_factory, tmp_path
+):
+    """Stall an executor mid-fleet; the heartbeat supervisor declares it
+    dead, evicts it, and restores its sessions from checkpoint + replay.
+    The trace must carry that story in order, export as valid
+    Chrome-trace JSON, and recovery must stay bit-identical."""
+    cfg = _cfg(num_groups=7)
+    all_groups = {f"S{i}": _groups(cfg, seed=10 + i) for i in range(4)}
+    plan = FaultPlan().stall("ex0", at_step=5)
+    fleet = fleet_factory(
+        slots_per_executor=2,
+        max_executors=3,
+        faults=plan,
+        clock=fake_clock,
+        heartbeat_timeout_s=60.0,
+        checkpoint_every=3,  # sparse: recovery must replay past the snapshot
+    )
+    with fleet:
+        handles = {
+            name: fleet.submit(
+                Session(config=cfg, source=iter(groups), name=name)
+            )
+            for name, groups in all_groups.items()
+        }
+        assert plan.wait_stalled("ex0", timeout=WAIT)
+        fake_clock.advance(61.0)
+        # probe: live executors get a bounded chance to beat at the new
+        # clock reading; only the stalled ex0 stays silent past the timeout
+        res = fleet.check_faults(probe_timeout_s=5.0)
+        assert res["dead"] == ["ex0"]
+        assert res["evicted"] == ["ex0"]
+        assert res["recovered"], "no session recovered off the dead executor"
+        results = {
+            name: h.result(timeout=WAIT) for name, h in handles.items()
+        }
+    # bit-identical outputs for every session, recovered or not
+    for name, (out, rep) in results.items():
+        np.testing.assert_array_equal(
+            np.asarray(out), _serial(cfg, all_groups[name])
+        )
+        assert rep.groups == cfg.num_groups
+    recovered = set(res["recovered"])
+    assert any(results[name][1].restarts == 1 for name in recovered)
+
+    # the injected kill reads out of the trace in causal order
+    names = enabled_tracer.names()
+    assert _subsequence(
+        ["fleet.heartbeat_miss", "fleet.evict", "fleet.restore", "serve.replay"],
+        names,
+    ), f"recovery sequence missing from trace: {names}"
+    assert "fleet.checkpoint" in names
+    assert "serve.submit" in names and "serve.join" in names
+
+    # instant args carry the attribution the sequence assertion relies on
+    by_name = {}
+    for ev in enabled_tracer.events():
+        by_name.setdefault(ev["name"], []).append(ev)
+    assert by_name["fleet.heartbeat_miss"][0]["args"]["executor"] == "ex0"
+    assert by_name["fleet.evict"][0]["args"]["executor"] == "ex0"
+    restored = {e["args"]["session"] for e in by_name["fleet.restore"]}
+    assert restored == recovered
+    assert all(
+        e["args"]["replay_chunks"] > 0 for e in by_name["fleet.restore"]
+    )
+
+    # the export round-trips through disk as valid Chrome-trace JSON
+    path = tmp_path / "fleet_kill_trace.json"
+    enabled_tracer.export_chrome(str(path))
+    doc = json.loads(path.read_text())
+    events = obs.validate_chrome_trace(doc)
+    instant_names = [e["name"] for e in events if e["ph"] == "i"]
+    assert _subsequence(
+        ["fleet.heartbeat_miss", "fleet.evict", "fleet.restore", "serve.replay"],
+        instant_names,
+    )

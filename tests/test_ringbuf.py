@@ -165,3 +165,60 @@ def test_validation():
     with pytest.raises(ValueError, match="policy"):
         RingBuffer(2, policy="spill")
     assert POLICIES == ("block", "drop_oldest")
+
+
+# -- percentile / telemetry edge cases ---------------------------------------
+
+
+def test_dwell_percentile_empty_buffer_is_zero():
+    ring = RingBuffer(2)
+    for q in (0.0, 50.0, 100.0):
+        assert ring.stats.dwell_percentile_s(q) == 0.0
+
+
+def test_dwell_percentile_single_sample_is_every_percentile():
+    ring = RingBuffer(2)
+    ring.put("x")
+    ring.get()
+    sample = ring.stats.dwell_samples[0]
+    for q in (0.0, 1.0, 50.0, 99.0, 100.0):
+        assert ring.stats.dwell_percentile_s(q) == sample
+
+
+def test_dwell_percentile_rejects_out_of_range_q():
+    ring = RingBuffer(2)
+    ring.put("x")
+    ring.get()
+    with pytest.raises(ValueError, match=r"\[0, 100\]"):
+        ring.stats.dwell_percentile_s(-1.0)
+    with pytest.raises(ValueError, match=r"\[0, 100\]"):
+        ring.stats.dwell_percentile_s(100.001)
+
+
+def test_dwell_percentile_ignores_injected_non_finite_samples():
+    ring = RingBuffer(2)
+    ring.put("x")
+    ring.get()
+    ring.stats.dwell_samples.append(float("nan"))
+    ring.stats.dwell_samples.append(float("inf"))
+    assert ring.stats.dwell_percentile_s(100.0) == max(
+        s for s in ring.stats.dwell_samples if s == s and s != float("inf")
+    )
+
+
+def test_last_dwell_tracks_most_recent_get():
+    ring = RingBuffer(2)
+    assert ring.stats.last_dwell_s == 0.0
+    ring.put(1)
+    time.sleep(0.01)
+    ring.get()
+    first = ring.stats.last_dwell_s
+    assert first >= 0.009
+    ring.put(2)
+    ring.get()
+    assert ring.stats.last_dwell_s <= first
+
+
+def test_ring_name_attribution():
+    assert RingBuffer(1).name == ""
+    assert RingBuffer(1, name="stage").name == "stage"
