@@ -92,6 +92,13 @@ def bench_record(name: str, kind: str, **fields) -> None:
     file. Concurrent writers may still lose each other's *latest* point
     (last replace wins; there is deliberately no cross-process lock), but
     every reader always sees valid JSON.
+
+    Every point is additionally stamped with a monotone ``run_seq``
+    (``max`` over the file's existing stamps, plus one — derived from
+    file contents inside the same read-modify-replace cycle, so it is
+    exactly as crash-safe as the append itself). The regression sentinel
+    (``scripts/bench_regress.py``) orders a family's points by it instead
+    of trusting wall-clock timestamps, which CI runners skew freely.
     """
     if not kind or not isinstance(kind, str):
         raise ValueError(f"bench_record needs a non-empty kind, got {kind!r}")
@@ -105,7 +112,21 @@ def bench_record(name: str, kind: str, **fields) -> None:
         if not isinstance(records, list):
             records = []
     _migrate_kinds(records)
-    records.append({"name": name, "kind": kind, "timestamp": time.time(), **fields})
+    seq = 0
+    for rec in records:
+        if isinstance(rec, dict):
+            s = rec.get("run_seq")
+            if isinstance(s, (int, float)) and not isinstance(s, bool):
+                seq = max(seq, int(s))
+    records.append(
+        {
+            "name": name,
+            "kind": kind,
+            "timestamp": time.time(),
+            "run_seq": seq + 1,
+            **fields,
+        }
+    )
     fd, tmp = tempfile.mkstemp(
         dir=path.parent, prefix=f".{path.name}.", suffix=".tmp"
     )

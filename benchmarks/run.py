@@ -30,6 +30,7 @@ from benchmarks import (
     table13_bandwidth,
     table14_fleet,
     table15_observability,
+    table16_slo,
 )
 
 MODULES = [
@@ -48,6 +49,7 @@ MODULES = [
     ("table13-bandwidth", table13_bandwidth),
     ("table14-fleet", table14_fleet),
     ("table15-observability", table15_observability),
+    ("table16-slo", table16_slo),
     ("fig8", fig8_denoise_snr),
     ("roofline", roofline_report),
 ]

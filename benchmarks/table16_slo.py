@@ -1,0 +1,416 @@
+"""Table 16 (framework extension): SLO judgement-tier characterization.
+
+Four cells over ``repro.obs.slo`` + the serve wiring:
+
+* **detection** — breach-detection latency of the multi-window burn-rate
+  evaluator under a FakeClock-scripted deadline-miss overload: ~30 s of
+  clean service, then a sustained 30% miss rate against a 5% objective.
+  Pure virtual time (zero wall-clock sleeps), so the number is exact and
+  deterministic: seconds from overload onset to the first ``breached``
+  verdict. ``--assert-detection`` requires it within one evaluation
+  window and requires the attributed ``slo_breach`` instant to survive a
+  validated Chrome-trace export round-trip.
+* **kill** — end-to-end wiring proof on a real fleet: a scripted
+  executor crash recovers through the checkpoint path, the recovery
+  latency lands in ``fleet.recovery_s``, and a recovery-time SLO with a
+  sub-recovery target must breach — ``fleet.executor_dead`` and the
+  attributed ``slo_breach`` both present in the exported trace.
+* **overhead** — enabled-SLO serve hot path (engine ticked after every
+  cohort fold) vs a no-SLO control, measured with table15's order-
+  balanced min-of-k paired-ratio discipline and gated by the same
+  ``OVERHEAD_BUDGET`` (``min(median, floor) <= 1.02``) under
+  ``--assert-overhead``. The per-evaluation cost (``eval_us``) comes
+  from the engine's own ``eval_time_s / evaluations`` accounting.
+* **headroom** — agreement between the health tier's capacity reference
+  (``repro.core.latency_model`` camera-gated floor) and a measured
+  streaming pass. Informational off-FPGA: the model is camera-gated at
+  57 µs/frame *regardless of shape*, so tiny smoke frames on a CPU can
+  land either side of it — the recorded ratio documents where this host
+  sits relative to the reference the health report's headroom column
+  uses.
+
+Run directly for the CI smoke cycle::
+
+    python -m benchmarks.table16_slo --smoke --assert-detection
+"""
+
+from __future__ import annotations
+
+import argparse
+import statistics
+import tempfile
+import time
+from typing import Sequence
+
+import jax
+import numpy as np
+
+from benchmarks.common import bench_config, bench_record, emit
+from benchmarks.table15_observability import OVERHEAD_BUDGET, _paired_ratios
+from repro import obs
+from repro.core.streaming import run_pipelined
+from repro.data.prism import PrismSource
+from repro.obs.health import capacity_reference
+from repro.serve import FaultPlan, FleetScheduler, Session
+from repro.serve.faults import FakeClock
+from repro.serve.scheduler import SessionScheduler
+
+RING_SLOTS = 2
+WINDOW_S = 10.0          # detection cell: short evaluation window
+TICK_S = 0.5             # virtual seconds per scripted tick
+HEALTHY_TICKS = 60       # 30 virtual seconds of clean service
+OVERLOAD_TICKS = 40      # ceiling; breach must land well before
+GROUPS_PER_TICK = 10
+MISSES_PER_TICK = 3      # 30% miss rate against a 5% objective
+MISS_TARGET = 0.05
+KILL_AT_STEP = 2
+
+
+def _detection_cell(trace_out: str) -> dict:
+    """FakeClock-scripted overload: exact breach-detection latency."""
+    clock = FakeClock()
+    reg = obs.MetricsRegistry()
+    spec = obs.SloSpec(
+        name="deadline-miss-rate[s0]",
+        kind="deadline_miss_rate",
+        target=MISS_TARGET,
+        window_s=WINDOW_S,
+        bad_metric="serve.deadline_misses",
+        total_metric="serve.latency_s",
+        labels={"session": "s0"},
+    )
+    engine = obs.SloEngine([spec], reg, clock=clock, eval_every_s=TICK_S)
+    tr = obs.get_tracer()
+    was_enabled, old_clock = tr.enabled, tr.clock
+    tr.clear()
+    obs.configure(enabled=True, clock=clock)
+    lat = reg.histogram("serve.latency_s", session="s0")
+    misses = reg.counter("serve.deadline_misses", session="s0")
+
+    def tick(miss: bool) -> list | None:
+        clock.advance(TICK_S)
+        for _ in range(GROUPS_PER_TICK):
+            lat.observe(0.01)
+        if miss:
+            misses.inc(MISSES_PER_TICK)
+        return engine.maybe_evaluate()
+
+    detection_s = None
+    try:
+        for _ in range(HEALTHY_TICKS):
+            verdicts = tick(miss=False)
+            if verdicts and any(v.breached for v in verdicts):
+                raise SystemExit("SLO breached during the healthy phase")
+        overload_t0 = clock.now()
+        for _ in range(OVERLOAD_TICKS):
+            verdicts = tick(miss=True)
+            if verdicts and any(v.breached for v in verdicts):
+                detection_s = clock.now() - overload_t0
+                break
+        doc = tr.export_chrome(trace_out)
+    finally:
+        obs.configure(enabled=was_enabled, clock=old_clock)
+        tr.clear()
+    if detection_s is None:
+        raise SystemExit(
+            f"overload never breached within {OVERLOAD_TICKS * TICK_S}s"
+        )
+    events = obs.validate_chrome_trace(doc)
+    breaches = [e for e in events if e["name"] == "slo_breach"]
+    if not breaches:
+        raise SystemExit("no slo_breach instant survived the trace export")
+    attributed = [
+        e for e in breaches if e.get("args", {}).get("session") == "s0"
+    ]
+    if not attributed:
+        raise SystemExit(
+            f"slo_breach instants lack session attribution: {breaches}"
+        )
+    return {
+        "detection_s": detection_s,
+        "detection_windows": detection_s / WINDOW_S,
+        "evaluations": engine.evaluations,
+        "eval_us": engine.eval_time_s / max(1, engine.evaluations) * 1e6,
+        "trace_events": len(events),
+    }
+
+
+def _kill_cell(cfg, chunks, ckpt_dir: str) -> dict:
+    """Real fleet, scripted kill: recovery latency must trip a
+    sub-recovery recovery-time SLO, attributed in the trace."""
+    tr = obs.get_tracer()
+    was_enabled = tr.enabled
+    tr.clear()
+    obs.configure(enabled=True)
+    specs = [
+        obs.SloSpec(
+            name="fleet-recovery-time",
+            kind="recovery_time",
+            # any real recovery exceeds this: the cell proves the
+            # observation -> evaluation -> trace wiring, not a budget
+            target=1e-6,
+            window_s=WINDOW_S,
+            metric="fleet.recovery_s",
+            percentile=100.0,
+            aggregate=True,
+        )
+    ]
+    fleet = FleetScheduler(
+        checkpoint_dir=ckpt_dir,
+        checkpoint_every=1,
+        faults=FaultPlan().crash("ex0", at_step=KILL_AT_STEP),
+        slots_per_executor=2,
+        max_executors=2,
+        max_sessions=2,
+        slos=specs,
+        slo_eval_every_s=0.05,
+    )
+    try:
+        handles = [
+            fleet.submit(
+                Session(
+                    config=cfg,
+                    source=iter(chunks),
+                    name=f"s{i}",
+                    num_slots=RING_SLOTS,
+                )
+            )
+            for i in range(2)
+        ]
+        reports = [h.result(timeout=600)[1] for h in handles]
+        verdicts = fleet.slo_engine.evaluate()
+        recoveries = fleet.recovery_latencies_s()
+        doc = tr.export_chrome()
+    finally:
+        fleet.shutdown()
+        obs.configure(enabled=was_enabled)
+        tr.clear()
+    if sum(r.restarts for r in reports) < 1:
+        raise SystemExit("scripted kill produced no session restart")
+    if not recoveries:
+        raise SystemExit("no recovery latency was recorded")
+    verdict = next(v for v in verdicts if v.spec == "fleet-recovery-time")
+    events = obs.validate_chrome_trace(doc)
+    names = {e["name"] for e in events}
+    missing = {"fleet.executor_dead", "slo_breach"} - names
+    if missing:
+        raise SystemExit(f"kill-cell trace missing events: {sorted(missing)}")
+    return {
+        "recovery_s": max(recoveries),
+        "breached": verdict.breached,
+        "trace_events": len(events),
+    }
+
+
+def _overhead_cell(cfg, chunks, pairs: int) -> dict:
+    """Enabled-SLO serve path vs no-SLO control, paired min-of-k."""
+
+    def serve_once(slos) -> float:
+        t0 = time.perf_counter()
+        with SessionScheduler(
+            slots_per_executor=2,
+            max_executors=1,
+            slos=slos,
+            slo_eval_every_s=0.05,
+        ) as sched:
+            handles = [
+                sched.submit(
+                    Session(
+                        config=cfg,
+                        source=iter(chunks),
+                        name=f"s{i}",
+                        num_slots=RING_SLOTS,
+                    )
+                )
+                for i in range(2)
+            ]
+            for h in handles:
+                h.result(timeout=600)
+            if sched.slo_engine is not None:
+                serve_once.last_engine = sched.slo_engine
+        return time.perf_counter() - t0
+
+    serve_once.last_engine = None
+
+    def control() -> float:
+        return serve_once(())
+
+    def with_slos() -> float:
+        return serve_once(obs.default_serve_slos(window_s=5.0))
+
+    ratios, floor = _paired_ratios(control, with_slos, pairs)
+    engine = serve_once.last_engine
+    eval_us = (
+        engine.eval_time_s / max(1, engine.evaluations) * 1e6
+        if engine is not None
+        else 0.0
+    )
+    return {
+        "overhead_ratio": statistics.median(ratios),
+        "overhead_floor": floor,
+        "serve_eval_us": eval_us,
+        "serve_evaluations": engine.evaluations if engine else 0,
+    }
+
+
+def _headroom_cell(cfg, chunks) -> dict:
+    """Measured streaming fps vs the health tier's capacity model."""
+    run_pipelined(cfg, iter(chunks), num_slots=RING_SLOTS)  # warm caches
+    t0 = time.perf_counter()
+    run_pipelined(cfg, iter(chunks), num_slots=RING_SLOTS)
+    elapsed = time.perf_counter() - t0
+    frames = cfg.num_groups * cfg.frames_per_group
+    measured_fps = frames / elapsed
+    cap = capacity_reference(
+        height=cfg.height,
+        width=cfg.width,
+        num_groups=cfg.num_groups,
+        frames_per_group=cfg.frames_per_group,
+    )
+    return {
+        "measured_fps": measured_fps,
+        "model_fps": cap["model_fps"],
+        "headroom_agreement": measured_fps / cap["model_fps"],
+    }
+
+
+def run(
+    quick: bool = True,
+    *,
+    smoke: bool = False,
+    assert_detection: bool = False,
+    assert_overhead: bool = False,
+    trace_out: str = "table16_trace.json",
+) -> None:
+    # -- detection: pure virtual time, shape-independent --------------------
+    det = _detection_cell(trace_out)
+    emit(
+        "table16/detection",
+        det["detection_s"] * 1e6,
+        f"detection_s={det['detection_s']:.2f};"
+        f"windows={det['detection_windows']:.3f};"
+        f"eval_us={det['eval_us']:.1f}",
+    )
+    if assert_detection:
+        if det["detection_windows"] > 1.0:
+            raise SystemExit(
+                f"breach detection took {det['detection_s']:.2f}s — more "
+                f"than one {WINDOW_S:.0f}s evaluation window"
+            )
+        print(
+            f"# detection assertion ok: breach in {det['detection_s']:.2f}s "
+            f"({det['detection_windows']:.2f} windows), attributed "
+            f"slo_breach in {trace_out}"
+        )
+
+    # small frames throughout the serve cells: the SLO engine's cost is
+    # per-evaluation, not per-pixel, and the kill cell documents event
+    # vocabulary (both shape-independent — same reasoning as table15's
+    # trace artifact)
+    cfg = bench_config(
+        True, num_groups=6, frames_per_group=40, height=16, width=64
+    )
+    chunks = [jax.device_put(np.asarray(c)) for c in PrismSource(cfg).groups()]
+    jax.block_until_ready(chunks)
+
+    # -- kill: wiring proof on a real fleet ---------------------------------
+    with tempfile.TemporaryDirectory(prefix="table16-ckpt-") as root:
+        kill = _kill_cell(cfg, chunks, f"{root}/ckpt")
+    emit(
+        "table16/kill",
+        kill["recovery_s"] * 1e6,
+        f"recovery_s={kill['recovery_s']:.3f};breached={kill['breached']}",
+    )
+
+    # -- overhead: SLO-enabled serve vs control -----------------------------
+    pairs = 3 if smoke else 5
+    ov = _overhead_cell(cfg, chunks, pairs)
+    emit(
+        "table16/overhead",
+        ov["serve_eval_us"],
+        f"ratio={ov['overhead_ratio']:.4f};floor={ov['overhead_floor']:.4f}",
+    )
+    if assert_overhead:
+        estimate = min(ov["overhead_ratio"], ov["overhead_floor"])
+        if estimate > OVERHEAD_BUDGET:
+            raise SystemExit(
+                f"SLO-enabled serve overhead {estimate:.4f} (median "
+                f"{ov['overhead_ratio']:.4f}, floor {ov['overhead_floor']:.4f}) "
+                f"exceeds budget {OVERHEAD_BUDGET}"
+            )
+        print(
+            f"# overhead assertion ok: SLO-enabled ratio {estimate:.4f} "
+            f"<= {OVERHEAD_BUDGET}"
+        )
+
+    # -- headroom: capacity model vs a measured pass ------------------------
+    hd = _headroom_cell(cfg, chunks)
+    emit(
+        "table16/headroom",
+        0.0,
+        f"measured_fps={hd['measured_fps']:.0f};"
+        f"model_fps={hd['model_fps']:.0f};"
+        f"agreement={hd['headroom_agreement']:.4f}",
+    )
+
+    bench_record(
+        "slo_tier",
+        kind="slo",
+        config={
+            "G": cfg.num_groups,
+            "N": cfg.frames_per_group,
+            "H": cfg.height,
+            "W": cfg.width,
+            "backend": cfg.backend,
+            "window_s": WINDOW_S,
+            "miss_target": MISS_TARGET,
+            "pairs": pairs,
+        },
+        detection_s=round(det["detection_s"], 3),
+        detection_windows=round(det["detection_windows"], 4),
+        eval_us=round(det["eval_us"], 1),
+        recovery_s=round(kill["recovery_s"], 4),
+        recovery_breached=kill["breached"],
+        overhead_ratio=round(ov["overhead_ratio"], 4),
+        overhead_floor=round(ov["overhead_floor"], 4),
+        serve_eval_us=round(ov["serve_eval_us"], 1),
+        headroom_agreement=round(hd["headroom_agreement"], 6),
+    )
+
+
+def main(argv: Sequence[str] | None = None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--full", action="store_true", help="more overhead pairs")
+    ap.add_argument(
+        "--smoke", action="store_true", help="fewer pairs — the CI cycle"
+    )
+    ap.add_argument(
+        "--assert-detection",
+        action="store_true",
+        help="exit non-zero unless the scripted overload breaches within "
+        "one evaluation window and the attributed slo_breach survives "
+        "the Chrome-trace export",
+    )
+    ap.add_argument(
+        "--assert-overhead",
+        action="store_true",
+        help="exit non-zero unless the SLO-enabled serve paired ratio "
+        f"stays <= {OVERHEAD_BUDGET}",
+    )
+    ap.add_argument(
+        "--trace-out",
+        default="table16_trace.json",
+        help="where to write the detection-cell Chrome-trace artifact",
+    )
+    args = ap.parse_args(argv)
+    run(
+        quick=not args.full,
+        smoke=args.smoke,
+        assert_detection=args.assert_detection,
+        assert_overhead=args.assert_overhead,
+        trace_out=args.trace_out,
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,77 @@
+#!/usr/bin/env python
+"""Perf-regression sentinel CLI over ``BENCH_denoise.json``.
+
+Judges every point family's newest run against its own history using
+``repro.obs.regress`` (per-kind thresholds, median + envelope agreement,
+explicit ``insufficient-history`` verdicts — see that module's docstring
+for the discipline). Typical runs::
+
+  python scripts/bench_regress.py                      # gate: exit 1 on regression
+  python scripts/bench_regress.py --informational      # CI: always exit 0
+  python scripts/bench_regress.py --out report.json    # write the verdict report
+  python scripts/bench_regress.py --verbose            # include ok/unguarded rows
+
+``--path`` defaults to the repo's committed ``BENCH_denoise.json`` (or
+``$BENCH_DENOISE_PATH``, matching ``benchmarks/common.py``). Stdlib-only:
+no JAX import, safe on any host.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+
+from repro.obs import regress  # noqa: E402
+
+
+def main(argv=None) -> int:
+    repo = pathlib.Path(__file__).resolve().parents[1]
+    default_path = os.environ.get(
+        "BENCH_DENOISE_PATH", str(repo / "BENCH_denoise.json")
+    )
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--path", default=default_path, help="BENCH json file")
+    ap.add_argument(
+        "--informational",
+        action="store_true",
+        help="report but never fail (CI artifact mode): always exit 0",
+    )
+    ap.add_argument("--out", default=None, help="write the JSON verdict report here")
+    ap.add_argument(
+        "--min-history",
+        type=int,
+        default=regress.MIN_HISTORY,
+        help="baseline points required before judging a family",
+    )
+    ap.add_argument(
+        "--verbose", action="store_true", help="also print ok/unguarded families"
+    )
+    args = ap.parse_args(argv)
+
+    try:
+        points = regress.load_points(args.path)
+    except FileNotFoundError:
+        print(f"bench-regress: no bench file at {args.path}; nothing to judge")
+        return 0
+    report = regress.analyze(points, min_history=args.min_history)
+    report["path"] = args.path
+    print(regress.render_report(report, verbose=args.verbose))
+    if args.out:
+        out = pathlib.Path(args.out)
+        out.parent.mkdir(parents=True, exist_ok=True)
+        out.write_text(json.dumps(report, indent=2, sort_keys=True))
+        print(f"report written to {out}")
+    regressed = report["summary"]["regressed"]
+    if regressed and not args.informational:
+        print(f"bench-regress: {regressed} regressed famil{'y' if regressed == 1 else 'ies'}")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

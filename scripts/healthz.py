@@ -1,0 +1,102 @@
+#!/usr/bin/env python
+"""Fleet health introspection entry point.
+
+Spins up a small synthetic fleet (PRISM sources over a
+``FleetScheduler`` with default SLOs attached), optionally injects a
+scripted executor crash, and prints the resulting
+:class:`repro.obs.health.HealthReport` — the same object
+``FleetScheduler.health()`` serves in-process. Three renderings::
+
+  python scripts/healthz.py                   # human-readable terminal text
+  python scripts/healthz.py --format json     # HealthReport.to_dict()
+  python scripts/healthz.py --format prom     # Prometheus text exposition
+  python scripts/healthz.py --kill            # crash ex0 mid-run, watch recovery
+  python scripts/healthz.py --strict          # exit 1 when status == critical
+
+The demo workload is deliberately tiny (seconds on a CPU host). Headroom
+values far below 1.0 are expected off-FPGA: the capacity reference is
+the paper's §6 camera-gated model — see docs/ARCHITECTURE.md ("SLO &
+health tier").
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+import tempfile
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument(
+        "--format", choices=("text", "json", "prom"), default="text"
+    )
+    ap.add_argument("--sessions", type=int, default=2)
+    ap.add_argument("--executors", type=int, default=2)
+    ap.add_argument("--groups", type=int, default=4)
+    ap.add_argument("--frames", type=int, default=20, help="frames per group")
+    ap.add_argument(
+        "--kill", action="store_true", help="crash ex0 at cohort step 1"
+    )
+    ap.add_argument(
+        "--strict", action="store_true", help="exit 1 when status is critical"
+    )
+    args = ap.parse_args(argv)
+
+    import jax
+    import numpy as np
+
+    from repro.core import DenoiseConfig
+    from repro.data.prism import PrismSource
+    from repro.obs import default_serve_slos
+    from repro.serve import FaultPlan, FleetScheduler, Session
+
+    cfg = DenoiseConfig(
+        num_groups=args.groups,
+        frames_per_group=args.frames,
+        height=16,
+        width=64,
+        backend="xla",
+    )
+    chunks = [jax.device_put(np.asarray(c)) for c in PrismSource(cfg).groups()]
+    jax.block_until_ready(chunks)
+    faults = FaultPlan().crash("ex0", at_step=1) if args.kill else None
+    with tempfile.TemporaryDirectory(prefix="healthz-") as ckpt:
+        fleet = FleetScheduler(
+            checkpoint_dir=ckpt,
+            faults=faults,
+            slots_per_executor=max(1, args.sessions // args.executors),
+            max_executors=args.executors,
+            max_sessions=args.sessions,
+            slos=default_serve_slos(window_s=5.0),
+            slo_eval_every_s=0.2,
+        )
+        try:
+            handles = [
+                fleet.submit(
+                    Session(config=cfg, source=iter(chunks), name=f"s{i}")
+                )
+                for i in range(args.sessions)
+            ]
+            for h in handles:
+                h.result(timeout=300)
+            report = fleet.health()
+        finally:
+            fleet.shutdown()
+    if args.format == "json":
+        print(json.dumps(report.to_dict(), indent=2, sort_keys=True))
+    elif args.format == "prom":
+        print(report.prometheus_text(), end="")
+    else:
+        print(report.render())
+    if args.strict and report.status == "critical":
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

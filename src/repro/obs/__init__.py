@@ -13,8 +13,19 @@ and some of those modules must import before JAX initializes. Two halves:
   with per-thread accumulation, a ``snapshot()`` dict API that report
   columns derive from, and Prometheus-style text exposition.
 
-See docs/ARCHITECTURE.md ("Observability layer") for the span/metric
-taxonomy and the layering contract.
+On top of the two halves sits the judgement tier (PR 9):
+
+* :mod:`repro.obs.slo` — declarative :class:`SloSpec` objectives and a
+  multi-window burn-rate :class:`SloEngine` over registry snapshots,
+  emitting ``slo_breach``/``budget_exhausted`` instants.
+* :mod:`repro.obs.health` — fleet ``HealthReport`` (imported lazily by
+  ``FleetScheduler.health()``/``scripts/healthz.py``; not re-exported
+  here because its capacity model reaches into ``repro.core``).
+* :mod:`repro.obs.regress` — noise-aware perf-regression sentinel over
+  ``BENCH_denoise.json`` point families (``scripts/bench_regress.py``).
+
+See docs/ARCHITECTURE.md ("Observability layer" and "SLO & health
+tier") for the span/metric taxonomy and the layering contract.
 """
 
 from repro.obs.metrics import (
@@ -23,6 +34,13 @@ from repro.obs.metrics import (
     Histogram,
     MetricsRegistry,
     nearest_rank,
+)
+from repro.obs.slo import (
+    SLO_KINDS,
+    SloEngine,
+    SloSpec,
+    SloVerdict,
+    default_serve_slos,
 )
 from repro.obs.trace import (
     Span,
@@ -41,6 +59,11 @@ __all__ = [
     "Histogram",
     "MetricsRegistry",
     "nearest_rank",
+    "SLO_KINDS",
+    "SloEngine",
+    "SloSpec",
+    "SloVerdict",
+    "default_serve_slos",
     "Span",
     "Tracer",
     "configure",

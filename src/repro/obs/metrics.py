@@ -256,7 +256,17 @@ class MetricsRegistry:
     def __init__(self, *, reservoir: int = DEFAULT_RESERVOIR):
         self.reservoir = reservoir
         self._instruments: dict[tuple, _Instrument] = {}
+        self._help: dict[str, str] = {}
         self._lock = threading.Lock()
+
+    def describe(self, name: str, text: str) -> None:
+        """Attach help text to a metric name (all label sets share it).
+
+        Emitted as the ``# HELP`` line in :meth:`prometheus_text`;
+        undescribed metrics fall back to ``"<kind> <name>"``.
+        """
+        with self._lock:
+            self._help[name] = text
 
     def _get(self, cls, name: str, labels: dict, **kw) -> Any:
         key = (cls.kind, name, _label_key(labels))
@@ -298,6 +308,16 @@ class MetricsRegistry:
         inst = self._instruments.get(("histogram", name, _label_key(labels)))
         return inst.percentile(q) if inst is not None else 0.0
 
+    def percentile_all(self, name: str, q: float) -> float:
+        """Percentile over the merged reservoirs of *every* label set of
+        ``name`` — the fleet-wide view (e.g. p99 across all sessions).
+        0.0 when no such histogram exists."""
+        samples: list[float] = []
+        for inst in self.instruments():
+            if isinstance(inst, Histogram) and inst.name == name:
+                samples.extend(inst._merged()[0])
+        return nearest_rank(samples, q)
+
     def snapshot(self) -> dict:
         """The whole registry as one plain dict, keyed ``name{k=v,...}``.
 
@@ -321,17 +341,23 @@ class MetricsRegistry:
         Counters get the ``_total`` suffix, histograms are exposed
         summary-style (``_count``/``_sum`` plus ``quantile`` series).
         Metric names are sanitized (``.`` -> ``_``); label values are
-        escaped per the exposition format.
+        escaped per the exposition format (``\\``, ``"``, newline), and
+        every family gets a ``# HELP`` line (help text escapes ``\\``
+        and newline only, per the spec) before its ``# TYPE``.
         """
         by_name: dict[tuple[str, str], list[_Instrument]] = {}
         for inst in self.instruments():
             by_name.setdefault((inst.name, inst.kind), []).append(inst)
+        with self._lock:
+            help_texts = dict(self._help)
         lines: list[str] = []
         for (name, kind), insts in sorted(by_name.items()):
             pname = _prom_name(name)
             ptype = {"counter": "counter", "gauge": "gauge", "histogram": "summary"}[
                 kind
             ]
+            help_text = help_texts.get(name, f"{kind} {name}")
+            lines.append(f"# HELP {pname} {_prom_escape_help(help_text)}")
             lines.append(f"# TYPE {pname} {ptype}")
             for inst in sorted(insts, key=lambda i: i.label_key):
                 labels = dict(inst.label_key)
@@ -361,6 +387,11 @@ def _prom_name(name: str) -> str:
 
 def _prom_escape(v: str) -> str:
     return v.replace("\\", "\\\\").replace('"', '\\"').replace("\n", "\\n")
+
+
+def _prom_escape_help(v: str) -> str:
+    # HELP lines escape backslash and newline but NOT quotes (text format)
+    return v.replace("\\", "\\\\").replace("\n", "\\n")
 
 
 def _prom_line(name: str, labels: dict, value) -> str:

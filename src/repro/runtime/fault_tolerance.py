@@ -42,6 +42,12 @@ class HeartbeatMonitor:
             w for w, last in self._last.items() if t - last > self.timeout_s
         )
 
+    def last_beats(self, now: float | None = None) -> dict[str, float]:
+        """worker -> seconds since its last beat (the health report's
+        heartbeat-age column; ``_last`` itself stays private)."""
+        t = time.monotonic() if now is None else now
+        return {w: t - last for w, last in self._last.items()}
+
     def evict(self, worker: str) -> None:
         self._last.pop(worker, None)
 

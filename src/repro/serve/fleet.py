@@ -125,6 +125,20 @@ class FleetScheduler(SessionScheduler):
             warmup_steps=straggler_warmup,
         )
         self.max_session_restarts = max_session_restarts
+        # the SLO engine (built by the base ctor when specs were passed)
+        # must judge time on the SAME clock the fleet's fault machinery
+        # uses, or FakeClock tests would mix virtual and wall time
+        if self.slo_engine is not None:
+            self.slo_engine.clock = self.clock
+        self.metrics.describe(
+            "fleet.recovery_s", "kill-to-recovered latency per recovered session (s)"
+        )
+        self.metrics.describe("fleet.queue_depth", "unseatable queued sessions")
+        self.metrics.describe("fleet.sessions", "sessions hosted per executor")
+        self.metrics.describe(
+            "fleet.headroom", "model group floor / achieved EWMA group time"
+        )
+        self.metrics.describe("fleet.ring_occupancy", "staged groups in ring")
         # fault-tolerance state shares one small lock; never held while
         # taking the scheduler lock or an executor cond (no nesting out)
         self._ft_lock = threading.Lock()
@@ -201,14 +215,29 @@ class FleetScheduler(SessionScheduler):
                     executor=ex.name, steps=act.steps,
                 )
         recovered = False
+        recovery_lat: float | None = None
         with self._ft_lock:
             if act.name in self._awaiting_recovery:
                 self._awaiting_recovery.discard(act.name)
-                self.timeline.append(
-                    ("session-recovered", act.name, self.clock.now())
-                )
+                now = self.clock.now()
+                # kill-to-recovered latency: this mark minus the latest
+                # executor-dead before it (same pairing as
+                # recovery_latencies_s) — observed into the registry so
+                # recovery_time SLOs judge it from snapshots
+                last_dead = None
+                for kind, _, t in reversed(self.timeline):
+                    if kind == "executor-dead":
+                        last_dead = t
+                        break
+                self.timeline.append(("session-recovered", act.name, now))
+                if last_dead is not None:
+                    recovery_lat = now - last_dead
                 recovered = True
         if recovered:
+            if recovery_lat is not None:
+                self.metrics.histogram(
+                    "fleet.recovery_s", session=act.name
+                ).observe(recovery_lat)
             obs.instant(
                 "fleet.recovered", "fleet", session=act.name, executor=ex.name,
                 steps=act.steps,
@@ -472,6 +501,107 @@ class FleetScheduler(SessionScheduler):
         return act.migrate_target
 
     # -- telemetry -----------------------------------------------------------
+    def health(self, *, evaluate_slos: bool = True):
+        """Fold the fleet's state into one
+        :class:`repro.obs.health.HealthReport`.
+
+        Heartbeat ages/classification come from the monitor, queue depth
+        and session counts from the executors, ring occupancy from each
+        session's staging ring, per-executor headroom from the paper-§6
+        capacity model vs the straggler EWMA, and SLO verdicts from a
+        fresh ``slo_engine.evaluate()`` (skippable — ``health()`` in a
+        tight poll loop shouldn't consume evaluation-mark budget). Ring
+        and queue gauges are also written into ``self.metrics`` so the
+        scrape endpoint carries what the report shows.
+        """
+        from repro.obs import health as _health
+
+        now = self.clock.now()
+        with self._lock:
+            executors = list(self._executors)
+            acts = list(self._acts.values())
+        with self._ft_lock:
+            beats = self.monitor.last_beats(now)
+            dead = set(self.monitor.dead(now))
+            evicted = set(self._evicted_names)
+            slow = set(self.stragglers.stragglers())
+            ewmas = {ex.name: self.stragglers.ewma(ex.name) for ex in executors}
+            fleet_info = {
+                "events": list(self.events[-8:]),
+                "awaiting_recovery": sorted(self._awaiting_recovery),
+                "evicted": sorted(evicted),
+                "workers": self.monitor.workers(),
+            }
+        verdicts: list[dict] = []
+        if self.slo_engine is not None and evaluate_slos:
+            verdicts = [v.to_dict() for v in self.slo_engine.evaluate()]
+        ex_rows = []
+        cap_cache: dict = {}
+        for ex in executors:
+            state, age = _health.classify_heartbeat(
+                ex.name, evicted=evicted, dead=dead, beats=beats
+            )
+            cfg = ex.config
+            cap_key = (cfg.height, cfg.width, cfg.num_groups, cfg.frames_per_group)
+            cap = cap_cache.get(cap_key)
+            if cap is None:
+                cap = _health.capacity_reference(
+                    height=cfg.height,
+                    width=cfg.width,
+                    num_groups=cfg.num_groups,
+                    frames_per_group=cfg.frames_per_group,
+                )
+                cap_cache[cap_key] = cap
+            ewma = ewmas.get(ex.name)
+            headroom = (
+                cap["group_floor_s"] / ewma if ewma and ewma > 0 else None
+            )
+            queue = ex.queue_depth()
+            sessions = ex.session_count()
+            self.metrics.gauge("fleet.queue_depth", executor=ex.name).set(queue)
+            self.metrics.gauge("fleet.sessions", executor=ex.name).set(sessions)
+            if headroom is not None:
+                self.metrics.gauge("fleet.headroom", executor=ex.name).set(headroom)
+            ex_rows.append(
+                _health.ExecutorHealth(
+                    name=ex.name,
+                    alive=ex.alive,
+                    heartbeat=state,
+                    last_beat_age_s=age,
+                    sessions=sessions,
+                    queue_depth=queue,
+                    cohort_steps=ex.cohort_steps,
+                    step_ewma_s=ewma,
+                    straggler=ex.name in slow,
+                    headroom=headroom,
+                    capacity=cap,
+                )
+            )
+        sess_rows = []
+        for act in acts:
+            occupancy = len(act.ring)
+            self.metrics.gauge("fleet.ring_occupancy", session=act.name).set(
+                occupancy
+            )
+            sess_rows.append(
+                {
+                    "name": act.name,
+                    "executor": act.executor.name if act.executor else None,
+                    "steps": act.steps,
+                    "ring_occupancy": occupancy,
+                    "restarts": act.restarts,
+                    "migrations": act.migrations,
+                }
+            )
+        return _health.HealthReport(
+            at=now,
+            status=_health.rollup_status(ex_rows, verdicts),
+            executors=ex_rows,
+            sessions=sorted(sess_rows, key=lambda s: s["name"]),
+            slos=verdicts,
+            fleet=fleet_info,
+        )
+
     def recovery_latencies_s(self) -> list[float]:
         """Kill-to-recovered spans: each ``session-recovered`` mark minus
         the latest ``executor-dead`` before it (clock units — virtual

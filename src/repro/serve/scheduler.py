@@ -213,7 +213,7 @@ class _SlotExecutor:
         self, key, config: DenoiseConfig, capacity, mesh, name, on_done,
         coalesce_s: float = 0.005, *, clock: Clock | None = None, faults=None,
         on_step=None, on_session_step=None, on_dead=None, on_migrate=None,
-        on_beat=None, metrics: obs.MetricsRegistry | None = None,
+        on_beat=None, on_cohort=None, metrics: obs.MetricsRegistry | None = None,
     ):
         self.key = key
         self.config = config
@@ -230,6 +230,7 @@ class _SlotExecutor:
         self.on_dead = on_dead            # (ex, acts, err) -> acts taken over
         self.on_migrate = on_migrate      # (ex, act) after slot extraction
         self.on_beat = on_beat            # (name, clock.now()) liveness beat
+        self.on_cohort = on_cohort        # () after each cohort fold (SLO tick)
         self.metrics = metrics if metrics is not None else obs.MetricsRegistry()
         self.filt, self.state = banked_filter_init(config, mesh, banks=capacity)
         self._chunk_buf = None  # persistent staging buffer, filled in place
@@ -765,6 +766,8 @@ class _SlotExecutor:
             self.on_step(
                 self, (self.clock.now() - t_clock0) + fault_extra_s
             )
+        if self.on_cohort is not None:
+            self.on_cohort()
 
     def _report(self, act: _Active) -> SessionReport:
         """Build the session's report from its metric instruments.
@@ -834,6 +837,8 @@ class SessionScheduler:
         max_waiting: int = 4,
         mesh=None,
         coalesce_ms: float = 5.0,
+        slos: Sequence = (),
+        slo_eval_every_s: float = 1.0,
     ):
         if mesh is not None:
             banks = mesh.shape["bank"]
@@ -871,6 +876,24 @@ class SessionScheduler:
         #: (labeled ``session=``) land here, and ``SessionReport``s are
         #: derived from it. Scrape via ``self.metrics.prometheus_text()``.
         self.metrics = obs.MetricsRegistry()
+        self.metrics.describe(
+            "serve.latency_s", "per-group service latency, staged -> step done (s)"
+        )
+        self.metrics.describe("serve.transfer_s", "host->device transfer time (s)")
+        self.metrics.describe("serve.compute_s", "per-session share of cohort compute (s)")
+        self.metrics.describe("serve.deadline_misses", "groups over their soft deadline")
+        self.metrics.describe("serve.discarded", "staged groups dropped at leave")
+        #: SLO judgement tier: when specs are given, every executor ticks
+        #: the engine after each cohort fold (``maybe_evaluate`` — a clock
+        #: compare until ``slo_eval_every_s`` elapses) and verdicts land
+        #: in ``slo_engine.last_verdicts`` + breach instants in the tracer.
+        self.slo_engine = (
+            obs.SloEngine(
+                list(slos), self.metrics, eval_every_s=slo_eval_every_s
+            )
+            if slos
+            else None
+        )
         self._executors: list[_SlotExecutor] = []
         self._lock = threading.Condition()
         self._inflight = 0
@@ -918,6 +941,18 @@ class SessionScheduler:
 
     def _on_submitted(self, handle, act, ex) -> None:
         """Post-admission hook (fleet bookkeeping); base: no-op."""
+
+    def _slo_tick(self) -> None:
+        """Per-cohort SLO cadence tick, called from executor threads.
+
+        Evaluation failures never fail an executor (and with it every
+        co-tenant session): they are counted and the tick swallowed —
+        judging the service must not be able to take the service down.
+        """
+        try:
+            self.slo_engine.maybe_evaluate()
+        except Exception:
+            self.metrics.counter("slo.eval_errors").inc()
 
     def stats(self) -> dict:
         """Live telemetry snapshot (sessions in flight, per-executor load)."""
@@ -979,6 +1014,7 @@ class SessionScheduler:
             on_done=self._session_done,
             coalesce_s=self.coalesce_ms * 1e-3,
             metrics=self.metrics,
+            on_cohort=self._slo_tick if self.slo_engine is not None else None,
             **self._executor_hooks(),
         )
         self._ex_seq += 1

@@ -43,6 +43,7 @@ def test_select_substring_matches():
     assert [n for n, _ in bench_run.select("table12")] == ["table12-autotune"]
     assert [n for n, _ in bench_run.select("table13")] == ["table13-bandwidth"]
     assert [n for n, _ in bench_run.select("table14")] == ["table14-fleet"]
+    assert [n for n, _ in bench_run.select("table16")] == ["table16-slo"]
     assert [n for n, _ in bench_run.select("table1")] == [
         "table1",
         "table10-zoo",
@@ -51,6 +52,7 @@ def test_select_substring_matches():
         "table13-bandwidth",
         "table14-fleet",
         "table15-observability",
+        "table16-slo",
     ]
     assert bench_run.select(None) == bench_run.MODULES
 
@@ -91,6 +93,31 @@ def test_bench_record_leaves_no_temp_droppings(tmp_path, monkeypatch):
         common.bench_record(f"p{i}", "speedup")
     leftovers = [p for p in tmp_path.iterdir() if p != path]
     assert leftovers == []
+
+
+def test_bench_record_stamps_monotone_run_seq(tmp_path, monkeypatch):
+    path = _with_path(tmp_path, monkeypatch)
+    for i in range(3):
+        common.bench_record(f"p{i}", "speedup", speedup=1.0)
+    records = json.loads(path.read_text())
+    assert [r["run_seq"] for r in records] == [1, 2, 3]
+
+
+def test_bench_record_run_seq_resumes_past_legacy_points(tmp_path, monkeypatch):
+    """A file with pre-run_seq points (and garbage stamps) still yields a
+    valid next sequence: max over the *numeric* stamps, booleans and
+    strings ignored, legacy points left untouched."""
+    path = _with_path(tmp_path, monkeypatch)
+    path.write_text(json.dumps([
+        {"name": "legacy", "kind": "speedup", "speedup": 2.0},
+        {"name": "bad", "kind": "speedup", "run_seq": "seven"},
+        {"name": "bool", "kind": "speedup", "run_seq": True},
+        {"name": "stamped", "kind": "speedup", "run_seq": 4},
+    ]))
+    common.bench_record("next", "speedup", speedup=1.0)
+    records = json.loads(path.read_text())
+    assert records[-1]["run_seq"] == 5
+    assert "run_seq" not in records[0]  # legacy points are not rewritten
 
 
 def test_bench_record_concurrent_writers_never_corrupt(tmp_path, monkeypatch):

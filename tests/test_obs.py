@@ -188,6 +188,71 @@ def test_prometheus_text_exposition():
     assert text.endswith("\n")
 
 
+def test_prometheus_help_lines_described_and_fallback():
+    reg = obs.MetricsRegistry()
+    reg.describe("serve.frames", "frames folded per session")
+    reg.counter("serve.frames").inc()
+    reg.gauge("ring.depth").set(1)  # no describe() -> generated fallback
+    text = reg.prometheus_text()
+    assert "# HELP serve_frames frames folded per session" in text
+    assert "# HELP ring_depth gauge ring.depth" in text
+    # HELP precedes TYPE for each family (text-format convention)
+    assert text.index("# HELP serve_frames") < text.index("# TYPE serve_frames")
+
+
+def _parse_prom_labels(line):
+    """Label dict from one exposition sample line (inverse of the
+    writer's escaping: \\\\ -> backslash, \\" -> quote, \\n -> newline)."""
+    body = line[line.index("{") + 1 : line.rindex("}")]
+    labels = {}
+    i = 0
+    while i < len(body):
+        eq = body.index("=", i)
+        key = body[i:eq]
+        assert body[eq + 1] == '"'
+        j = eq + 2
+        val = []
+        while body[j] != '"':
+            if body[j] == "\\":
+                nxt = body[j + 1]
+                val.append({"n": "\n", "\\": "\\", '"': '"'}[nxt])
+                j += 2
+            else:
+                val.append(body[j])
+                j += 1
+        labels[key] = "".join(val)
+        i = j + 2  # skip closing quote + comma
+    return labels
+
+
+def test_prometheus_adversarial_label_round_trip():
+    """Escaping conformance: quotes, newlines, backslashes and unicode in
+    label values must survive write -> parse exactly, and HELP text must
+    escape backslash/newline (but NOT quotes — text-format rules)."""
+    adversarial = {
+        "quoted": 'va"l"ue',
+        "newline": "line1\nline2",
+        "backslash": "c:\\temp\\x",
+        "mixed": 'a\\"b\nc\\n',
+        "unicode": "héllo-wörld-⚡",
+    }
+    reg = obs.MetricsRegistry()
+    reg.describe("adv.metric", 'multi\nline "quoted" \\help')
+    reg.counter("adv.metric", **adversarial).inc(3)
+    text = reg.prometheus_text()
+    (sample,) = [
+        ln for ln in text.splitlines() if ln.startswith("adv_metric_total{")
+    ]
+    assert sample.endswith(" 3.0")
+    assert "\n" not in sample  # the newline was escaped, not emitted raw
+    assert _parse_prom_labels(sample) == adversarial
+    # HELP: backslash + newline escaped, quotes left alone
+    (help_line,) = [
+        ln for ln in text.splitlines() if ln.startswith("# HELP adv_metric ")
+    ]
+    assert help_line == '# HELP adv_metric multi\\nline "quoted" \\\\help'
+
+
 # ---------------------------------------------------------------------------
 # Tracer
 # ---------------------------------------------------------------------------

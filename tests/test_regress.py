@@ -1,0 +1,204 @@
+"""Perf-regression sentinel (``repro.obs.regress`` +
+``scripts/bench_regress.py``): the dual-estimator discipline (median
+threshold AND envelope agreement), explicit ``insufficient-history`` /
+``unguarded`` verdicts, run_seq ordering, family identity, and the CLI's
+exit-code contract."""
+
+import json
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+from repro.obs import regress
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+
+
+def _pts(values, name="fam", kind="speedup", field="speedup", **extra):
+    return [
+        {"name": name, "kind": kind, field: v, "run_seq": i + 1, **extra}
+        for i, v in enumerate(values)
+    ]
+
+
+def _one_verdict(report):
+    (row,) = report["families"].values()
+    return row
+
+
+# ---------------------------------------------------------------------------
+# Rule validation + judgement discipline.
+# ---------------------------------------------------------------------------
+
+
+def test_rule_requires_exactly_one_tolerance():
+    with pytest.raises(ValueError, match="exactly one"):
+        regress.Rule("x", "higher")
+    with pytest.raises(ValueError, match="exactly one"):
+        regress.Rule("x", "higher", rel_tol=0.1, abs_tol=0.5)
+    with pytest.raises(ValueError, match="direction"):
+        regress.Rule("x", "sideways", rel_tol=0.1)
+
+
+def test_degraded_family_is_flagged():
+    pts = _pts([2.0, 2.05, 1.95, 2.02, 1.2])
+    row = _one_verdict(regress.analyze(pts))
+    assert row["verdict"] == "regressed"
+    assert row["latest"] == 1.2
+    assert row["baseline_median"] == pytest.approx(2.01)
+
+
+def test_improvement_is_the_mirror_verdict():
+    pts = _pts([2.0, 2.05, 1.95, 2.02, 2.8])
+    assert _one_verdict(regress.analyze(pts))["verdict"] == "improved"
+
+
+def test_within_threshold_is_ok():
+    pts = _pts([2.0, 2.05, 1.95, 2.02, 1.9])  # ~5% below median, tol 10%
+    assert _one_verdict(regress.analyze(pts))["verdict"] == "ok"
+
+
+def test_noisy_envelope_vetoes_the_median_estimator():
+    """Latest is >10% below the median but the baseline itself already
+    reached that low — inside the demonstrated noise floor, so the
+    envelope estimator vetoes: not a regression."""
+    pts = _pts([2.0, 1.4, 2.1, 2.0, 1.5])
+    row = _one_verdict(regress.analyze(pts))
+    assert row["latest"] < row["baseline_median"] * 0.9
+    assert row["verdict"] == "ok"
+
+
+def test_lower_is_better_kinds_judge_inverted():
+    pts = _pts(
+        [1.01, 1.0, 1.02, 1.01, 1.15],
+        kind="obs_overhead",
+        field="ratio_disabled",
+    )
+    assert _one_verdict(regress.analyze(pts))["verdict"] == "regressed"
+    pts = _pts(
+        [1.05, 1.04, 1.06, 1.05, 1.0],
+        kind="slo",
+        field="overhead_ratio",
+    )
+    assert _one_verdict(regress.analyze(pts))["verdict"] == "improved"
+
+
+def test_abs_tol_kinds_judge_in_db_not_ratios():
+    pts = _pts([12.0, 12.1, 11.9, 12.0, 11.6], kind="snr", field="snr_db")
+    # 0.4 dB down: inside the 0.5 dB absolute tolerance
+    assert _one_verdict(regress.analyze(pts))["verdict"] == "ok"
+    pts = _pts([12.0, 12.1, 11.9, 12.0, 11.2], kind="snr", field="snr_db")
+    assert _one_verdict(regress.analyze(pts))["verdict"] == "regressed"
+
+
+def test_single_run_file_is_insufficient_history():
+    row = _one_verdict(regress.analyze(_pts([2.0])))
+    assert row["verdict"] == "insufficient-history"
+    assert row["baseline_n"] == 0
+
+
+def test_unknown_kind_and_missing_field_are_unguarded():
+    pts = [{"name": "y", "kind": "mystery", "foo": i} for i in range(5)]
+    assert _one_verdict(regress.analyze(pts))["verdict"] == "unguarded"
+    pts = _pts([1, 2, 3, 4, 5], field="not_the_rule_field")
+    row = _one_verdict(regress.analyze(pts))
+    assert row["verdict"] == "unguarded" and "note" in row
+
+
+def test_baseline_depth_ages_out_ancient_history():
+    # 20 ancient slow points, then 8 fast ones: the retained baseline is
+    # the newest 8, so a fast latest is ok — not "improved vs the stone age"
+    pts = _pts([1.0] * 20 + [2.0] * 8 + [2.05])
+    row = _one_verdict(regress.analyze(pts))
+    assert row["baseline_median"] == pytest.approx(2.0)
+    assert row["verdict"] == "ok"
+
+
+# ---------------------------------------------------------------------------
+# Ordering + identity.
+# ---------------------------------------------------------------------------
+
+
+def test_run_seq_orders_the_family_not_file_position():
+    pts = _pts([2.0, 2.05, 1.95, 2.02, 1.2])
+    shuffled = [pts[3], pts[0], pts[4], pts[2], pts[1]]
+    assert _one_verdict(regress.analyze(shuffled))["verdict"] == "regressed"
+
+
+def test_legacy_points_precede_stamped_ones():
+    legacy = [{"name": "fam", "kind": "speedup", "speedup": v} for v in (2.0, 2.1)]
+    stamped = _pts([1.95, 1.2])
+    row = _one_verdict(regress.analyze(stamped + legacy))
+    # latest must be the newest *stamped* point even though the legacy
+    # points sit after it in the file
+    assert row["latest"] == 1.2 and row["verdict"] == "regressed"
+
+
+def test_family_key_separates_configs_and_ignores_ordering_fields():
+    a = {"name": "f", "kind": "speedup", "config": {"G": 8}, "speedup": 2.0,
+         "run_seq": 1, "timestamp": 123.0}
+    b = dict(a, run_seq=2, timestamp=456.0, speedup=1.0)
+    c = dict(a, config={"G": 4})
+    assert regress.family_key(a) == regress.family_key(b)
+    assert regress.family_key(a) != regress.family_key(c)
+    report = regress.analyze([a, b, c])
+    assert len(report["families"]) == 2
+
+
+def test_render_report_lines_and_summary():
+    pts = _pts([2.0, 2.05, 1.95, 2.02, 1.2]) + _pts([3.0], name="young")
+    report = regress.analyze(pts)
+    text = regress.render_report(report)
+    assert "regressed" in text and "fam" in text
+    assert "insufficient-history" in text and "young" in text
+    assert "summary: ok=0 regressed=1 improved=0" in text
+    # ok families only appear under verbose
+    okpts = _pts([2.0, 2.0, 2.0, 2.0], name="steady")
+    quiet = regress.render_report(regress.analyze(okpts))
+    assert "steady" not in quiet
+    loud = regress.render_report(regress.analyze(okpts), verbose=True)
+    assert "steady" in loud
+
+
+# ---------------------------------------------------------------------------
+# CLI exit codes (the CI contract).
+# ---------------------------------------------------------------------------
+
+
+def _run_cli(path, *flags):
+    return subprocess.run(
+        [sys.executable, str(REPO / "scripts" / "bench_regress.py"),
+         "--path", str(path), *flags],
+        capture_output=True,
+        text=True,
+        timeout=120,
+    )
+
+
+def test_cli_gates_on_regression_but_not_informationally(tmp_path):
+    bench = tmp_path / "bench.json"
+    bench.write_text(json.dumps(_pts([2.0, 2.05, 1.95, 2.02, 1.2])))
+    gate = _run_cli(bench)
+    assert gate.returncode == 1
+    assert "1 regressed family" in gate.stdout
+    info = _run_cli(bench, "--informational", "--out", str(tmp_path / "r.json"))
+    assert info.returncode == 0, info.stderr
+    report = json.loads((tmp_path / "r.json").read_text())
+    assert report["summary"]["regressed"] == 1
+    assert report["path"] == str(bench)
+
+
+def test_cli_single_run_file_reports_insufficient_history(tmp_path):
+    bench = tmp_path / "bench.json"
+    bench.write_text(json.dumps(_pts([2.0])))
+    res = _run_cli(bench)
+    assert res.returncode == 0
+    assert "insufficient-history" in res.stdout
+
+
+def test_cli_missing_file_is_a_clean_noop(tmp_path):
+    res = _run_cli(tmp_path / "nope.json")
+    assert res.returncode == 0
+    assert "nothing to judge" in res.stdout

@@ -1,0 +1,305 @@
+"""SLO judgement tier (``repro.obs.slo``): spec validation, multi-window
+burn-rate evaluation, edge-triggered breach/recovery/budget instants, and
+the acceptance scenario — a FakeClock-scripted deadline-miss overload
+must be detected within one evaluation window and leave an *attributed*
+``slo_breach`` in a validated Chrome-trace export. Every test drives
+virtual time only: zero wall-clock sleeps in this file."""
+
+import pytest
+
+from repro import obs
+from repro.obs import MetricsRegistry, SloEngine, SloSpec, default_serve_slos
+
+WINDOW_S = 10.0
+TICK_S = 0.5
+
+
+def _rate_spec(**kw):
+    base = dict(
+        name="miss[s0]",
+        kind="deadline_miss_rate",
+        target=0.05,
+        window_s=WINDOW_S,
+        bad_metric="serve.deadline_misses",
+        total_metric="serve.latency_s",
+        labels={"session": "s0"},
+    )
+    base.update(kw)
+    return SloSpec(**base)
+
+
+def _engine(fake_clock, specs=None, **kw):
+    reg = MetricsRegistry()
+    kw.setdefault("eval_every_s", TICK_S)
+    eng = SloEngine(
+        specs if specs is not None else [_rate_spec()],
+        reg,
+        clock=fake_clock,
+        **kw,
+    )
+    return eng, reg
+
+
+def _tick(fake_clock, eng, reg, *, groups=10, misses=0, session="s0"):
+    """One scripted service tick: advance virtual time, observe traffic,
+    let the engine's cadence decide whether to evaluate."""
+    fake_clock.advance(TICK_S)
+    lat = reg.histogram("serve.latency_s", session=session)
+    for _ in range(groups):
+        lat.observe(0.01)
+    if misses:
+        reg.counter("serve.deadline_misses", session=session).inc(misses)
+    return eng.maybe_evaluate()
+
+
+# ---------------------------------------------------------------------------
+# SloSpec validation.
+# ---------------------------------------------------------------------------
+
+
+def test_spec_rejects_unknown_kind():
+    with pytest.raises(ValueError, match="kind"):
+        SloSpec(name="x", kind="vibes", target=0.5, window_s=1.0)
+
+
+def test_spec_rate_kind_needs_fractional_target_and_both_metrics():
+    with pytest.raises(ValueError, match="fraction"):
+        _rate_spec(target=1.5)
+    with pytest.raises(ValueError, match="bad_metric"):
+        SloSpec(
+            name="x", kind="frame_drop_rate", target=0.01, window_s=1.0
+        )
+
+
+def test_spec_percentile_kind_needs_metric_and_valid_percentile():
+    with pytest.raises(ValueError, match="metric"):
+        SloSpec(name="x", kind="latency_percentile", target=0.5, window_s=1.0)
+    with pytest.raises(ValueError, match="percentile"):
+        SloSpec(
+            name="x",
+            kind="latency_percentile",
+            target=0.5,
+            window_s=1.0,
+            metric="serve.latency_s",
+            percentile=101.0,
+        )
+
+
+def test_spec_default_windows_scale_from_short_window():
+    s = _rate_spec(window_s=10.0)
+    assert s.effective_long_window_s == 120.0
+    assert s.effective_budget_window_s == 300.0
+    s2 = _rate_spec(window_s=10.0, long_window_s=40.0, budget_window_s=50.0)
+    assert s2.effective_long_window_s == 40.0
+    assert s2.effective_budget_window_s == 50.0
+
+
+def test_engine_rejects_duplicate_spec_names(fake_clock):
+    with pytest.raises(ValueError, match="duplicate"):
+        SloEngine(
+            [_rate_spec(), _rate_spec()], MetricsRegistry(), clock=fake_clock
+        )
+
+
+def test_default_serve_slos_cover_the_scheduler_metrics():
+    specs = default_serve_slos(sessions=["s0", "s1"])
+    names = {s.name for s in specs}
+    assert {
+        "serve-deadline-miss-rate",
+        "serve-drop-rate",
+        "serve-p99-latency",
+        "fleet-recovery-time",
+        "deadline-miss-rate[s0]",
+        "deadline-miss-rate[s1]",
+    } <= names
+    # fleet-wide objectives aggregate across session label sets
+    assert all(
+        s.aggregate for s in specs if not s.name.endswith("]")
+    )
+
+
+# ---------------------------------------------------------------------------
+# Cadence + no-data.
+# ---------------------------------------------------------------------------
+
+
+def test_maybe_evaluate_honours_cadence(fake_clock):
+    eng, reg = _engine(fake_clock, eval_every_s=1.0)
+    fake_clock.advance(0.3)
+    assert eng.maybe_evaluate() is not None  # first call always evaluates
+    assert eng.maybe_evaluate() is None      # cadence not due
+    fake_clock.advance(0.5)
+    assert eng.maybe_evaluate() is None
+    fake_clock.advance(0.6)
+    assert eng.maybe_evaluate() is not None
+    assert eng.evaluations == 2
+
+
+def test_no_traffic_is_insufficient_data_not_a_breach(fake_clock):
+    eng, reg = _engine(fake_clock)
+    (v,) = eng.evaluate()
+    assert v.insufficient_data and v.status == "no-data"
+    assert not v.breached and not v.exhausted and not v.ok
+
+
+def test_evaluate_self_accounts_wall_cost(fake_clock):
+    eng, reg = _engine(fake_clock)
+    for _ in range(5):
+        _tick(fake_clock, eng, reg)
+    assert eng.evaluations == 5
+    assert eng.eval_time_s > 0.0
+
+
+# ---------------------------------------------------------------------------
+# Acceptance: scripted overload detected within one window, attributed
+# slo_breach in the exported trace.
+# ---------------------------------------------------------------------------
+
+
+def test_overload_breaches_within_one_window_with_attributed_trace(
+    fake_clock, tmp_path
+):
+    tr = obs.get_tracer()
+    was_enabled, old_clock = tr.enabled, tr.clock
+    tr.clear()
+    obs.configure(enabled=True, clock=fake_clock)
+    try:
+        eng, reg = _engine(fake_clock)
+        for _ in range(60):  # 30s of clean service
+            v = _tick(fake_clock, eng, reg)
+            assert not (v and any(x.breached for x in v))
+        overload_t0 = fake_clock.now()
+        detection_s = None
+        for _ in range(40):  # sustained 30% miss rate vs a 5% target
+            v = _tick(fake_clock, eng, reg, misses=3)
+            if v and any(x.breached for x in v):
+                detection_s = fake_clock.now() - overload_t0
+                break
+        assert detection_s is not None, "overload never breached"
+        assert detection_s <= WINDOW_S
+        doc = tr.export_chrome(str(tmp_path / "trace.json"))
+    finally:
+        obs.configure(enabled=was_enabled, clock=old_clock)
+        tr.clear()
+    events = obs.validate_chrome_trace(doc)
+    breaches = [e for e in events if e["name"] == "slo_breach"]
+    assert len(breaches) == 1  # edge-triggered: one instant per episode
+    args = breaches[0]["args"]
+    assert args["session"] == "s0"          # session attribution
+    assert args["slo"] == "miss[s0]"
+    assert args["burn_short"] >= 1.0 and args["burn_long"] >= 1.0
+
+
+def test_breach_recovers_and_emits_recovered_once(fake_clock):
+    tr = obs.Tracer(fake_clock, enabled=True)
+    eng, reg = _engine(fake_clock, tracer=tr)
+    for _ in range(40):
+        _tick(fake_clock, eng, reg)
+    for _ in range(40):
+        _tick(fake_clock, eng, reg, misses=3)
+    assert any(v.breached for v in eng.last_verdicts)
+    # clean service again: the short window drains first, then burn_short
+    # falls under threshold -> recovery edge
+    for _ in range(60):
+        _tick(fake_clock, eng, reg)
+    assert not any(v.breached for v in eng.last_verdicts)
+    names = tr.names(kind="instant")
+    assert names.count("slo_breach") == 1
+    assert names.count("slo_recovered") == 1
+    assert names.index("slo_breach") < names.index("slo_recovered")
+
+
+def test_sustained_overload_exhausts_the_error_budget(fake_clock):
+    tr = obs.Tracer(fake_clock, enabled=True)
+    # tight budget window so exhaustion lands inside the scripted run
+    eng, reg = _engine(fake_clock, specs=[_rate_spec(budget_window_s=30.0)], tracer=tr)
+    for _ in range(80):
+        _tick(fake_clock, eng, reg, misses=3)
+    (v,) = eng.last_verdicts
+    assert v.exhausted and v.status == "exhausted"
+    assert v.budget_remaining <= 0.0
+    assert "budget_exhausted" in tr.names(kind="instant")
+
+
+def test_short_burst_does_not_breach_the_long_window(fake_clock):
+    """One bad tick inside a long clean history: burn_short spikes but
+    burn_long stays under threshold — no breach (the multi-window AND
+    gate is what keeps blips from paging)."""
+    eng, reg = _engine(fake_clock)
+    for _ in range(120):  # 60s of clean history
+        _tick(fake_clock, eng, reg)
+    v = _tick(fake_clock, eng, reg, misses=15)
+    (verdict,) = v
+    assert verdict.burn_short > 1.0
+    assert verdict.burn_long < 1.0
+    assert not verdict.breached
+
+
+# ---------------------------------------------------------------------------
+# Percentile + recovery-time kinds.
+# ---------------------------------------------------------------------------
+
+
+def test_latency_percentile_breaches_above_target(fake_clock):
+    spec = SloSpec(
+        name="p99",
+        kind="latency_percentile",
+        target=0.1,
+        window_s=WINDOW_S,
+        metric="serve.latency_s",
+        percentile=99.0,
+        labels={"session": "s0"},
+    )
+    eng, reg = _engine(fake_clock, specs=[spec])
+    lat = reg.histogram("serve.latency_s", session="s0")
+    lat.observe_many([0.01] * 99)
+    fake_clock.advance(TICK_S)
+    (v,) = eng.evaluate()
+    assert not v.breached and v.ok
+    lat.observe_many([0.5] * 99)  # tail blows through the 100ms target
+    fake_clock.advance(TICK_S)
+    (v,) = eng.evaluate()
+    assert v.breached and v.value > spec.target
+
+
+def test_recovery_time_aggregates_across_sessions(fake_clock):
+    spec = SloSpec(
+        name="recovery",
+        kind="recovery_time",
+        target=10.0,
+        window_s=WINDOW_S,
+        metric="fleet.recovery_s",
+        percentile=100.0,
+        aggregate=True,
+    )
+    eng, reg = _engine(fake_clock, specs=[spec])
+    (v,) = eng.evaluate()
+    assert v.insufficient_data  # no failures yet: no data, not a breach
+    reg.histogram("fleet.recovery_s", session="a").observe(2.0)
+    reg.histogram("fleet.recovery_s", session="b").observe(12.0)
+    fake_clock.advance(TICK_S)
+    (v,) = eng.evaluate()
+    # p100 over the *merged* per-session reservoirs sees the worst one
+    assert v.value == pytest.approx(12.0)
+    assert v.breached
+
+
+def test_percentile_budget_exhausts_after_sustained_breach(fake_clock):
+    spec = SloSpec(
+        name="p99",
+        kind="latency_percentile",
+        target=0.1,
+        window_s=WINDOW_S,
+        metric="serve.latency_s",
+        percentile=99.0,
+        labels={"session": "s0"},
+        budget=0.5,
+        budget_window_s=30.0,
+    )
+    eng, reg = _engine(fake_clock, specs=[spec])
+    reg.histogram("serve.latency_s", session="s0").observe_many([0.5] * 10)
+    last = None
+    for _ in range(80):
+        fake_clock.advance(TICK_S)
+        (last,) = eng.evaluate()
+    assert last.breached and last.exhausted
