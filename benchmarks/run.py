@@ -31,6 +31,7 @@ from benchmarks import (
     table14_fleet,
     table15_observability,
     table16_slo,
+    table17_autoscale,
 )
 
 MODULES = [
@@ -50,6 +51,7 @@ MODULES = [
     ("table14-fleet", table14_fleet),
     ("table15-observability", table15_observability),
     ("table16-slo", table16_slo),
+    ("table17-autoscale", table17_autoscale),
     ("fig8", fig8_denoise_snr),
     ("roofline", roofline_report),
 ]

@@ -12,6 +12,13 @@ scripted executor crash, and prints the resulting
   python scripts/healthz.py --format prom     # Prometheus text exposition
   python scripts/healthz.py --kill            # crash ex0 mid-run, watch recovery
   python scripts/healthz.py --strict          # exit 1 when status == critical
+  python scripts/healthz.py --autoscale       # attach an Autoscaler and pump it
+
+Every rendering carries the elastic tier's state (pool size vs target,
+draining count, degradation-ladder rung, last scale event) from
+``FleetScheduler.autoscale_state()``; ``--autoscale`` additionally runs
+one ``Autoscaler.evaluate()`` tick per session completion so the
+controller columns (last action/reason) are populated.
 
 The demo workload is deliberately tiny (seconds on a CPU host). Headroom
 values far below 1.0 are expected off-FPGA: the capacity reference is
@@ -45,6 +52,11 @@ def main(argv=None) -> int:
     ap.add_argument(
         "--strict", action="store_true", help="exit 1 when status is critical"
     )
+    ap.add_argument(
+        "--autoscale",
+        action="store_true",
+        help="attach an Autoscaler and pump one evaluate() per completion",
+    )
     args = ap.parse_args(argv)
 
     import jax
@@ -53,7 +65,7 @@ def main(argv=None) -> int:
     from repro.core import DenoiseConfig
     from repro.data.prism import PrismSource
     from repro.obs import default_serve_slos
-    from repro.serve import FaultPlan, FleetScheduler, Session
+    from repro.serve import Autoscaler, FaultPlan, FleetScheduler, Session
 
     cfg = DenoiseConfig(
         num_groups=args.groups,
@@ -75,6 +87,11 @@ def main(argv=None) -> int:
             slos=default_serve_slos(window_s=5.0),
             slo_eval_every_s=0.2,
         )
+        scaler = (
+            Autoscaler(fleet, max_executors=args.executors)
+            if args.autoscale
+            else None
+        )
         try:
             handles = [
                 fleet.submit(
@@ -84,7 +101,11 @@ def main(argv=None) -> int:
             ]
             for h in handles:
                 h.result(timeout=300)
+                if scaler is not None:
+                    scaler.evaluate()
             report = fleet.health()
+            if scaler is not None:
+                report.autoscale = scaler.state()
         finally:
             fleet.shutdown()
     if args.format == "json":

@@ -24,9 +24,11 @@ Tests in ``tests/test_latency_model.py`` assert equality with the paper.
 from __future__ import annotations
 
 import dataclasses
+import math
 
 __all__ = [
     "PaperConstants",
+    "capacity_plan",
     "frame_latencies_us",
     "total_time_s",
     "effective_initiation_interval",
@@ -131,6 +133,67 @@ def effective_initiation_interval(
     gap_s = measured_s - total_time_s(algorithm, c)
     frames = c.groups * c.frames_per_group
     return gap_s * 1e9 / (c.clock_ns * frames * (c.packets_per_frame - 1))
+
+
+def capacity_plan(
+    *,
+    sessions: int,
+    slots_per_executor: int,
+    group_rate_hz: float | None = None,
+    algorithm: str = "alg3",
+    c: PaperConstants = PaperConstants(),
+    target_headroom: float = 1.0,
+) -> dict:
+    """Executor count needed to serve ``sessions`` camera-paced streams.
+
+    The serve tier's capacity question in the paper's own terms: one
+    executor steps ``slots_per_executor`` concurrent streams per banked
+    device step, and the analytic model bounds how fast any stream can
+    produce groups — the camera-gated per-group floor
+    (``total_time_s / groups``, the same reference the health tier's
+    headroom column divides by). ``group_rate_hz`` is each tenant's
+    offered rate in groups/s; ``None`` means camera-paced (offered =
+    sustainable, i.e. every slot fully busy). ``target_headroom`` > 1
+    over-provisions by that factor (the autoscaler's safety margin).
+
+    Returns the plan the autoscaler consumes::
+
+        {"executors": E, "group_floor_s": ..., "sustainable_group_hz":
+         ..., "demand_group_hz": ..., "per_executor_group_hz": ...,
+         "headroom": ...}
+
+    ``headroom`` is capacity/demand at the returned ``executors`` (>= 1
+    by construction, except when demand is zero — then it is ``inf``).
+    """
+    if sessions < 0:
+        raise ValueError(f"sessions must be >= 0, got {sessions}")
+    if slots_per_executor < 1:
+        raise ValueError(
+            f"slots_per_executor must be >= 1, got {slots_per_executor}"
+        )
+    if group_rate_hz is not None and group_rate_hz < 0:
+        raise ValueError(f"group_rate_hz must be >= 0, got {group_rate_hz}")
+    if target_headroom <= 0:
+        raise ValueError(f"target_headroom must be > 0, got {target_headroom}")
+    group_floor_s = total_time_s(algorithm, c) / c.groups
+    sustainable_hz = 1.0 / group_floor_s
+    per_stream_hz = group_rate_hz if group_rate_hz is not None else sustainable_hz
+    demand_hz = sessions * per_stream_hz
+    per_executor_hz = slots_per_executor * sustainable_hz
+    executors = (
+        0
+        if demand_hz == 0
+        else max(1, math.ceil(target_headroom * demand_hz / per_executor_hz))
+    )
+    capacity_hz = executors * per_executor_hz
+    return {
+        "executors": executors,
+        "group_floor_s": group_floor_s,
+        "sustainable_group_hz": sustainable_hz,
+        "demand_group_hz": demand_hz,
+        "per_executor_group_hz": per_executor_hz,
+        "headroom": capacity_hz / demand_hz if demand_hz else float("inf"),
+    }
 
 
 # ---------------------------------------------------------------------------

@@ -175,6 +175,22 @@ class RingBuffer:
         with self._cond:
             self._notify_hook = hook
 
+    def set_policy(self, policy: str) -> None:
+        """Switch the overflow policy mid-stream.
+
+        The fleet's degradation ladder downshifts a live ``block``
+        session to ``drop_oldest`` under overload (and restores it once
+        the breach clears) without touching buffered items. A producer
+        currently blocked on a full ring is woken: under the new
+        ``drop_oldest`` policy its pending ``put`` sheds the oldest
+        staged item and lands instead of waiting.
+        """
+        if policy not in POLICIES:
+            raise ValueError(f"policy must be one of {POLICIES}, got {policy!r}")
+        with self._cond:
+            self._policy = policy
+            self._cond.notify_all()
+
     def __len__(self) -> int:
         """Occupied slots (racy outside the lock; exact for single threads)."""
         return self._tail - self._head
@@ -204,12 +220,18 @@ class RingBuffer:
                 with _obs_trace.span("ring.put_wait", "ring", ring=self.name):
                     t0 = time.perf_counter()
                     deadline = None if timeout is None else t0 + timeout
-                    while not self._closed and self._tail - self._head == n:
+                    while (
+                        not self._closed
+                        and self._policy == "block"
+                        and self._tail - self._head == n
+                    ):
                         # single deadline across wakeups (notify_all means a
                         # losing waiter would otherwise re-arm a fresh timeout
                         # forever), and time out only with the ring still full
                         # at the loop top — a slot freed concurrently with the
-                        # deadline must win, as in queue.Queue
+                        # deadline must win, as in queue.Queue. A mid-wait
+                        # set_policy("drop_oldest") also ends the wait: the
+                        # put then sheds the oldest item below and lands.
                         left = None if deadline is None else deadline - time.perf_counter()
                         if left is not None and left <= 0:
                             self.stats.put_wait_s += time.perf_counter() - t0
@@ -219,6 +241,14 @@ class RingBuffer:
                             )
                         self._cond.wait(left)
                     self.stats.put_wait_s += time.perf_counter() - t0
+                    if (
+                        not self._closed
+                        and self._policy == "drop_oldest"
+                        and self._tail - self._head == n
+                    ):
+                        self._slots[self._head % n] = None
+                        self._head += 1
+                        self.stats.drops += 1
             if self._closed:
                 raise RingClosed("put on closed ring")
             slot = self._tail % n

@@ -39,7 +39,8 @@ __all__ = [
 ]
 
 #: per-executor heartbeat classification, in increasing severity
-HEARTBEAT_STATES = ("healthy", "unknown", "missed", "evicted")
+#: ("drained" is terminal but healthy: a deliberate scale-down exit)
+HEARTBEAT_STATES = ("healthy", "unknown", "missed", "evicted", "drained")
 
 #: numeric encoding of report status for the prometheus rendering
 STATUS_LEVELS = {"ok": 0, "degraded": 1, "critical": 2}
@@ -115,6 +116,10 @@ class HealthReport:
     sessions: list[dict]
     slos: list[dict]  # SloVerdict.to_dict() rows
     fleet: dict  # events tail, awaiting_recovery, evicted, workers
+    #: elastic-tier state (``FleetScheduler.autoscale_state()``): pool
+    #: size vs target, draining count, ladder rung, last scale event.
+    #: Empty for schedulers without an elastic pool.
+    autoscale: dict = dataclasses.field(default_factory=dict)
 
     def to_dict(self) -> dict:
         return {
@@ -124,6 +129,7 @@ class HealthReport:
             "sessions": self.sessions,
             "slos": self.slos,
             "fleet": self.fleet,
+            "autoscale": self.autoscale,
         }
 
     def prometheus_text(self) -> str:
@@ -160,6 +166,23 @@ class HealthReport:
         reg.describe("health.slo.ok", "SLO verdict (1 ok, 0 breach/exhausted)")
         for v in self.slos:
             reg.gauge("health.slo.ok", slo=v["spec"]).set(1.0 if v["ok"] else 0.0)
+        if self.autoscale:
+            a = self.autoscale
+            reg.describe("health.autoscale.pool_size", "live executors")
+            reg.describe("health.autoscale.pool_target", "autoscaler target")
+            reg.describe("health.autoscale.draining", "executors draining out")
+            reg.describe(
+                "health.autoscale.degradation_level",
+                "graceful-degradation ladder rung (0 normal .. 3 shed)",
+            )
+            reg.gauge("health.autoscale.pool_size").set(a.get("pool_size", 0))
+            reg.gauge("health.autoscale.pool_target").set(
+                a.get("target_executors", 0)
+            )
+            reg.gauge("health.autoscale.draining").set(a.get("draining", 0))
+            reg.gauge("health.autoscale.degradation_level").set(
+                a.get("degradation_level", 0)
+            )
         return reg.prometheus_text()
 
     def render(self) -> str:
@@ -206,6 +229,19 @@ class HealthReport:
                     f" value={v['value']:.4g} target={v['target']:.4g}"
                     f" budget={v['budget_remaining']:+.2f}"
                 )
+        if self.autoscale:
+            a = self.autoscale
+            last = a.get("last_scale_event") or "none"
+            lines.append(
+                "  autoscale: "
+                f"pool={a.get('pool_size', 0)}/"
+                f"{a.get('target_executors', 0)} "
+                f"(max {a.get('max_executors', 0)}) "
+                f"draining={a.get('draining', 0)} "
+                f"ladder={a.get('degradation', 'normal')}"
+                f"({a.get('degradation_level', 0)}) "
+                f"last-scale={last}"
+            )
         fl = self.fleet
         lines.append(
             "  fleet: "
@@ -232,7 +268,9 @@ def rollup_status(
     critical = False
     degraded = False
     for ex in executors:
-        if ex.heartbeat == "missed" or (not ex.alive and ex.heartbeat != "evicted"):
+        if ex.heartbeat == "missed" or (
+            not ex.alive and ex.heartbeat not in ("evicted", "drained")
+        ):
             critical = True
         if ex.straggler or ex.heartbeat == "unknown":
             degraded = True
@@ -255,14 +293,19 @@ def classify_heartbeat(
     evicted: set,
     dead: set,
     beats: dict,
+    drained: set = frozenset(),
 ) -> tuple[str, float | None]:
     """(state, age_s) for one executor given the monitor's folded view.
 
     ``beats`` maps worker -> seconds since its last heartbeat. Severity
-    order is evicted > missed > healthy > unknown (an evicted worker
-    stays evicted even though the monitor no longer tracks it).
+    order is drained > evicted > missed > healthy > unknown (an evicted
+    worker stays evicted even though the monitor no longer tracks it;
+    ``drained`` — a deliberate scale-down exit — takes precedence so a
+    shrink never reads as a fault).
     """
     age = beats.get(name)
+    if name in drained:
+        return "drained", age
     if name in evicted:
         return "evicted", age
     if name in dead:

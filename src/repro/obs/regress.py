@@ -93,6 +93,12 @@ KIND_RULES: dict[str, Rule] = {
     "snr_gain": Rule("gain_db", "higher", abs_tol=0.5),
     "obs_overhead": Rule("ratio_disabled", "lower", rel_tol=0.03),
     "slo": Rule("overhead_ratio", "lower", rel_tol=0.03),
+    # table17 autoscale family: capacity (sessions sustained at a fixed
+    # SLO, higher is better) and reaction (flash-crowd onset -> scale-up
+    # mark in virtual seconds, lower is better). Virtual-clock metrics
+    # are stable, so modest tolerances suffice.
+    "autoscale": Rule("sustained_sessions", "higher", rel_tol=0.20),
+    "autoscale_reaction": Rule("reaction_s", "lower", rel_tol=0.25),
 }
 
 

@@ -62,11 +62,14 @@ SLO_KINDS = (
     "latency_percentile",
     "deadline_miss_rate",
     "frame_drop_rate",
+    "admission_reject_rate",
     "recovery_time",
 )
 
 #: kinds evaluated as bad/total counter-delta ratios
-RATE_KINDS = frozenset({"deadline_miss_rate", "frame_drop_rate"})
+RATE_KINDS = frozenset(
+    {"deadline_miss_rate", "frame_drop_rate", "admission_reject_rate"}
+)
 
 #: kinds evaluated as a histogram percentile against a ceiling
 PERCENTILE_KINDS = frozenset({"latency_percentile", "recovery_time"})

@@ -14,20 +14,44 @@ and a deterministic fault-injection harness (:class:`FaultPlan`,
 :class:`FakeClock`) that scripts crashes/stalls/slow-steps by cohort step
 index — no wall-clock anywhere.
 
+The elastic tier rides on top: :class:`Autoscaler` closes the loop from
+SLO burn-rate verdicts + the paper-§6 capacity plan to pool actions
+(``scale_up``/``scale_down`` with live migration off draining
+executors) and a graceful-degradation ladder (admission backoff via
+:func:`retry_with_backoff`, in-place ring downshift, priority-ordered
+shedding); ``repro.serve.loadgen`` generates the deterministic
+trace-driven overloads that exercise it.
+
 A 1-session run is bit-identical to ``repro.core.streaming.run_pipelined``
 for every registered filter. Not to be confused with
 ``repro.launch.serve`` — the LM inference server of the model substrate;
 this package serves imaging streams. See docs/ARCHITECTURE.md.
 """
 
+from repro.serve.autoscale import (
+    AutoscaleDecision,
+    Autoscaler,
+    admission_pressure_slo,
+)
 from repro.serve.faults import (
     Clock,
     FakeClock,
     FaultPlan,
     InjectedExecutorFailure,
 )
-from repro.serve.fleet import FleetScheduler
+from repro.serve.fleet import DEGRADE_LEVELS, FleetScheduler
+from repro.serve.loadgen import (
+    ArrivalEvent,
+    TenantProfile,
+    build_trace,
+    diurnal_schedule,
+    flash_crowd_schedule,
+    heavy_tail_groups,
+    poisson_schedule,
+    replay_trace,
+)
 from repro.serve.recovery import CheckpointMismatch, SessionCheckpointer
+from repro.serve.retry import BackoffPolicy, retry_with_backoff
 from repro.serve.scheduler import SessionScheduler
 from repro.serve.session import (
     AdmissionError,
@@ -38,8 +62,13 @@ from repro.serve.session import (
 
 __all__ = [
     "AdmissionError",
+    "ArrivalEvent",
+    "AutoscaleDecision",
+    "Autoscaler",
+    "BackoffPolicy",
     "CheckpointMismatch",
     "Clock",
+    "DEGRADE_LEVELS",
     "FakeClock",
     "FaultPlan",
     "FleetScheduler",
@@ -49,4 +78,13 @@ __all__ = [
     "SessionHandle",
     "SessionReport",
     "SessionScheduler",
+    "TenantProfile",
+    "admission_pressure_slo",
+    "build_trace",
+    "diurnal_schedule",
+    "flash_crowd_schedule",
+    "heavy_tail_groups",
+    "poisson_schedule",
+    "replay_trace",
+    "retry_with_backoff",
 ]

@@ -59,13 +59,22 @@ from __future__ import annotations
 import threading
 
 from repro import obs
+from repro.runtime import elastic as _elastic
 from repro.runtime.fault_tolerance import HeartbeatMonitor, StragglerDetector
 from repro.serve.faults import Clock, FaultPlan
 from repro.serve.recovery import SessionCheckpointer
 from repro.serve.scheduler import SessionScheduler
 from repro.serve.session import AdmissionError, SessionHandle
 
-__all__ = ["FleetScheduler"]
+__all__ = ["DEGRADE_LEVELS", "FleetScheduler"]
+
+#: graceful-degradation ladder, in escalation order: 0 nothing, 1 admit
+#: through jittered backoff, 2 downshift live sessions to cheaper modes
+#: (drop_oldest rings; u8 ingest for new arrivals), 3 shed lowest-QoS
+#: sessions. The :class:`~repro.serve.autoscale.Autoscaler` climbs one
+#: rung per breached evaluation once the pool cannot grow, and restores
+#: (rung by rung) once the breach clears.
+DEGRADE_LEVELS = ("normal", "backoff", "downshift", "shed")
 
 
 class FleetScheduler(SessionScheduler):
@@ -145,13 +154,29 @@ class FleetScheduler(SessionScheduler):
         self._acts: dict[int, object] = {}  # id(handle) -> _Active
         self._awaiting_recovery: set[str] = set()
         self._evicted_names: set[str] = set()
+        self._drained_names: set[str] = set()  # deliberate scale-down exits
         self._beat_flags: dict[str, threading.Event] = {}
         #: supervisor-style history strings (evict@…, recover@…, …)
         self.events: list[str] = []
         #: clock-stamped marks: (kind, name, t) — kinds are
         #: executor-dead, session-replaced, session-recovered,
-        #: session-migrated. Feeds recovery_latencies_s().
+        #: session-migrated, scale-up, scale-down, degrade, restore,
+        #: session-shed. Feeds recovery_latencies_s() and the table17
+        #: autoscale reaction-time measurement.
         self.timeline: list[tuple[str, str, float]] = []
+        # -- elastic pool / degradation-ladder state (autoscaler-driven) ------
+        #: current ladder rung, 0..len(DEGRADE_LEVELS)-1
+        self.degradation_level = 0
+        self._last_scale_event: str | None = None
+        self._scale_ups = 0
+        self._scale_downs = 0
+        self._shed_total = 0
+        self._downshifted_ids: set[int] = set()  # id(act) with ring flipped
+        self.metrics.describe("fleet.pool_size", "live executors in the pool")
+        self.metrics.describe("fleet.pool_target", "autoscaler pool target")
+        self.metrics.describe(
+            "fleet.degradation_level", "graceful-degradation ladder rung"
+        )
 
     # -- executor wiring -----------------------------------------------------
     def _executor_hooks(self) -> dict:
@@ -172,6 +197,7 @@ class FleetScheduler(SessionScheduler):
         act.migrate_done.set()  # wake migrate() waiters; target stays None
         with self._lock:
             self._acts.pop(id(act.handle), None)
+            self._downshifted_ids.discard(id(act))
         super()._session_done(act)
 
     # -- executor-thread callbacks -------------------------------------------
@@ -265,6 +291,18 @@ class FleetScheduler(SessionScheduler):
         """Migration path: ``_retire`` already lifted the slot state into
         ``act.resume_state``; place the session elsewhere (or re-seat it
         at home when the pool has nowhere better)."""
+        if ex.draining and act.resume_state is not None:
+            # scale-down path: the extracted slot state is still placed
+            # wherever the leaving executor held it; re-land it for the
+            # device set that remains before the target's slot_insert
+            # picks it up (all-None spec = plain re-placement)
+            act.resume_state = _elastic.elastic_reshard(
+                act.resume_state,
+                _elastic.state_spec_tree(act.resume_state),
+                self.mesh
+                if self.mesh is not None
+                else _elastic.available_mesh(("bank",)),
+            )
         cfg = act.session.config
         key = cfg.stream_key()
         target = None
@@ -500,6 +538,253 @@ class FleetScheduler(SessionScheduler):
             act.migrate_done.wait(timeout)
         return act.migrate_target
 
+    # -- elastic pool (autoscaler-driven) ------------------------------------
+    def scale_up(self, count: int = 1, *, reason: str = "") -> int:
+        """Grow the pool target by ``count`` executors and raise
+        ``max_sessions`` to match the added slot capacity.
+
+        The target never exceeds ``max_executors``, nor — for a
+        mesh-backed pool — what the surviving device set can still back
+        (:func:`repro.runtime.elastic.available_mesh` is the ceiling
+        check; a CPU pool has no device ceiling). For reaction time an
+        executor is spawned *eagerly* for the busiest live stream key,
+        so queued admissions land on it immediately instead of waiting
+        for ``_place`` to grow the pool lazily. Returns the new target
+        (unchanged when already at the ceiling)."""
+        if count < 1:
+            raise ValueError(f"count must be >= 1, got {count}")
+        now = self.clock.now()
+        spawned: list[str] = []
+        with self._lock:
+            ceiling = self.max_executors
+            if self.mesh is not None:
+                avail = _elastic.available_mesh(tuple(self.mesh.axis_names))
+                if avail.size < self.mesh.size:
+                    # the devices left cannot back the bank mesh every
+                    # executor shares: freeze growth at the current pool
+                    ceiling = min(
+                        ceiling,
+                        sum(1 for ex in self._executors if ex.alive),
+                    )
+            new_target = min(ceiling, self.target_executors + count)
+            added = new_target - self.target_executors
+            if added <= 0:
+                return self.target_executors
+            self.target_executors = new_target
+            self.max_sessions += added * self.slots_per_executor
+            live = [
+                ex for ex in self._executors if ex.alive and not ex.draining
+            ]
+            if live:
+                busiest = max(
+                    live, key=lambda e: (e.queue_depth(), e.session_count())
+                )
+                room = new_target - len(live)
+                for _ in range(min(added, max(0, room))):
+                    ex = self._new_executor(busiest.key, busiest.config)
+                    self._executors.append(ex)
+                    spawned.append(ex.name)
+        with self._ft_lock:
+            self._scale_ups += added
+            self._last_scale_event = f"scale-up+{added}@t={now:.3f}"
+            self.events.append(
+                f"scale-up:+{added}" + (f":{reason}" if reason else "")
+            )
+            self.timeline.append(
+                ("scale-up", ",".join(spawned) or f"target={new_target}", now)
+            )
+        obs.instant(
+            "fleet.scale_up", "fleet", added=added, target=new_target,
+            spawned=",".join(spawned), reason=reason,
+        )
+        return new_target
+
+    def scale_down(
+        self, *, reason: str = "", migrate_timeout: float = 30.0
+    ) -> str | None:
+        """Shrink the pool by one executor, with checkpointed slot
+        migration off the leaver.
+
+        The least-loaded live executor is marked *draining* (``_place``
+        stops routing new sessions to it), the target and session cap
+        drop, and every hosted session is live-migrated away: each lifts
+        its slot state out at its next group boundary and
+        :meth:`_on_migrate` re-shards it for the surviving device set
+        before the new host's ``slot_insert``. The drained executor then
+        stops gracefully. Returns its name, or ``None`` when the pool is
+        already at the one-executor floor."""
+        now = self.clock.now()
+        with self._lock:
+            live = [
+                ex for ex in self._executors if ex.alive and not ex.draining
+            ]
+            if len(live) <= 1 or self.target_executors <= 1:
+                return None
+            victim = min(live, key=lambda e: (e.session_count(), e.name))
+            victim.draining = True
+            self.target_executors -= 1
+            self.max_sessions = max(
+                1, self.max_sessions - self.slots_per_executor
+            )
+            handles = [
+                act.handle
+                for act in self._acts.values()
+                if act.executor is victim and not act.handle.done()
+            ]
+        obs.instant(
+            "fleet.scale_down", "fleet", executor=victim.name,
+            sessions=len(handles), reason=reason,
+        )
+        for h in handles:
+            self.migrate(h, timeout=migrate_timeout)
+        victim.stop()
+        with self._ft_lock:
+            # retire the leaver from the fault machinery: its silence is
+            # a deliberate exit, never a missed heartbeat, and a last
+            # zombie beat must not re-register it with the monitor
+            # (_on_beat filters on _evicted_names); _drained_names keeps
+            # health classifying it "drained", not "evicted"
+            self._drained_names.add(victim.name)
+            self._evicted_names.add(victim.name)
+            self.monitor.evict(victim.name)
+            self.stragglers.forget(victim.name)
+            self._beat_flags.pop(victim.name, None)
+            self._scale_downs += 1
+            self._last_scale_event = f"scale-down:{victim.name}@t={now:.3f}"
+            self.events.append(
+                f"scale-down:{victim.name}" + (f":{reason}" if reason else "")
+            )
+            self.timeline.append(("scale-down", victim.name, now))
+        return victim.name
+
+    # -- graceful degradation ladder -----------------------------------------
+    def set_degradation(self, level: int) -> int:
+        """Move the ladder to ``level`` (clamped to the
+        :data:`DEGRADE_LEVELS` range) and apply/undo what that rung
+        implies for live sessions.
+
+        Rung 2 (*downshift*) flips every live lossless session's staging
+        ring to ``drop_oldest`` **in place** — producers stop blocking
+        and overload sheds the oldest staged group instead of building
+        latency — and marks the session ``downshifted`` so its finalize
+        averages only surviving groups. Stepping back below 2 restores
+        each ring to its session's own QoS mode; a session that never
+        actually dropped a group finalizes **bit-identically** to an
+        undisturbed run (``finalize(steps=G)`` ≡ ``finalize()``). Rungs
+        1 (admission backoff) and 3 (shed) gate caller behaviour —
+        ``submit_with_retry`` and :meth:`shed_sessions` — so this method
+        only records them. Every transition emits ``degrade`` /
+        ``restore`` trace instants and a timeline mark."""
+        level = max(0, min(int(level), len(DEGRADE_LEVELS) - 1))
+        with self._lock:
+            old = self.degradation_level
+            if level == old:
+                return level
+            self.degradation_level = level
+            acts = [a for a in self._acts.values() if not a.handle.done()]
+        now = self.clock.now()
+        name = "degrade" if level > old else "restore"
+        touched: list[str] = []
+        if level >= 2 and old < 2:
+            for act in acts:
+                if id(act) in self._downshifted_ids:
+                    continue
+                if act.session.qos_mode != "block":
+                    continue  # already running a lossy/cheap ring
+                self._downshifted_ids.add(id(act))
+                act.downshifted = True
+                act.ring.set_policy("drop_oldest")
+                touched.append(act.name)
+        elif level < 2 <= old:
+            for act in acts:
+                if id(act) not in self._downshifted_ids:
+                    continue
+                self._downshifted_ids.discard(id(act))
+                act.ring.set_policy(act.session.qos_mode)
+                touched.append(act.name)
+        for nm in touched:
+            obs.instant(
+                name, "fleet", session=nm, level=level,
+                rung=DEGRADE_LEVELS[level], action="ring",
+            )
+        obs.instant(
+            name, "fleet", level=level, rung=DEGRADE_LEVELS[level],
+            previous=old, sessions=len(touched),
+        )
+        self.metrics.gauge("fleet.degradation_level").set(level)
+        with self._ft_lock:
+            self.events.append(f"{name}:L{old}->L{level}")
+            self.timeline.append((name, DEGRADE_LEVELS[level], now))
+        return level
+
+    def shed_sessions(self, count: int = 1) -> list[str]:
+        """Shed up to ``count`` live sessions — ladder rung 3.
+
+        Victims are the lowest :attr:`Session.priority` first, newest
+        first within a priority tier; each is asked to ``leave()`` at
+        its next group boundary, finalizing whatever it already folded —
+        shedding is graceful, never a kill. Returns the shed names."""
+        if count < 1:
+            return []
+        with self._lock:
+            live = [
+                a
+                for a in self._acts.values()
+                if not a.handle.done() and not a.shed
+            ]
+            live.sort(key=lambda a: (a.session.priority, -a.seq))
+            victims = live[:count]
+            for act in victims:
+                act.shed = True
+        now = self.clock.now()
+        names: list[str] = []
+        for act in victims:
+            names.append(act.name)
+            self.metrics.counter("serve.shed").inc()
+            obs.instant(
+                "fleet.shed", "fleet", session=act.name,
+                priority=act.session.priority,
+            )
+            act.handle.leave()
+        with self._ft_lock:
+            self._shed_total += len(names)
+            for nm in names:
+                self.events.append(f"shed@{nm}")
+                self.timeline.append(("session-shed", nm, now))
+        return names
+
+    def autoscale_state(self) -> dict:
+        """The elastic tier's introspection dict (health/healthz surface):
+        pool size vs target, draining count, ladder rung, last scale
+        event, and cumulative scale/shed counters."""
+        with self._lock:
+            alive = [ex for ex in self._executors if ex.alive]
+            pool = len(alive)
+            draining = sum(1 for ex in alive if ex.draining)
+            target = self.target_executors
+            level = self.degradation_level
+            max_sessions = self.max_sessions
+        with self._ft_lock:
+            last = self._last_scale_event
+            ups, downs = self._scale_ups, self._scale_downs
+            shed = self._shed_total
+        self.metrics.gauge("fleet.pool_size").set(pool)
+        self.metrics.gauge("fleet.pool_target").set(target)
+        self.metrics.gauge("fleet.degradation_level").set(level)
+        return {
+            "pool_size": pool,
+            "draining": draining,
+            "target_executors": target,
+            "max_executors": self.max_executors,
+            "max_sessions": max_sessions,
+            "degradation_level": level,
+            "degradation": DEGRADE_LEVELS[level],
+            "last_scale_event": last,
+            "scale_ups": ups,
+            "scale_downs": downs,
+            "shed": shed,
+        }
+
     # -- telemetry -----------------------------------------------------------
     def health(self, *, evaluate_slos: bool = True):
         """Fold the fleet's state into one
@@ -524,12 +809,14 @@ class FleetScheduler(SessionScheduler):
             beats = self.monitor.last_beats(now)
             dead = set(self.monitor.dead(now))
             evicted = set(self._evicted_names)
+            drained = set(self._drained_names)
             slow = set(self.stragglers.stragglers())
             ewmas = {ex.name: self.stragglers.ewma(ex.name) for ex in executors}
             fleet_info = {
                 "events": list(self.events[-8:]),
                 "awaiting_recovery": sorted(self._awaiting_recovery),
-                "evicted": sorted(evicted),
+                "evicted": sorted(evicted - drained),
+                "drained": sorted(drained),
                 "workers": self.monitor.workers(),
             }
         verdicts: list[dict] = []
@@ -539,7 +826,8 @@ class FleetScheduler(SessionScheduler):
         cap_cache: dict = {}
         for ex in executors:
             state, age = _health.classify_heartbeat(
-                ex.name, evicted=evicted, dead=dead, beats=beats
+                ex.name, evicted=evicted, dead=dead, beats=beats,
+                drained=drained,
             )
             cfg = ex.config
             cap_key = (cfg.height, cfg.width, cfg.num_groups, cfg.frames_per_group)
@@ -600,6 +888,7 @@ class FleetScheduler(SessionScheduler):
             sessions=sorted(sess_rows, key=lambda s: s["name"]),
             slos=verdicts,
             fleet=fleet_info,
+            autoscale=self.autoscale_state(),
         )
 
     def recovery_latencies_s(self) -> list[float]:
@@ -626,4 +915,5 @@ class FleetScheduler(SessionScheduler):
                 "evicted": sorted(self._evicted_names),
                 "workers": self.monitor.workers(),
             }
+        snap["autoscale"] = self.autoscale_state()
         return snap

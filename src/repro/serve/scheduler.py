@@ -157,6 +157,13 @@ class _Active:
         self.migrations = 0
         self.restarts = 0
         self.checkpoints = 0
+        # overload-ladder state: sticky once the session was ever
+        # downshifted to a drop_oldest ring — finalize must then average
+        # only the surviving groups (finalize(steps=G) with zero actual
+        # drops is bit-identical to finalize(), so the restored
+        # full-fidelity output is exact)
+        self.downshifted = False
+        self.shed = False
         self.migrate_done = threading.Event()  # set when a migrate() lands
         self.migrate_target: str | None = None  # executor that took us
         self.t_submit = time.perf_counter()
@@ -240,6 +247,9 @@ class _SlotExecutor:
         self.failed: BaseException | None = None
         self._shutdown = False
         self._abort = False
+        #: elastic scale-down: a draining executor keeps stepping its
+        #: remaining sessions but ``_place`` never seats new ones on it
+        self.draining = False
         self._dead = False     # set (under cond) once this executor will
         self._folding = False  # never drain pending again / is mid-fold
         self._seized = False   # a fleet evictor owns the drain, not us
@@ -517,7 +527,11 @@ class _SlotExecutor:
             if not act.finished_stream():
                 continue
             sub = self.filt.slot_extract(self.state, idx)
-            if (act.session.qos_mode == "drop_oldest" or leaving) and act.steps:
+            if (
+                act.session.qos_mode == "drop_oldest"
+                or act.downshifted
+                or leaving
+            ) and act.steps:
                 # average only the surviving groups — mirrors
                 # run_pipelined's drop_oldest finalize exactly
                 out = self.filt.finalize(sub, steps=act.steps)
@@ -863,6 +877,12 @@ class SessionScheduler:
         self.coalesce_ms = coalesce_ms
         self.slots_per_executor = slots_per_executor
         self.max_executors = max_executors
+        #: dynamic pool-growth ceiling, ``<= max_executors`` (the hard
+        #: cap). ``_place`` spawns executors only up to the target; the
+        #: fleet's autoscaler moves it (``scale_up``/``scale_down``) so
+        #: the pool can start small and grow under load. Static (full)
+        #: under the plain scheduler.
+        self.target_executors = max_executors
         self.max_waiting = max_waiting
         self.max_sessions = (
             max_sessions
@@ -883,6 +903,21 @@ class SessionScheduler:
         self.metrics.describe("serve.compute_s", "per-session share of cohort compute (s)")
         self.metrics.describe("serve.deadline_misses", "groups over their soft deadline")
         self.metrics.describe("serve.discarded", "staged groups dropped at leave")
+        # admission-pressure counters: the autoscaler's overload signal is
+        # the rejected/attempts ratio (deterministic — admission depends
+        # on session counts, never on timing), judged as a rate-kind SLO
+        self.metrics.describe(
+            "serve.submit_attempts", "submit calls, admitted or refused"
+        )
+        self.metrics.describe(
+            "serve.admission_rejected", "submit calls refused by admission control"
+        )
+        self.metrics.describe(
+            "serve.admission_retry", "backoff retries after an admission refusal"
+        )
+        self.metrics.describe(
+            "serve.shed", "sessions shed by the overload ladder"
+        )
         #: SLO judgement tier: when specs are given, every executor ticks
         #: the engine after each cohort fold (``maybe_evaluate`` — a clock
         #: compare until ``slo_eval_every_s`` elapses) and verdicts land
@@ -906,8 +941,58 @@ class SessionScheduler:
     def submit(self, session: Session) -> SessionHandle:
         """Admit a session (or raise :class:`AdmissionError`) and start
         its acquisition immediately; returns the future-like handle."""
+        try:
+            return self._submit(session)
+        except AdmissionError:
+            self.metrics.counter("serve.admission_rejected").inc()
+            raise
+
+    def submit_with_retry(
+        self,
+        session: Session,
+        *,
+        retries: int = 5,
+        base_s: float = 0.05,
+        max_s: float = 2.0,
+        jitter: float = 0.5,
+        rng=None,
+        policy=None,
+    ) -> SessionHandle:
+        """``submit`` routed through :func:`repro.serve.retry
+        .retry_with_backoff`: an :class:`AdmissionError` waits out a
+        jittered-exponential delay and tries again instead of giving up —
+        rung 1 of the degradation ladder. Waits run on the scheduler's
+        clock (virtual under a ``FakeClock``); retries land in the
+        ``serve.admission_retry`` counter for the pressure SLO.
+        """
+        from repro.serve.retry import retry_with_backoff
+
+        retry_counter = self.metrics.counter("serve.admission_retry")
+
+        def on_retry(attempt: int, delay_s: float, err: BaseException) -> None:
+            retry_counter.inc()
+            obs.instant(
+                "serve.admission_retry", "serve", session=session.name,
+                attempt=attempt, delay_s=delay_s,
+            )
+
+        return retry_with_backoff(
+            lambda: self.submit(session),
+            retries=retries,
+            base_s=base_s,
+            max_s=max_s,
+            jitter=jitter,
+            rng=rng,
+            clock=getattr(self, "clock", None),
+            retry_on=(AdmissionError,),
+            on_retry=on_retry,
+            policy=policy,
+        )
+
+    def _submit(self, session: Session) -> SessionHandle:
         handle = SessionHandle(session)
         key = session.config.stream_key()
+        self.metrics.counter("serve.submit_attempts").inc()
         with self._lock:
             if self._closed:
                 raise RuntimeError("scheduler is shut down")
@@ -962,6 +1047,7 @@ class SessionScheduler:
                 "in_flight": self._inflight,
                 "completed": self._completed,
                 "max_sessions": self.max_sessions,
+                "target_executors": self.target_executors,
             }
         snap["executors"] = [
             {
@@ -972,6 +1058,7 @@ class SessionScheduler:
                 "waiting": ex.queue_depth(),
                 "cohort_steps": ex.cohort_steps,
                 "alive": ex.alive,
+                "draining": ex.draining,
             }
             for ex in executors
         ]
@@ -1027,7 +1114,11 @@ class SessionScheduler:
     def _place(
         self, key, config: DenoiseConfig, exclude: Sequence = ()
     ) -> _SlotExecutor:
-        all_alive = [ex for ex in self._executors if ex.alive]
+        # draining executors (elastic scale-down in progress) still host
+        # their remaining sessions but accept no new placements
+        all_alive = [
+            ex for ex in self._executors if ex.alive and not ex.draining
+        ]
         alive = [
             ex for ex in all_alive if not any(ex is e for e in exclude)
         ]
@@ -1039,8 +1130,8 @@ class SessionScheduler:
             return min(with_room, key=lambda e: e.session_count())
         # pool headroom counts every live executor, including excluded
         # ones — an exclusion (migration source) must not let the pool
-        # exceed max_executors
-        if len(all_alive) < self.max_executors:
+        # exceed the (autoscaler-movable) target
+        if len(all_alive) < min(self.target_executors, self.max_executors):
             ex = self._new_executor(key, config)
             self._executors.append(ex)
             return ex

@@ -72,6 +72,10 @@ class Session:
     deadline_ms: float | None = None
     num_slots: int | None = None
     consumer: Callable[[int, Any], None] | None = None
+    #: QoS rank for overload shedding: when the degradation ladder must
+    #: shed, the *lowest* priority sessions go first (ties: newest
+    #: first). Purely relative — any ints work; default 0.
+    priority: int = 0
 
     def __post_init__(self):
         if self.config.num_banks != 1:

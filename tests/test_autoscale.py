@@ -1,0 +1,806 @@
+"""Elastic executor pool under overload: the trace-driven load
+generator's determinism contract, the paper-§6 capacity planner, the
+shared jittered-backoff helper, and the three autoscaler scenarios —
+flash crowd → ``slo_breach`` → scale-up → breach clears; capacity-capped
+ladder walk (backoff → downshift → shed) with ``degrade``/``restore``
+trace instants and a **bit-identical** restore; scale-down draining a
+victim executor through checkpointed live migration. All virtual time
+(``FakeClock``); every wall-clock wait is a bounded event wait."""
+
+import random
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.core import DenoiseConfig
+from repro.core.denoise import StreamingDenoiser
+from repro.core.latency_model import capacity_plan
+from repro.core.ringbuf import RingBuffer
+from repro.data.prism import PrismSource
+from repro.serve import (
+    DEGRADE_LEVELS,
+    AdmissionError,
+    Autoscaler,
+    BackoffPolicy,
+    FakeClock,
+    FleetScheduler,
+    Session,
+    TenantProfile,
+    admission_pressure_slo,
+    build_trace,
+    diurnal_schedule,
+    flash_crowd_schedule,
+    heavy_tail_groups,
+    poisson_schedule,
+    replay_trace,
+    retry_with_backoff,
+)
+
+WAIT = 300  # bound on real waits (jit compile pays the first fold)
+
+
+def _cfg(**kw):
+    base = dict(
+        num_groups=4, frames_per_group=8, height=8, width=32, backend="xla"
+    )
+    base.update(kw)
+    return DenoiseConfig(**base)
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return _cfg()
+
+
+@pytest.fixture(scope="module")
+def chunks(cfg):
+    return [np.asarray(c) for c in PrismSource(cfg).groups()]
+
+
+@pytest.fixture(scope="module")
+def ref(cfg, chunks):
+    den = StreamingDenoiser(cfg)
+    state = den.init()
+    for k, g in enumerate(chunks):
+        state = den.ingest(state, g, step=k)
+    return np.asarray(den.finalize(state))
+
+
+class Gate:
+    """Source yielding ``preload`` chunks eagerly, the rest only after
+    :meth:`release` — keeps sessions deterministically in flight."""
+
+    def __init__(self, chunks, preload=0):
+        self.chunks = list(chunks)
+        self.preload = preload
+        self.open = threading.Event()
+
+    def release(self):
+        self.open.set()
+
+    def __iter__(self):
+        for i, c in enumerate(self.chunks):
+            if i >= self.preload and not self.open.is_set():
+                assert self.open.wait(WAIT), "gate never released"
+            yield c
+
+
+def _elastic_fleet(clock, *, max_executors, max_sessions, slots=2, **kw):
+    return FleetScheduler(
+        clock=clock,
+        slots_per_executor=slots,
+        max_executors=max_executors,
+        max_sessions=max_sessions,
+        max_waiting=64,
+        coalesce_ms=0.0,
+        slos=[admission_pressure_slo(budget=0.25, window_s=2.0)],
+        slo_eval_every_s=1e9,  # the autoscaler owns the cadence
+        **kw,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Load generator: determinism, bounds, validation.
+# ---------------------------------------------------------------------------
+
+
+def test_poisson_schedule_deterministic_and_bounded():
+    a = poisson_schedule(5.0, 10.0, rng=np.random.default_rng(3))
+    b = poisson_schedule(5.0, 10.0, rng=np.random.default_rng(3))
+    assert a == b
+    assert a == sorted(a)
+    assert all(0 <= t < 10.0 for t in a)
+    assert poisson_schedule(0.0, 10.0, rng=np.random.default_rng(3)) == []
+
+
+def test_poisson_schedule_validation():
+    rng = np.random.default_rng(0)
+    with pytest.raises(ValueError, match="rate_hz"):
+        poisson_schedule(-1.0, 1.0, rng=rng)
+    with pytest.raises(ValueError, match="duration_s"):
+        poisson_schedule(1.0, 0.0, rng=rng)
+
+
+def test_diurnal_schedule_thins_the_peak_stream():
+    full = poisson_schedule(20.0, 30.0, rng=np.random.default_rng(9))
+    thinned = diurnal_schedule(20.0, 30.0, rng=np.random.default_rng(9))
+    assert len(thinned) < len(full)
+    assert thinned == sorted(thinned)
+    with pytest.raises(ValueError, match="floor"):
+        diurnal_schedule(1.0, 1.0, floor=1.5, rng=np.random.default_rng(0))
+    with pytest.raises(ValueError, match="period_s"):
+        diurnal_schedule(1.0, 1.0, period_s=0.0, rng=np.random.default_rng(0))
+
+
+def test_flash_crowd_schedule_merges_sorted_burst():
+    rng = np.random.default_rng(4)
+    arr = flash_crowd_schedule(
+        1.0, 20.0, burst_at_s=5.0, burst_s=2.0, duration_s=10.0, rng=rng
+    )
+    assert arr == sorted(arr)
+    in_burst = [t for t in arr if 5.0 <= t < 7.0]
+    outside = [t for t in arr if not 5.0 <= t < 7.0]
+    # the burst window is an order of magnitude denser than base load
+    assert len(in_burst) > len(outside)
+    with pytest.raises(ValueError, match="burst"):
+        flash_crowd_schedule(
+            1.0, 2.0, burst_at_s=-1.0, burst_s=1.0, duration_s=5.0, rng=rng
+        )
+
+
+def test_heavy_tail_groups_bounded_pareto():
+    rng = np.random.default_rng(11)
+    lens = heavy_tail_groups(500, min_groups=2, max_groups=32, rng=rng)
+    assert all(2 <= n <= 32 for n in lens)
+    # heavy tail: mass near the minimum, but the tail is reached
+    assert sorted(lens)[len(lens) // 2] <= 6
+    assert max(lens) > 16
+    with pytest.raises(ValueError, match="min_groups"):
+        heavy_tail_groups(1, min_groups=0, rng=rng)
+    with pytest.raises(ValueError, match="alpha"):
+        heavy_tail_groups(1, alpha=0.0, rng=rng)
+
+
+def test_build_trace_deterministic_mixed_tenants(cfg):
+    profiles = [
+        TenantProfile("gold", cfg, weight=1.0, priority=10),
+        TenantProfile("bulk", cfg, weight=3.0, priority=0),
+    ]
+    times = poisson_schedule(8.0, 10.0, rng=np.random.default_rng(5))
+    t1 = build_trace(profiles, times, rng=np.random.default_rng(6))
+    t2 = build_trace(profiles, times, rng=np.random.default_rng(6))
+    assert t1 == t2
+    assert [e.t for e in t1] == sorted(times)
+    assert {e.profile for e in t1} == {"gold", "bulk"}
+    golds = [e for e in t1 if e.profile == "gold"]
+    assert all(e.priority == 10 for e in golds)
+    assert all(e.session.startswith("lg") for e in t1)
+    with pytest.raises(ValueError, match="TenantProfile"):
+        build_trace([], times, rng=np.random.default_rng(0))
+    with pytest.raises(ValueError, match="weight"):
+        TenantProfile("bad", cfg, weight=0.0)
+
+
+def test_replay_trace_advances_virtual_clock(cfg):
+    trace = build_trace(
+        [TenantProfile("t", cfg)],
+        [0.5, 1.25, 4.0],
+        rng=np.random.default_rng(0),
+    )
+    clock = FakeClock()
+    seen = []
+    ticks = []
+    results = replay_trace(
+        trace,
+        clock=clock,
+        submit=lambda ev: seen.append((round(clock.now(), 3), ev.session)),
+        on_tick=lambda now: ticks.append(round(now, 3)),
+    )
+    assert [t for t, _ in seen] == [0.5, 1.25, 4.0] == ticks
+    assert clock.now() == pytest.approx(4.0)
+    assert len(results) == 3  # one submit return per event, in order
+
+
+# ---------------------------------------------------------------------------
+# Capacity planner (paper-§6 forward model).
+# ---------------------------------------------------------------------------
+
+
+def test_capacity_plan_camera_paced_floor():
+    p = capacity_plan(sessions=6, slots_per_executor=2)
+    # camera-paced: each stream demands exactly one sustainable slot
+    assert p["executors"] == 3
+    assert p["headroom"] == pytest.approx(1.0)
+    assert p["demand_group_hz"] == pytest.approx(
+        6 * p["sustainable_group_hz"]
+    )
+
+
+def test_capacity_plan_headroom_and_zero_demand():
+    assert capacity_plan(sessions=0, slots_per_executor=2)["executors"] == 0
+    assert capacity_plan(sessions=0, slots_per_executor=2)["headroom"] == float("inf")
+    over = capacity_plan(sessions=4, slots_per_executor=2, target_headroom=1.5)
+    assert over["executors"] == 3  # ceil(1.5 * 4 / 2)
+    assert over["headroom"] >= 1.0
+    half = capacity_plan(
+        sessions=4,
+        slots_per_executor=2,
+        group_rate_hz=0.5 * capacity_plan(
+            sessions=1, slots_per_executor=1
+        )["sustainable_group_hz"],
+    )
+    assert half["executors"] == 1  # half-rate tenants pack 4-into-1
+
+
+def test_capacity_plan_validation():
+    with pytest.raises(ValueError, match="sessions"):
+        capacity_plan(sessions=-1, slots_per_executor=1)
+    with pytest.raises(ValueError, match="slots_per_executor"):
+        capacity_plan(sessions=1, slots_per_executor=0)
+    with pytest.raises(ValueError, match="group_rate_hz"):
+        capacity_plan(sessions=1, slots_per_executor=1, group_rate_hz=-1.0)
+    with pytest.raises(ValueError, match="target_headroom"):
+        capacity_plan(sessions=1, slots_per_executor=1, target_headroom=0.0)
+
+
+# ---------------------------------------------------------------------------
+# Backoff helper: deterministic schedule, virtual waits, retry routing.
+# ---------------------------------------------------------------------------
+
+
+def test_backoff_policy_schedule_deterministic():
+    a = BackoffPolicy(jitter=0.5, rng=random.Random(42))
+    b = BackoffPolicy(jitter=0.5, rng=random.Random(42))
+    sched_a = [a.delay_s(k) for k in range(6)]
+    assert sched_a == [b.delay_s(k) for k in range(6)]
+    # jitter keeps every delay inside (0, full]; cap engages at max_s
+    flat = BackoffPolicy(jitter=0.0)
+    assert [flat.delay_s(k) for k in range(4)] == [0.05, 0.1, 0.2, 0.4]
+    assert flat.delay_s(50) == flat.max_s
+    for got, full in zip(sched_a, [flat.delay_s(k) for k in range(6)]):
+        assert 0.0 < got <= full
+
+
+def test_backoff_policy_validation():
+    with pytest.raises(ValueError, match="retries"):
+        BackoffPolicy(retries=-1)
+    with pytest.raises(ValueError, match="base_s"):
+        BackoffPolicy(base_s=0.0)
+    with pytest.raises(ValueError, match="max_s"):
+        BackoffPolicy(base_s=1.0, max_s=0.5)
+    with pytest.raises(ValueError, match="jitter"):
+        BackoffPolicy(jitter=1.5)
+
+
+def test_retry_with_backoff_virtual_time_and_hooks():
+    clock = FakeClock()
+    calls = []
+    hooks = []
+
+    def flaky():
+        calls.append(clock.now())
+        if len(calls) < 4:
+            raise AdmissionError("full")
+        return "admitted"
+
+    out = retry_with_backoff(
+        flaky,
+        retries=5,
+        jitter=0.0,
+        clock=clock,
+        on_retry=lambda k, d, e: hooks.append((k, d)),
+    )
+    assert out == "admitted"
+    assert len(calls) == 4
+    # zero wall sleeps: all waiting happened on the virtual clock
+    assert clock.now() == pytest.approx(0.05 + 0.1 + 0.2)
+    assert hooks == [(0, 0.05), (1, 0.1), (2, 0.2)]
+
+
+def test_retry_with_backoff_budget_exhausted_reraises_original():
+    clock = FakeClock()
+    err = AdmissionError("always full")
+
+    def refuse():
+        raise err
+
+    with pytest.raises(AdmissionError) as exc:
+        retry_with_backoff(refuse, retries=2, jitter=0.0, clock=clock)
+    assert exc.value is err
+    assert clock.now() == pytest.approx(0.05 + 0.1)  # 2 waits, 3 attempts
+
+
+def test_retry_with_backoff_only_retries_listed_errors():
+    def boom():
+        raise RuntimeError("not admission pressure")
+
+    with pytest.raises(RuntimeError):
+        retry_with_backoff(boom, retries=5, clock=FakeClock())
+
+
+def test_submit_with_retry_counts_admission_retries(cfg, chunks):
+    clock = FakeClock()
+    fleet = _elastic_fleet(clock, max_executors=1, max_sessions=1, slots=1)
+    try:
+        gate = Gate(chunks)
+        first = fleet.submit(Session(config=cfg, source=gate, name="hold"))
+
+        released = []
+
+        def on_full(attempt, delay_s, err):
+            # free capacity on the first refused attempt, then wait for
+            # the slot to actually drain before the next try
+            if not released:
+                released.append(True)
+                gate.release()
+            first.result(timeout=WAIT)
+
+        from repro.serve.retry import retry_with_backoff as retry
+
+        h = retry(
+            lambda: fleet.submit(
+                Session(config=cfg, source=iter(chunks), name="second")
+            ),
+            retries=5,
+            jitter=0.0,
+            clock=clock,
+            on_retry=on_full,
+        )
+        h.result(timeout=WAIT)
+        snap = fleet.metrics.snapshot()
+        assert snap["serve.admission_rejected"]["value"] >= 1
+        assert snap["serve.submit_attempts"]["value"] >= 2
+        # the scheduler's own wrapper feeds the same counter family
+        h2 = fleet.submit_with_retry(
+            Session(config=cfg, source=iter(chunks), name="third"),
+            retries=0,
+        )
+        h2.result(timeout=WAIT)
+    finally:
+        fleet.shutdown()
+
+
+def test_ringbuf_set_policy_unblocks_pending_put():
+    ring = RingBuffer(2, policy="block")
+    ring.put(0)
+    ring.put(1)
+    landed = threading.Event()
+
+    def blocked_put():
+        ring.put(2, timeout=WAIT)  # full: blocks under 'block'
+        landed.set()
+
+    t = threading.Thread(target=blocked_put)
+    t.start()
+    time.sleep(0.05)
+    assert not landed.is_set()
+    ring.set_policy("drop_oldest")  # the ladder's downshift, mid-block
+    assert landed.wait(WAIT)
+    t.join(timeout=WAIT)
+    assert ring.stats.drops == 1
+    assert [ring.get(), ring.get()] == [1, 2]  # oldest item shed
+    with pytest.raises(ValueError, match="policy"):
+        ring.set_policy("drop_newest-ish")
+
+
+# ---------------------------------------------------------------------------
+# Autoscaler unit surface: spec helper, ctor validation, ladder helpers.
+# ---------------------------------------------------------------------------
+
+
+def test_admission_pressure_slo_single_window_spec():
+    spec = admission_pressure_slo(budget=0.25, window_s=2.0)
+    assert spec.kind == "admission_reject_rate"
+    assert spec.target == 0.25
+    # short = long = budget window: the verdict clears after one clean
+    # window; hysteresis lives in the controller, not the spec
+    assert spec.window_s == spec.effective_long_window_s == 2.0
+    assert spec.effective_budget_window_s == 2.0
+    assert spec.bad_metric == "serve.admission_rejected"
+    assert spec.total_metric == "serve.submit_attempts"
+
+
+def test_autoscaler_requires_slo_engine_and_valid_band(cfg):
+    clock = FakeClock()
+    plain = FleetScheduler(clock=clock, max_executors=2, max_sessions=4)
+    try:
+        with pytest.raises(ValueError, match="SLO"):
+            Autoscaler(plain)
+    finally:
+        plain.shutdown()
+    fleet = _elastic_fleet(clock, max_executors=2, max_sessions=4)
+    try:
+        with pytest.raises(ValueError, match="min_executors"):
+            Autoscaler(fleet, min_executors=0)
+        with pytest.raises(ValueError, match="max_executors"):
+            Autoscaler(fleet, min_executors=2, max_executors=1)
+        with pytest.raises(ValueError, match="streak"):
+            Autoscaler(fleet, breach_streak=0)
+    finally:
+        fleet.shutdown()
+
+
+def test_autoscaler_initial_executors_shrinks_admission_cap(cfg):
+    clock = FakeClock()
+    fleet = _elastic_fleet(clock, max_executors=3, max_sessions=6)
+    try:
+        assert fleet.target_executors == 3
+        scaler = Autoscaler(fleet, initial_executors=1)
+        assert fleet.target_executors == 1
+        assert fleet.max_sessions == 2  # cap follows the smaller pool
+        assert scaler.max_executors == 3
+    finally:
+        fleet.shutdown()
+
+
+def test_ladder_helpers_widen_with_level(cfg):
+    clock = FakeClock()
+    fleet = _elastic_fleet(clock, max_executors=1, max_sessions=2)
+    try:
+        scaler = Autoscaler(fleet, max_executors=1)
+        assert DEGRADE_LEVELS == ("normal", "backoff", "downshift", "shed")
+        base = scaler.backoff_policy()
+        assert (base.retries, base.base_s) == (5, 0.05)
+        assert scaler.admission_config(cfg) is cfg  # L0: untouched
+        fleet.set_degradation(2)
+        widened = scaler.backoff_policy()
+        assert widened.retries > base.retries
+        assert widened.base_s > base.base_s
+        degraded = scaler.admission_config(cfg)
+        assert degraded.stream_dtype == "u8"
+        assert degraded.overflow_policy == "drop_oldest"
+        pallas = scaler.admission_config(_cfg(backend="pallas"))
+        assert pallas.backend == "xla"
+        fleet.set_degradation(0)
+        assert scaler.admission_config(cfg) is cfg
+    finally:
+        fleet.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# Scenario 1: flash crowd -> slo_breach -> scale-up -> breach clears.
+# ---------------------------------------------------------------------------
+
+
+def test_flash_crowd_breach_scale_up_and_recovery(cfg, chunks):
+    clock = FakeClock()
+    tr = obs.get_tracer()
+    was_enabled, old_clock = tr.enabled, tr.clock
+    tr.clear()
+    obs.configure(enabled=True, clock=clock)
+    fleet = _elastic_fleet(clock, max_executors=3, max_sessions=6)
+    scaler = Autoscaler(
+        fleet,
+        min_executors=1,
+        initial_executors=1,
+        breach_streak=1,
+        clear_streak=1,
+        cooldown_down_s=1e9,
+    )
+    try:
+        assert fleet.max_sessions == 2
+        scaler.evaluate()  # baseline snapshot at t=0
+        gates = [Gate(chunks) for _ in range(2)]
+        handles = [
+            fleet.submit(Session(config=cfg, source=g, name=f"base{i}"))
+            for i, g in enumerate(gates)
+        ]
+        # flash crowd: pool full, every arrival bounces off admission
+        first_reject_t = None
+        for i in range(4):
+            with pytest.raises(AdmissionError):
+                fleet.submit(
+                    Session(config=cfg, source=iter(chunks), name=f"burst{i}")
+                )
+            if first_reject_t is None:
+                first_reject_t = clock.now()
+        clock.advance(2.0)
+        d = scaler.evaluate()
+        assert d.action == "scale-up"
+        assert d.breached
+        assert fleet.target_executors == 2
+        assert fleet.max_sessions == 4  # admission cap grew with the pool
+        marks = [m for m in fleet.timeline if m[0] == "scale-up"]
+        assert marks and marks[0][2] - first_reject_t == pytest.approx(2.0)
+        # freed capacity admits the crowd's stragglers immediately
+        post = [
+            fleet.submit(
+                Session(config=cfg, source=iter(chunks), name=f"post{i}")
+            )
+            for i in range(2)
+        ]
+        for g in gates:
+            g.release()
+        for h in handles + post:
+            out, rep = h.result(timeout=WAIT)
+            assert rep.groups == cfg.num_groups and rep.drops == 0
+        # clean windows: the verdict flips back and the breach clears
+        recovered = False
+        for i in range(6):
+            clock.advance(2.0)
+            fleet.submit(
+                Session(config=cfg, source=iter(chunks), name=f"clean{i}")
+            ).result(timeout=WAIT)
+            if not scaler.evaluate().breached:
+                recovered = True
+                break
+        assert recovered, "breach never cleared after the crowd drained"
+        fleet.shutdown()
+        doc = tr.export_chrome()
+    finally:
+        obs.configure(enabled=was_enabled, clock=old_clock)
+        tr.clear()
+    events = obs.validate_chrome_trace(doc)
+    names = [e["name"] for e in events if e.get("ph") == "i"]
+    for needed in ("slo_breach", "fleet.scale_up", "slo_recovered",
+                   "autoscale.decision"):
+        assert needed in names, (needed, sorted(set(names)))
+    # breach instant precedes the scale-up instant in trace order
+    assert names.index("slo_breach") < names.index("fleet.scale_up")
+
+
+def test_scale_up_replayed_from_loadgen_trace_is_deterministic(cfg, chunks):
+    """Same seeded trace, two independent fleets: identical admit/reject
+    sequences and identical scale-up timeline marks."""
+
+    def run_once():
+        clock = FakeClock()
+        fleet = _elastic_fleet(clock, max_executors=3, max_sessions=6)
+        scaler = Autoscaler(
+            fleet,
+            initial_executors=1,
+            breach_streak=1,
+            clear_streak=1,
+            cooldown_down_s=1e9,
+        )
+        rng = np.random.default_rng(17)
+        arrivals = flash_crowd_schedule(
+            0.5, 2.5, burst_at_s=3.0, burst_s=2.0, duration_s=6.0, rng=rng
+        )
+        trace = build_trace(
+            [TenantProfile("hold", cfg)], arrivals,
+            rng=rng, min_groups=4, max_groups=4,
+        )
+        gates, handles, outcome = [], [], []
+
+        def submit(ev):
+            g = Gate(chunks)
+            try:
+                h = fleet.submit(Session(config=cfg, source=g, name=ev.session))
+            except AdmissionError:
+                outcome.append((ev.session, "rejected"))
+                return False
+            gates.append(g)
+            handles.append(h)
+            outcome.append((ev.session, "admitted"))
+            return True
+
+        try:
+            scaler.evaluate()
+            replay_trace(
+                trace, clock=clock, submit=submit,
+                on_tick=lambda now: scaler.evaluate(),
+            )
+            for g in gates:
+                g.release()
+            for h in handles:
+                h.result(timeout=WAIT)
+            marks = [
+                (k, round(t, 6)) for k, _, t in fleet.timeline
+                if k == "scale-up"
+            ]
+            return outcome, marks, fleet.autoscale_state()["scale_ups"]
+        finally:
+            fleet.shutdown()
+
+    a, b = run_once(), run_once()
+    assert a == b
+    assert a[2] >= 1  # the crowd did force at least one scale-up
+
+
+# ---------------------------------------------------------------------------
+# Scenario 2: capacity-capped ladder walk with bit-identical restore.
+# ---------------------------------------------------------------------------
+
+
+def test_degradation_ladder_walk_and_bit_exact_restore(cfg, chunks, ref):
+    clock = FakeClock()
+    tr = obs.get_tracer()
+    was_enabled, old_clock = tr.enabled, tr.clock
+    tr.clear()
+    obs.configure(enabled=True, clock=clock)
+    fleet = _elastic_fleet(clock, max_executors=1, max_sessions=2)
+    scaler = Autoscaler(
+        fleet, min_executors=1, max_executors=1,
+        breach_streak=1, clear_streak=1, cooldown_down_s=1e9,
+    )
+    try:
+        scaler.evaluate()
+        gate_gold = Gate(chunks)
+        gate_be = Gate(chunks, preload=1)
+        h_gold = fleet.submit(
+            Session(config=cfg, source=gate_gold, name="gold", priority=10)
+        )
+        h_be = fleet.submit(
+            Session(config=cfg, source=gate_be, name="best-effort", priority=0)
+        )
+        deadline = time.monotonic() + WAIT
+        while time.monotonic() < deadline:
+            rows = fleet.health(evaluate_slos=False).sessions
+            if any(r["name"] == "best-effort" and r["steps"] >= 1 for r in rows):
+                break
+            time.sleep(0.005)
+        # each breached tick climbs exactly one rung
+        actions, levels = [], []
+        for tick in range(4):
+            for i in range(3):
+                with pytest.raises(AdmissionError):
+                    fleet.submit(
+                        Session(
+                            config=cfg, source=iter(chunks),
+                            name=f"ov{tick}-{i}",
+                        )
+                    )
+            clock.advance(1.0)
+            actions.append(scaler.evaluate().action)
+            levels.append(fleet.degradation_level)
+        assert actions == ["degrade", "degrade", "degrade", "shed"]
+        assert levels == [1, 2, 3, 3]
+        # the shed victim is the LOWEST-priority session, finalized from
+        # the groups it already folded
+        out_be, rep_be = h_be.result(timeout=WAIT)
+        assert rep_be.groups == 1
+        assert "gold" not in [
+            m[1] for m in fleet.timeline if m[0] == "session-shed"
+        ]
+        # clean traffic descends the ladder one rung per clean tick
+        restores = 0
+        while fleet.degradation_level > 0:
+            clock.advance(2.5)
+            fleet.submit(
+                Session(
+                    config=cfg, source=iter(chunks),
+                    name=f"cl{fleet.degradation_level}",
+                )
+            ).result(timeout=WAIT)
+            assert scaler.evaluate().action == "restore"
+            restores += 1
+        assert restores == 3
+        # gold survived every rung; once restored its ring is 'block'
+        # again and the finished stream is bit-identical to the serial
+        # single-stream oracle
+        gate_gold.release()
+        out_gold, rep_gold = h_gold.result(timeout=WAIT)
+        assert rep_gold.groups == cfg.num_groups and rep_gold.drops == 0
+        np.testing.assert_array_equal(np.asarray(out_gold), ref)
+        fleet.shutdown()
+        doc = tr.export_chrome()
+    finally:
+        obs.configure(enabled=was_enabled, clock=old_clock)
+        tr.clear()
+    events = obs.validate_chrome_trace(doc)
+    inst = [e for e in events if e.get("ph") == "i"]
+    degrade = [e for e in inst if e["name"] == "degrade"]
+    restore = [e for e in inst if e["name"] == "restore"]
+    shed = [e for e in inst if e["name"] == "fleet.shed"]
+    assert any(e["args"].get("session") == "gold" for e in degrade)
+    assert any(e["args"].get("session") == "gold" for e in restore)
+    assert any(e["args"].get("session") == "best-effort" for e in shed)
+    # the per-session downshift instant names its rung and mechanism
+    gold_deg = next(e for e in degrade if e["args"].get("session") == "gold")
+    assert gold_deg["args"]["rung"] == "downshift"
+    assert gold_deg["args"]["action"] == "ring"
+
+
+# ---------------------------------------------------------------------------
+# Scenario 3: scale-down drains a victim through live migration.
+# ---------------------------------------------------------------------------
+
+
+def test_scale_down_drains_victim_via_migration(cfg, chunks, ref):
+    clock = FakeClock()
+    fleet = FleetScheduler(
+        clock=clock,
+        slots_per_executor=1,
+        max_executors=2,
+        max_sessions=4,
+        max_waiting=64,
+        coalesce_ms=0.0,
+    )
+    try:
+        gates = [Gate(chunks, preload=2) for _ in range(2)]
+        handles = [
+            fleet.submit(Session(config=cfg, source=gates[i], name=f"s{i}"))
+            for i in range(2)
+        ]
+        # wait until both sessions are mid-stream on their executors
+        deadline = time.monotonic() + WAIT
+        rows = []
+        while time.monotonic() < deadline:
+            rows = fleet.health(evaluate_slos=False).sessions
+            if len(rows) == 2 and all(r["steps"] >= 2 for r in rows):
+                break
+            time.sleep(0.005)
+        assert {r["executor"] for r in rows} == {"ex0", "ex1"}
+        drained = fleet.scale_down(reason="test")
+        assert drained is not None
+        assert fleet.target_executors == 1
+        assert fleet.max_sessions == 3  # admission cap shrank with the pool
+        rows = fleet.health(evaluate_slos=False).sessions
+        migrated = [r for r in rows if r["migrations"] >= 1]
+        assert len(migrated) == 1  # the victim's session moved mid-stream
+        for g in gates:
+            g.release()
+        for h in handles:
+            out, rep = h.result(timeout=WAIT)
+            assert rep.groups == cfg.num_groups and rep.drops == 0
+            np.testing.assert_array_equal(np.asarray(out), ref)
+        st = fleet.autoscale_state()
+        assert st["scale_downs"] == 1
+        assert st["last_scale_event"].startswith("scale-down")
+        # a deliberate drain is never a fault: health stays ok and the
+        # victim reads 'drained', not missed/evicted
+        report = fleet.health(evaluate_slos=False)
+        assert report.status == "ok"
+        by_name = {e.name: e for e in report.executors}
+        assert by_name[drained].heartbeat == "drained"
+        assert drained in report.fleet["drained"]
+        assert drained not in report.fleet["evicted"]
+    finally:
+        fleet.shutdown()
+
+
+def test_scale_down_refuses_to_empty_the_pool(cfg):
+    clock = FakeClock()
+    fleet = FleetScheduler(clock=clock, max_executors=1, max_sessions=2)
+    try:
+        assert fleet.scale_down(reason="nope") is None
+        assert fleet.target_executors == 1
+    finally:
+        fleet.shutdown()
+
+
+def test_scale_up_is_bounded_by_max_executors(cfg):
+    clock = FakeClock()
+    fleet = _elastic_fleet(clock, max_executors=2, max_sessions=4)
+    try:
+        assert fleet.scale_up(5) == 2  # clamped at the hard cap
+        assert fleet.scale_up(1) == 2  # already at ceiling: no-op
+        assert fleet.max_sessions == 4  # cap never inflated past ceiling
+    finally:
+        fleet.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# Health surfaces carry the elastic state (all three renderings).
+# ---------------------------------------------------------------------------
+
+
+def test_health_report_carries_autoscale_state(cfg, chunks):
+    clock = FakeClock()
+    fleet = _elastic_fleet(clock, max_executors=2, max_sessions=4)
+    scaler = Autoscaler(fleet, max_executors=2)
+    try:
+        fleet.submit(
+            Session(config=cfg, source=iter(chunks), name="s0")
+        ).result(timeout=WAIT)
+        scaler.evaluate()
+        report = fleet.health(evaluate_slos=False)
+        report.autoscale = scaler.state()
+        a = report.to_dict()["autoscale"]
+        assert a["target_executors"] == 2
+        assert a["degradation"] == "normal"
+        assert a["last_action"] is not None
+        text = report.render()
+        assert "autoscale:" in text
+        assert "ladder=normal(0)" in text
+        prom = report.prometheus_text()
+        assert "health_autoscale_pool_target 2" in prom
+        assert "health_autoscale_degradation_level 0" in prom
+        # stats() mirrors the same block for the metrics-pull path
+        assert fleet.stats()["autoscale"]["target_executors"] == 2
+    finally:
+        fleet.shutdown()

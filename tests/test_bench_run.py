@@ -44,6 +44,7 @@ def test_select_substring_matches():
     assert [n for n, _ in bench_run.select("table13")] == ["table13-bandwidth"]
     assert [n for n, _ in bench_run.select("table14")] == ["table14-fleet"]
     assert [n for n, _ in bench_run.select("table16")] == ["table16-slo"]
+    assert [n for n, _ in bench_run.select("table17")] == ["table17-autoscale"]
     assert [n for n, _ in bench_run.select("table1")] == [
         "table1",
         "table10-zoo",
@@ -53,6 +54,7 @@ def test_select_substring_matches():
         "table14-fleet",
         "table15-observability",
         "table16-slo",
+        "table17-autoscale",
     ]
     assert bench_run.select(None) == bench_run.MODULES
 

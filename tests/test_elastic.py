@@ -1,0 +1,121 @@
+"""Elastic reshard primitives (``repro.runtime.elastic``): the
+power-of-2 mesh-shape arithmetic as a pure unit, ``available_mesh`` on
+the real device set, ``state_spec_tree`` mirroring concrete pytrees into
+ParamSpecs, and the ``elastic_reshard`` round trip preserving values
+bit-for-bit — the path a session's slot state takes when it migrates
+off a draining executor."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.distributed.sharding import ParamSpec
+from repro.runtime.elastic import (
+    available_mesh,
+    elastic_reshard,
+    mesh_shape,
+    state_spec_tree,
+)
+
+
+# ---------------------------------------------------------------------------
+# mesh_shape: pure arithmetic, every device count a shrink could leave.
+# ---------------------------------------------------------------------------
+
+
+def test_mesh_shape_one_axis_is_largest_power_of_two():
+    expected = {1: 1, 2: 2, 3: 2, 4: 4, 5: 4, 6: 4, 7: 4, 8: 8,
+                9: 8, 12: 8, 15: 8, 16: 16, 17: 16}
+    for n, want in expected.items():
+        assert mesh_shape(n, 1) == (want,), n
+
+
+def test_mesh_shape_two_axes_squarish_biased_first():
+    assert mesh_shape(1, 2) == (1, 1)
+    assert mesh_shape(2, 2) == (2, 1)
+    assert mesh_shape(4, 2) == (2, 2)
+    assert mesh_shape(8, 2) == (4, 2)
+    assert mesh_shape(16, 2) == (4, 4)
+    assert mesh_shape(31, 2) == (4, 4)
+    assert mesh_shape(32, 2) == (8, 4)
+
+
+def test_mesh_shape_properties_hold_over_range():
+    for n in range(1, 40):
+        for axes in (1, 2):
+            shape = mesh_shape(n, axes)
+            assert len(shape) == axes
+            size = int(np.prod(shape))
+            assert size <= n
+            # every factor a power of two, and no larger power-of-2
+            # mesh would fit
+            for d in shape:
+                assert d & (d - 1) == 0 and d >= 1
+            assert 2 * size > n
+            if axes == 2:
+                assert shape[0] >= shape[1]  # bias toward the data axis
+
+
+def test_mesh_shape_rejects_bad_inputs():
+    with pytest.raises(ValueError, match="num_devices"):
+        mesh_shape(0, 1)
+    with pytest.raises(ValueError, match="num_axes"):
+        mesh_shape(4, 3)
+
+
+# ---------------------------------------------------------------------------
+# available_mesh / state_spec_tree / elastic_reshard on the real device set.
+# ---------------------------------------------------------------------------
+
+
+def test_available_mesh_covers_local_devices():
+    mesh = available_mesh(("bank",))
+    n = len(jax.devices())
+    assert mesh.axis_names == ("bank",)
+    assert mesh.size == mesh_shape(n, 1)[0]
+    mesh2 = available_mesh()
+    assert mesh2.axis_names == ("data", "model")
+    assert mesh2.size <= n
+
+
+def test_state_spec_tree_mirrors_leaves():
+    state = {
+        "ema": np.zeros((4, 8), np.float32),
+        "count": jnp.zeros((), jnp.int32),
+        "nested": [np.ones((3,), np.float64)],
+    }
+    specs = state_spec_tree(state)
+    flat, _ = jax.tree_util.tree_flatten(specs)
+    assert all(isinstance(s, ParamSpec) for s in flat)
+    assert specs["ema"].shape == (4, 8)
+    assert specs["ema"].axes == (None, None)  # replicate by default
+    assert specs["ema"].dtype == np.float32
+    assert specs["count"].shape == ()
+    # leaves pass through jnp.asarray, so x64-disabled canonicalization
+    # applies: a float64 host leaf specs out as float32
+    assert specs["nested"][0].dtype == np.float32
+
+
+def test_state_spec_tree_named_axis():
+    specs = state_spec_tree(
+        {"banked": np.zeros((2, 5), np.float32)}, axes={0: "bank"}
+    )
+    assert specs["banked"].axes == ("bank", None)
+
+
+def test_elastic_reshard_round_trip_bit_exact():
+    rng = np.random.default_rng(7)
+    state = {
+        "ema": rng.standard_normal((4, 8)).astype(np.float32),
+        "step": np.int32(11),
+    }
+    mesh = available_mesh(("bank",))
+    moved = elastic_reshard(state, state_spec_tree(state), mesh)
+    # values unchanged, leaves now placed jax arrays
+    np.testing.assert_array_equal(np.asarray(moved["ema"]), state["ema"])
+    np.testing.assert_array_equal(np.asarray(moved["step"]), state["step"])
+    assert isinstance(moved["ema"], jax.Array)
+    # idempotent: resharding the resharded state changes nothing
+    again = elastic_reshard(moved, state_spec_tree(moved), mesh)
+    np.testing.assert_array_equal(np.asarray(again["ema"]), state["ema"])

@@ -294,3 +294,65 @@ def test_health_lifecycle_under_faults_and_recovery_slo(
         # scrape-side gauges got refreshed by health()
         text = fleet.metrics.prometheus_text()
         assert 'fleet_ring_occupancy{session="S"}' in text
+
+
+# ---------------------------------------------------------------------------
+# healthz entry point: the operator CLI's exit-code + autoscale contract.
+# ---------------------------------------------------------------------------
+
+
+def _load_healthz():
+    import importlib.util
+    import pathlib
+
+    path = pathlib.Path(__file__).resolve().parents[1] / "scripts" / "healthz.py"
+    spec = importlib.util.spec_from_file_location("healthz_cli", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+HEALTHZ_ARGS = [
+    "--sessions", "1", "--executors", "1", "--groups", "2", "--frames", "8",
+]
+
+
+def test_healthz_strict_exits_zero_and_reports_autoscale(capsys):
+    import json as _json
+
+    healthz = _load_healthz()
+    rc = healthz.main(
+        ["--format", "json", "--strict", "--autoscale", *HEALTHZ_ARGS]
+    )
+    assert rc == 0
+    doc = _json.loads(capsys.readouterr().out)
+    a = doc["autoscale"]
+    assert a["pool_size"] >= 1
+    assert a["degradation"] == "normal"
+    assert a["last_action"] is not None  # the controller really ticked
+    # every executor row classified with a known heartbeat state
+    from repro.obs.health import HEARTBEAT_STATES
+
+    assert all(e["heartbeat"] in HEARTBEAT_STATES for e in doc["executors"])
+
+
+def test_healthz_strict_exits_one_on_critical(monkeypatch, capsys):
+    """--strict is the CI gate: a critical rollup must flip the exit
+    code. Forced by wrapping the fleet's health() to report critical."""
+    from repro.serve import FleetScheduler
+
+    healthz = _load_healthz()
+    orig = FleetScheduler.health
+
+    def critical_health(self, *a, **k):
+        report = orig(self, *a, **k)
+        report.status = "critical"
+        return report
+
+    monkeypatch.setattr(FleetScheduler, "health", critical_health)
+    rc = healthz.main(["--strict", *HEALTHZ_ARGS])
+    assert rc == 1
+    assert "CRITICAL" in capsys.readouterr().out
+    # without --strict the same report is informational: exit 0
+    rc = healthz.main(HEALTHZ_ARGS)
+    assert rc == 0

@@ -202,3 +202,47 @@ def test_cli_missing_file_is_a_clean_noop(tmp_path):
     res = _run_cli(tmp_path / "nope.json")
     assert res.returncode == 0
     assert "nothing to judge" in res.stdout
+
+
+# ---------------------------------------------------------------------------
+# Autoscale bench families (table17) are guarded by their own rules.
+# ---------------------------------------------------------------------------
+
+
+def test_autoscale_capacity_family_judges_sustained_sessions():
+    """kind=autoscale guards sustained_sessions, higher-is-better: a pool
+    that suddenly sustains 20% fewer sessions at the same SLO regresses."""
+    pts = _pts(
+        [6, 6, 6, 6, 4],
+        name="autoscale_capacity",
+        kind="autoscale",
+        field="sustained_sessions",
+    )
+    row = _one_verdict(regress.analyze(pts))
+    assert row["verdict"] == "regressed"
+    steady = _pts(
+        [6, 6, 6, 6, 6],
+        name="autoscale_capacity",
+        kind="autoscale",
+        field="sustained_sessions",
+    )
+    assert _one_verdict(regress.analyze(steady))["verdict"] == "ok"
+
+
+def test_autoscale_reaction_family_judges_lower_is_better():
+    """kind=autoscale_reaction guards reaction_s inverted: a slower
+    scale-up reaction is the regression, a faster one the improvement."""
+    slower = _pts(
+        [2.0, 2.0, 2.0, 2.0, 3.5],
+        name="autoscale_reaction",
+        kind="autoscale_reaction",
+        field="reaction_s",
+    )
+    assert _one_verdict(regress.analyze(slower))["verdict"] == "regressed"
+    faster = _pts(
+        [2.0, 2.0, 2.0, 2.0, 0.5],
+        name="autoscale_reaction",
+        kind="autoscale_reaction",
+        field="reaction_s",
+    )
+    assert _one_verdict(regress.analyze(faster))["verdict"] == "improved"
